@@ -1,0 +1,64 @@
+"""Diagnose collective traffic of one (arch, shape, mesh) pair: group
+trip-weighted collective bytes by (kind, result type) to find the
+dominant source. Used by the §Perf hillclimbing loop.
+
+  PYTHONPATH=src python -m benchmarks.collective_diag qwen3-4b train_4k
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import sys  # noqa: E402
+from collections import defaultdict  # noqa: E402
+
+
+def diag(arch: str, shape_name: str, multi_pod: bool = False,
+         top: int = 14, schedule: str = "vertical", fsdp_batch: bool = False):
+    from repro.configs import INPUT_SHAPES, get_config
+    from repro.launch import dryrun, hlo_cost
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    if shape.kind == "train":
+        lowered = dryrun.lower_train(cfg, mesh, shape, schedule=schedule,
+                                     microbatches=8, fsdp_batch=fsdp_batch)
+    elif shape.kind == "prefill":
+        lowered = dryrun.lower_prefill(cfg, mesh, shape)
+    else:
+        lowered = dryrun.lower_decode(cfg, mesh, shape)
+    compiled = lowered.compile()
+    hlo = compiled.as_text()
+    comps = hlo_cost.parse_computations(hlo)
+    weights = hlo_cost.computation_weights(comps)
+    table = hlo_cost._symbol_table(comps, hlo)
+
+    rows = []
+    for cname, instrs in comps.items():
+        w = weights.get(cname, 0.0)
+        if w == 0.0:
+            continue
+        for ins in instrs:
+            base = ins.op.replace("-start", "")
+            if base in hlo_cost.COLL_KINDS and not ins.op.endswith("-done"):
+                rb = hlo_cost._types_bytes(ins.result)
+                ob = sum(hlo_cost._types_bytes(table.get((cname, s), ""))
+                         for s in hlo_cost._operands(ins))
+                meta = ""
+                i = ins.rest.find("op_name=")
+                if i >= 0:
+                    meta = ins.rest[i + 9:i + 150].split('"')[0]
+                rows.append((w * (rb + ob), w, base, ins.result[:70], meta))
+    rows.sort(reverse=True)
+    total = sum(r[0] for r in rows)
+    print(f"{arch} x {shape_name} x {'2x16x16' if multi_pod else '16x16'}: "
+          f"total collective bytes/dev = {total / 1e9:.2f} GB")
+    for b, w, kind, res, meta in rows[:top]:
+        print(f"  {b / 1e9:9.3f} GB  w={w:7.0f}  {kind:18s} {res:64s} {meta[:90]}")
+    return rows
+
+
+if __name__ == "__main__":
+    arch = sys.argv[1] if len(sys.argv) > 1 else "qwen3-4b"
+    shp = sys.argv[2] if len(sys.argv) > 2 else "train_4k"
+    diag(arch, shp, fsdp_batch="--fsdp" in sys.argv)

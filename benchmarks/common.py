@@ -1,0 +1,85 @@
+"""Shared helpers for the benchmark harness.
+
+Machine presets mirror the paper's two evaluation servers (Tab. 1):
+* ``A100_CLOUD``  — Machine 2: A100-40GB, 400 GB DDR4, PCIe Gen4,
+  4 TB cloud NVMe (≈6/3 GB/s read/write), dual Xeon 8462Y+.
+* ``A5000`` — Machine 1: A5000-24GB, 256 GB DDR4, PCIe Gen4,
+  PM9A3 3.84 TB (≈6.9/4.1 GB/s), dual EPYC 7302.
+
+GPU FLOP rates are *sustained* matmul rates (not datasheet peaks), the
+quantity Algorithm 1's benchmarking phase measures on the real machine.
+
+TPU v5e roofline constants (the dry-run target):
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s per ICI link.
+"""
+from __future__ import annotations
+
+import csv
+import io
+import sys
+import time
+from typing import Callable, Dict, List, Sequence
+
+from repro.core.perfmodel import MachineParams
+
+A100_CLOUD = MachineParams(name="a100-cloud", gpu_flops=140e12, pcie_bw=24e9,
+                           ssd_read_bw=4.0e9, ssd_write_bw=2.0e9,
+                           cpu_adam_bw=8.0e9, cpu_mem=400e9, gpu_mem=40e9)
+A5000 = MachineParams(name="a5000", gpu_flops=55e12, pcie_bw=24e9,
+                      ssd_read_bw=6.9e9, ssd_write_bw=4.1e9,
+                      cpu_adam_bw=5.0e9, cpu_mem=256e9, gpu_mem=24e9)
+
+
+def per_gpu_machine(m: MachineParams, num_gpus: int) -> MachineParams:
+    """Per-GPU view of a multi-GPU server: each GPU keeps its own PCIe
+    link and compute, but the host SSD, CPU-Adam throughput, and DRAM
+    are SHARED across the data-parallel ranks (paper Tab. 1 servers)."""
+    import dataclasses
+    return dataclasses.replace(
+        m, ssd_read_bw=m.ssd_read_bw / num_gpus,
+        ssd_write_bw=m.ssd_write_bw / num_gpus,
+        cpu_adam_bw=m.cpu_adam_bw / num_gpus,
+        cpu_mem=m.cpu_mem / num_gpus)
+
+# TPU v5e (per chip)
+V5E_PEAK_FLOPS = 197e12       # bf16
+V5E_HBM_BW = 819e9            # bytes/s
+V5E_ICI_BW = 50e9             # bytes/s per link
+
+
+class Reporter:
+    """Collects ``name,value,derived`` rows and prints them as CSV."""
+
+    def __init__(self) -> None:
+        self.rows: List[Dict[str, str]] = []
+
+    def add(self, name: str, value, derived: str = "") -> None:
+        self.rows.append({"name": name, "value": value, "derived": derived})
+        print(f"{name},{value},{derived}", flush=True)
+
+    def section(self, title: str) -> None:
+        print(f"\n# --- {title} ---", flush=True)
+
+    def dump_csv(self, path: str) -> None:
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=["name", "value", "derived"])
+            w.writeheader()
+            w.writerows(self.rows)
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-clock seconds of ``fn(*args)`` (post-warmup)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def gb(x: float) -> str:
+    return f"{x / 1e9:.2f}"

@@ -1,0 +1,116 @@
+"""Fig. 10 — end-to-end saturated-throughput comparison, GreedySnake
+(vertical + LP config + α-delay) vs ZeRO-Infinity (horizontal), on the
+paper's machine parameters.
+
+Paper's headline numbers to validate (saturated-throughput ratios):
+  GPT-65B  1x A100: 1.96x      GPT-65B  4x A100: 1.93x
+  GPT-175B 1x A100: 2.53x
+plus GPT-30B / GPT-65B on the A5000 machine.
+
+Methodology: for the vertical schedule we run Algorithm 1
+(find_optimal_config — LP over storage ratios, α grid, smallest
+saturating n). The horizontal baseline gets its most favorable setting
+(paper §6.2): the largest per-pass micro-batch that fits GPU memory
+(ZeRO-Infinity recomputes full layers without a fused flash backward,
+so the f32 attention-score matrix bounds it) and the best storage split
+over a grid. Both throughputs are compared over the same global-batch
+axis, as in the paper's figure: the axis extends to ~4x GreedySnake's
+saturation batch ("well beyond the shifting point", §6.2); the
+horizontal schedule keeps improving slowly past the plotted range, so
+the ratio is reported at that shared endpoint, with the full curve
+printed for transparency.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+from benchmarks.common import A100_CLOUD, A5000, Reporter, per_gpu_machine
+from benchmarks.fig4_batch_scaling import max_batch
+from repro.configs import get_config
+from repro.core.lp_search import find_optimal_config
+from repro.core.perfmodel import (MachineParams, StorageRatios, Workload,
+                                  iteration_time_horizontal)
+
+PAPER_CLAIMS = {
+    ("gpt-65b", "a100-cloud", 1): 1.96,
+    ("gpt-65b", "a100-cloud", 4): 1.93,
+    ("gpt-175b", "a100-cloud", 1): 2.53,
+}
+
+
+def horizontal_tp(cfg, m: MachineParams, seq: int, num_gpus: int,
+                  global_batch: int) -> Tuple[float, int, int]:
+    """Best horizontal (ZeRO-Infinity-style) tokens/s per GPU at a given
+    per-GPU global batch: largest feasible per-pass micro-batch, best
+    storage split over a small grid."""
+    mb = max_batch(cfg, m, seq, intra_ckpt=False, materialize_probs=True)
+    mb = min(mb, global_batch)
+    M = max(1, global_batch // mb)
+    w = Workload.from_config(cfg, micro_batch=mb, seq_len=seq,
+                             num_gpus=num_gpus)
+    best = float("inf")
+    for xp in (0.0, 0.25, 0.5, 0.75, 1.0):
+        for xo in (0.0, 0.25, 0.5, 0.75, 1.0):
+            for xc in (0.0, 1.0):
+                t = iteration_time_horizontal(
+                    w, m, M, StorageRatios(xc, xp, xo))
+                best = min(best, t)
+    tp = M * w.tokens_per_mb / best if best < float("inf") else 0.0
+    return tp, M, mb
+
+
+def run(rep: Optional[Reporter] = None, seq: int = 2048) -> None:
+    rep = rep or Reporter()
+    rep.section("fig10: saturated throughput, GreedySnake vs ZeRO-Infinity "
+                "(perf model on the paper's machines)")
+    cases = [
+        ("gpt-30b", A5000, 1), ("gpt-30b", A5000, 4), ("gpt-65b", A5000, 1),
+        ("gpt-65b", A100_CLOUD, 1), ("gpt-65b", A100_CLOUD, 4),
+        ("gpt-175b", A100_CLOUD, 1),
+    ]
+    for model, m0, n_gpu in cases:
+        cfg = get_config(model)
+        tag = f"fig10/{model}_{m0.name}_{n_gpu}gpu"
+        # per-GPU view: FSDP shards states 1/n, but the SSD/CPU is shared
+        m = per_gpu_machine(m0, n_gpu)
+        # GreedySnake: micro-batch 2 (paper §6.2: 1-2), Algorithm 1 config
+        wv = Workload.from_config(cfg, micro_batch=2, seq_len=seq,
+                                  num_gpus=n_gpu)
+        res = find_optimal_config(m, wv, alphas=[0.0, 0.1, 0.2, 0.3, 0.4, 0.5],
+                                  max_n=256)
+        if res is None:
+            rep.add(tag, "infeasible", "")
+            continue
+        tp_v = res.throughput_tokens_per_s
+        g_sat = res.n * 2                       # samples (per GPU)
+        # shared axis endpoint: 2x GreedySnake saturation batch ("well
+        # beyond the shifting point", §6.2)
+        g_axis = 2 * g_sat
+        curve = []
+        for g in (g_sat, 2 * g_sat, 4 * g_sat, 8 * g_sat):
+            tp_h, M_h, mb_h = horizontal_tp(cfg, m, seq, n_gpu, g)
+            curve.append((g, tp_h, M_h, mb_h))
+        tp_axis = next(tp for g, tp, _, _ in curve if g == g_axis)
+        mb_h = curve[0][3]
+        ratio = tp_v / tp_axis if tp_axis > 0 else float("inf")
+        claim = PAPER_CLAIMS.get((model, m.name, n_gpu))
+        derived = (f"vertical n={res.n} alpha={res.alpha:.2f} sat@batch "
+                   f"{g_sat} vs horizontal mb={mb_h} @batch {g_axis}")
+        if claim:
+            gap = 100 * abs(ratio - claim) / claim
+            derived += f"; paper {claim:.2f}x (model gap {gap:.0f}%)"
+        rep.add(f"{tag}_speedup", f"{ratio:.2f}", derived)
+        rep.add(f"{tag}_curve",
+                " ".join(f"{g}:{tp_v / tp:.2f}x" if tp else f"{g}:inf"
+                         for g, tp, _, _ in curve),
+                "speedup vs shared global-batch axis endpoint")
+        flops_tok = 4 * wv.flops_per_mb / wv.tokens_per_mb
+        rep.add(f"{tag}_tflops", f"{tp_v * flops_tok / 1e12:.1f}",
+                "per-GPU TFLOP/s at saturation (paper measured: 63.1 "
+                "65B/4GPU, 128.3 175B/4GPU)" if n_gpu == 4 else
+                "per-GPU TFLOP/s at saturation")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Fig. 12 — 100% SSD offloading vs the LP-optimal config: throughput
+rises more slowly but converges to a SIMILAR saturated level, proving
+the gain comes from vertical scheduling itself, not CPU-memory caching.
+
+Also reproduces the §6.4 "time credit" argument: per added micro-batch,
+extra compute time vs extra checkpoint-I/O time (paper GPT-65B: 16.4 s
+vs 1.1 s).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from benchmarks.common import A100_CLOUD, Reporter
+from repro.configs import get_config
+from repro.core.lp_search import find_optimal_config, solve_config
+from repro.core.perfmodel import StorageRatios, Workload, \
+    iteration_time_vertical
+
+ALPHAS = [0.0, 0.1, 0.2, 0.3, 0.4, 0.5]
+
+
+def run(rep: Optional[Reporter] = None, seq: int = 2048) -> None:
+    rep = rep or Reporter()
+    rep.section("fig12: 100% SSD vs LP-optimal (GPT-65B, A100 model)")
+    cfg = get_config("gpt-65b")
+    w = Workload.from_config(cfg, micro_batch=2, seq_len=seq)
+    x_ssd = StorageRatios(0.0, 0.0, 0.0)
+
+    sat_opt, sat_ssd = 0.0, 0.0
+    for n in (4, 8, 16, 24, 32, 48, 64, 96):
+        best = min((solve_config(A100_CLOUD, w, n, a) for a in ALPHAS),
+                   key=lambda s: s.iteration_time if s else float("inf"))
+        tp_opt = n * w.tokens_per_mb / best.iteration_time
+        t_ssd = min(iteration_time_vertical(w, A100_CLOUD, n, a, x_ssd)
+                    for a in ALPHAS)
+        tp_ssd = n * w.tokens_per_mb / t_ssd
+        rep.add(f"fig12/tp_n{n}", f"{tp_ssd:.0f} vs {tp_opt:.0f}",
+                f"100%-SSD vs LP-optimal tokens/s "
+                f"({100 * tp_ssd / tp_opt:.0f}%)")
+        sat_opt, sat_ssd = max(sat_opt, tp_opt), max(sat_ssd, tp_ssd)
+    rep.add("fig12/saturated_ssd_vs_opt", f"{sat_ssd / sat_opt:.3f}",
+            "paper: similar saturated throughput even at 100% SSD")
+
+    # time-credit argument (§6.4): at the LP-optimal config checkpoints
+    # are largely CPU-cached, so the added I/O per micro-batch is mostly
+    # PCIe (the paper's 1.1 s figure); the SSD part covers the tail.
+    res = find_optimal_config(A100_CLOUD, w, alphas=ALPHAS, max_n=128)
+    xc = res.x.ckpt if res else 0.0
+    t_comp_mb = 4 * w.flops_per_mb / A100_CLOUD.gpu_flops
+    t_pcie = 3 * w.cs / A100_CLOUD.pcie_bw          # write + 2 reads
+    t_ssd = (1 - xc) * (2 * w.cs / A100_CLOUD.ssd_read_bw
+                        + w.cs / A100_CLOUD.ssd_write_bw)
+    t_io_mb = max(t_pcie, t_ssd)
+    rep.add("fig12/credit_compute_s", f"{t_comp_mb:.1f}",
+            "fwd+bwd compute per added micro-batch (paper: 16.4 s)")
+    rep.add("fig12/credit_io_s", f"{t_io_mb:.1f}",
+            f"added ckpt I/O per micro-batch at x_ckpt={xc:.2f} "
+            "(paper: 1.1 s)")
+    rep.add("fig12/credit_ratio", f"{t_comp_mb / t_io_mb:.1f}",
+            ">1 => each micro-batch accrues overlap credit")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,94 @@
+"""Fig. 4 — batch-size scaling limits of the single forward-backward
+schedule (paper §3.2), GPT-65B on the A100 machine.
+
+Model: under per-layer activation checkpointing the backward of one
+layer must hold the recovered intra-layer activations of the whole batch
+in GPU memory; the largest operator's working set caps the batch.
+Adding an extra checkpoint at the attention/FFN boundary (Ratel-style)
+roughly halves the recovered working set (the FFN half dominates), so
+the max batch grows ~1.5x — but every checkpoint boundary now swaps TWO
+tensors per layer and each is 1.5x larger, a 3x traffic inflation
+(paper: 20 GB -> 60 GB per GPU). Even so, throughput stays below the
+optimizer-I/O saturation point (§3.2 "fundamentally unsustainable").
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from benchmarks.common import A100_CLOUD, Reporter
+from repro.configs import get_config
+from repro.core import traffic as tr
+from repro.core.perfmodel import MachineParams, Workload
+
+BYTES = tr.BYTES_LOW
+
+
+def act_working_set_per_sample(cfg, seq: int, *, intra_ckpt: bool,
+                               materialize_probs: bool = False) -> int:
+    """Recovered-activation bytes per sample for one layer's backward.
+
+    Counted tensors (GPT, GELU 4x MLP): ln1, q, k, v, attn-out, proj-out,
+    ln2, ffn-up (4d), gelu (4d), ffn-down => (7 + 8)·d per token in
+    low precision. With the intra-layer checkpoint, the attention half
+    and the FFN half are recovered separately; the FFN half (2·4d + 2d)
+    dominates. ``materialize_probs`` adds the f32 H·S·S attention-score
+    matrix (systems without a fused flash backward — the ZeRO-Infinity
+    setting whose measured max batch the paper reports).
+    """
+    d = cfg.d_model
+    full = (7 * d + 2 * cfg.d_ff) * BYTES * seq
+    half = (2 * cfg.d_ff + 2 * d) * BYTES * seq  # FFN sub-block working set
+    per = half if intra_ckpt else full
+    if materialize_probs and not intra_ckpt:
+        per += cfg.num_heads * seq * seq * 4
+    return per
+
+
+def max_batch(cfg, m: MachineParams, seq: int, *, intra_ckpt: bool,
+              materialize_probs: bool = False) -> int:
+    """Largest per-pass batch whose recovered activations + one layer of
+    params/grads fit in GPU memory."""
+    layer_bytes = cfg.layer_params(0) * BYTES
+    # 3 param buffers (compute + 2 prefetch) + f32 grads + 10% reserve
+    resident = 3 * layer_bytes + 2 * layer_bytes + 0.1 * m.gpu_mem
+    per = act_working_set_per_sample(cfg, seq, intra_ckpt=intra_ckpt,
+                                     materialize_probs=materialize_probs)
+    return max(1, int((m.gpu_mem - resident) // per))
+
+
+def run(rep: Optional[Reporter] = None, seq: int = 2048) -> None:
+    rep = rep or Reporter()
+    rep.section("fig4: single fwd-bwd batch scaling (GPT-65B, A100)")
+    cfg = get_config("gpt-65b")
+    m = A100_CLOUD
+
+    b_layer = max_batch(cfg, m, seq, intra_ckpt=False)
+    b_intra = max_batch(cfg, m, seq, intra_ckpt=True)
+    rep.add("fig4/max_batch_per_layer_ckpt", b_layer, "per-layer ckpt only")
+    rep.add("fig4/max_batch_intra_ckpt", b_intra,
+            f"attn/FFN ckpt ({b_intra / b_layer:.2f}x batch)")
+
+    # checkpoint swap traffic at each schedule's max batch
+    cs_layer = tr.checkpoint_bytes(cfg, b_layer, seq)
+    cs_intra = 2 * tr.checkpoint_bytes(cfg, b_intra, seq)  # 2 ckpts/layer
+    rep.add("fig4/ckpt_traffic_layer_GB", f"{2 * cs_layer / 1e9:.1f}",
+            "write+read per iteration")
+    rep.add("fig4/ckpt_traffic_intra_GB", f"{2 * cs_intra / 1e9:.1f}",
+            f"{cs_intra / cs_layer:.2f}x inflation for "
+            f"{b_intra / b_layer:.2f}x batch")
+
+    # can either reach optimizer-I/O saturation? iteration must be long
+    # enough to hide the optimizer-state SSD round trip.
+    w = Workload.from_config(cfg, micro_batch=1, seq_len=seq)
+    t_opt_io = 2 * w.os_bytes / min(m.ssd_read_bw, m.ssd_write_bw)
+    for name, b in (("layer", b_layer), ("intra", b_intra)):
+        wb = Workload.from_config(cfg, micro_batch=b, seq_len=seq)
+        t_comp = 4 * wb.flops_per_mb / m.gpu_flops
+        rep.add(f"fig4/compute_vs_optio_{name}",
+                f"{t_comp / t_opt_io:.2f}",
+                f"compute covers {100 * t_comp / t_opt_io:.0f}% of opt I/O "
+                f"at max batch {b} (needs >=1.0 to saturate)")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,149 @@
+"""§Roofline: derive the three roofline terms for every (arch x shape)
+from the dry-run's compiled artifacts (experiments/dryrun/*.json).
+
+Per pair (single-pod 16x16 mesh, v5e constants):
+  compute term    = HLO_FLOPs / (chips x 197 TF/s)   [= flops/dev / peak]
+  memory term     = HLO_bytes / (chips x 819 GB/s)   [= bytes/dev / bw]
+  collective term = collective_bytes / (chips x 50 GB/s/link)
+
+``cost_analysis()`` / the HLO parse are per-device quantities of the SPMD
+module, so dividing the global totals by ``chips`` is identical to using
+the per-device numbers directly; we use the latter.
+
+MODEL_FLOPS: 6·N_active·D for training (fwd 2 + bwd 4), 2·N_active·D for
+prefill, 2·N_active·B for single-token decode. The ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat/redundancy waste (full per-layer
+remat alone caps the train ratio at 6/8 = 0.75).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from benchmarks.common import V5E_HBM_BW, V5E_ICI_BW, V5E_PEAK_FLOPS, Reporter
+from repro.configs import INPUT_SHAPES
+
+
+def collective_bytes(colls: Dict) -> float:
+    """Sum operand+result bytes over every collective kind (per device).
+
+    For all-reduce/all-gather HLO the operand list includes the input
+    buffers; result bytes cover the gathered output. Using their sum is a
+    conservative upper bound on link traffic per device.
+    """
+    total = 0.0
+    for k, v in colls.items():
+        total += v.get("result_bytes", 0.0) + v.get("operand_bytes", 0.0)
+    return total
+
+
+def model_flops(rec: Dict) -> float:
+    shp = INPUT_SHAPES[rec["shape"]]
+    n_active = rec["active_params"]
+    if shp.kind == "train":
+        tokens = shp.global_batch * shp.seq_len
+        return 6.0 * n_active * tokens
+    if shp.kind == "prefill":
+        tokens = shp.global_batch * shp.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one new token per sequence
+    return 2.0 * n_active * shp.global_batch
+
+
+def analyze_record(rec: Dict) -> Dict:
+    chips = rec["chips"]
+    comp_s = rec["flops_per_device"] / V5E_PEAK_FLOPS
+    mem_s = rec["bytes_accessed_per_device"] / V5E_HBM_BW
+    coll_s = collective_bytes(rec["collectives"]) / V5E_ICI_BW
+    terms = {"compute": comp_s, "memory": mem_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    hlo_total = rec["flops_per_device"] * chips
+    util = mf / hlo_total if hlo_total else 0.0
+    bound_s = max(terms.values())
+    # roofline fraction: useful-compute time / bound time (1.0 = ideal
+    # compute-bound execution with zero redundant FLOPs)
+    useful_s = (mf / chips) / V5E_PEAK_FLOPS
+    frac = useful_s / bound_s if bound_s else 0.0
+    return {
+        **{k: v for k, v in rec.items() if k in
+           ("arch", "shape", "mesh", "chips", "schedule")},
+        "sharding": rec.get("sharding", "tp"),
+        "compute_s": comp_s,
+        "memory_s": mem_s,
+        "collective_s": coll_s,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops": hlo_total,
+        "useful_ratio": util,
+        "roofline_fraction": frac,
+        "peak_gb_per_dev": rec["memory"]["peak_estimate_bytes"] / 1e9,
+        "note": _note(dominant, terms, util, rec),
+    }
+
+
+def _note(dominant: str, terms: Dict, util: float, rec: Dict) -> str:
+    if dominant == "collective":
+        return ("reduce ICI traffic: shard params on fewer axes / use "
+                "reduce-scatter grads instead of all-reduce")
+    if dominant == "memory":
+        if INPUT_SHAPES[rec["shape"]].kind == "decode":
+            return ("decode is KV/state-bandwidth bound by nature; shrink "
+                    "per-device cache bytes (more model-axis sharding or "
+                    "quantized cache)")
+        return "fuse ops / better layouts to cut HBM bytes per FLOP"
+    if util < 0.6:
+        return ("compute-bound but wasteful: relax remat policy "
+                "(save more activations) to cut recompute FLOPs")
+    return "near roofline: only micro-level kernel tuning remains"
+
+
+def load_records(dryrun_dir: str = "experiments/dryrun",
+                 mesh: str = "16x16") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("mesh") == mesh:
+            recs.append(rec)
+    return recs
+
+
+def run(rep: Optional[Reporter] = None,
+        dryrun_dir: str = "experiments/dryrun",
+        csv_out: str = "experiments/roofline.csv") -> List[Dict]:
+    rep = rep or Reporter()
+    rep.section("roofline (single-pod 16x16, v5e constants)")
+    rows = [analyze_record(r) for r in load_records(dryrun_dir)]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["sharding"]))
+    hdr = ("arch,shape,sharding,compute_s,memory_s,collective_s,dominant,"
+           "useful_ratio,roofline_fraction")
+    print(hdr, flush=True)
+    for r in rows:
+        print(f"{r['arch']},{r['shape']},{r['sharding']},{r['compute_s']:.4e},"
+              f"{r['memory_s']:.4e},{r['collective_s']:.4e},{r['dominant']},"
+              f"{r['useful_ratio']:.3f},{r['roofline_fraction']:.3f}",
+              flush=True)
+        rep.rows.append({
+            "name": f"roofline/{r['arch']}/{r['shape']}/{r['sharding']}",
+            "value": f"{r['roofline_fraction']:.3f}",
+            "derived": f"dominant={r['dominant']}"})
+    if csv_out:
+        os.makedirs(os.path.dirname(csv_out), exist_ok=True)
+        import csv as _csv
+        keys = ["arch", "shape", "mesh", "chips", "schedule", "sharding",
+                "compute_s", "memory_s", "collective_s", "dominant",
+                "model_flops", "hlo_flops", "useful_ratio",
+                "roofline_fraction", "peak_gb_per_dev", "note"]
+        with open(csv_out, "w", newline="") as f:
+            w = _csv.DictWriter(f, fieldnames=keys)
+            w.writeheader()
+            for r in rows:
+                w.writerow({k: r[k] for k in keys})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig10      # one benchmark
+
+Emits ``name,value,derived`` CSV rows; the roofline table additionally
+writes experiments/roofline.csv.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from benchmarks.common import Reporter
+
+
+def main() -> None:
+    from benchmarks import (bench_engine, bench_kernels, fig4_batch_scaling,
+                            fig5_traffic, fig10_throughput, fig11_delayed_opt,
+                            fig12_ssd_only, roofline)
+    suites = {
+        "fig4": fig4_batch_scaling.run,
+        "fig5": fig5_traffic.run,
+        "fig10": fig10_throughput.run,
+        "fig11": fig11_delayed_opt.run,
+        "fig12": fig12_ssd_only.run,
+        "roofline": roofline.run,
+        "engine": bench_engine.run,
+        "kernels": bench_kernels.run,
+    }
+    want = sys.argv[1:] or list(suites)
+    rep = Reporter()
+    print("name,value,derived")
+    failed = []
+    for name in want:
+        try:
+            suites[name](rep)
+        except Exception:  # noqa: BLE001
+            failed.append(name)
+            traceback.print_exc()
+    rep.dump_csv("bench_results.csv")
+    if failed:
+        print(f"\nFAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+    print(f"\nall {len(want)} benchmark suites completed; "
+          f"{len(rep.rows)} rows -> bench_results.csv")
+
+
+if __name__ == "__main__":
+    main()

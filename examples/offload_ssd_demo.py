@@ -1,0 +1,75 @@
+"""SSD-offloaded training with the REAL three-tier engine: parameters
+and optimizer states live in files ("SSD") and host buffers ("CPU"),
+moved layer-by-layer through the vertical pipeline with overlapped
+CPU-Adam — the runnable counterpart of the paper's system.
+
+    PYTHONPATH=src python examples/offload_ssd_demo.py [--schedule vertical]
+
+Prints per-iteration loss, the measured traffic by (category, route) —
+which matches the paper's closed-form §3.4 predictions — and the phase
+wall-times showing optimizer overlap.
+"""
+import argparse
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.perfmodel import StorageRatios
+from repro.core.traffic import horizontal_traffic, vertical_traffic
+from repro.data import SyntheticLM
+from repro.offload import OffloadConfig, OffloadEngine
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--schedule", default="vertical",
+                    choices=["vertical", "horizontal"])
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--micro-batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--alpha", type=float, default=0.25)
+    args = ap.parse_args()
+
+    cfg = get_config("gpt-tiny")
+    M, mb = args.microbatches, args.micro_batch
+    with tempfile.TemporaryDirectory(prefix="greedysnake_ssd_") as ssd:
+        print(f"SSD tier: {ssd}")
+        eng = OffloadEngine(cfg, OffloadConfig(
+            schedule=args.schedule, num_microbatches=M, micro_batch=mb,
+            seq_len=args.seq, alpha=args.alpha if args.schedule == "vertical"
+            else 0.0, lr=3e-3,
+            ratios=StorageRatios(ckpt=0.5, param=0.5, opt=0.0)),
+            jax.random.PRNGKey(0), ssd)
+        data = SyntheticLM(cfg.vocab_size, seed=0)
+        eng.meter.reset()
+        t0 = time.perf_counter()
+        for i in range(args.steps):
+            loss = eng.train_step(data.batch(M * mb, args.seq))
+            print(f"step {i + 1:3d}  loss {loss:8.4f}")
+        eng.finish()
+        dt = time.perf_counter() - t0
+
+        print(f"\n{args.steps} steps, {dt / args.steps:.2f} s/step, "
+              f"schedule={args.schedule}, alpha={args.alpha}")
+        print("\nmeasured traffic (GB per category:route):")
+        for key, v in sorted(eng.meter.snapshot().items()):
+            print(f"  {key:20s} {v / 1e9:8.3f}")
+        ms = eng.L * eng.P * 4
+        cs = cfg.num_layers * mb * args.seq * cfg.d_model * 4
+        pred = (vertical_traffic if args.schedule == "vertical"
+                else horizontal_traffic)(ms, cs, M)
+        print(f"\npaper closed form (params+grads, per step): "
+              f"load {pred.param_load / 1e9:.3f} GB + "
+              f"grad {pred.grad_swap / 1e9:.3f} GB")
+        print("phase seconds:",
+              {k: round(v, 2) for k, v in eng.phase_time.items()})
+        eng.close()
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Batched serving: prefill a prompt batch, then greedy-decode tokens
+with the per-architecture KV / SSM / sliding-window caches — the same
+``prefill`` / ``decode_step`` entry points the decode_32k / long_500k
+dry-run shapes lower.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch gpt-tiny
+    PYTHONPATH=src python examples/serve_batched.py \
+        --arch falcon-mamba-7b --smoke     # O(1)-state SSM decode
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke
+from repro.data import SyntheticLM
+from repro.models import model as mdl
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gpt-tiny")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    max_len = args.prompt_len + args.gen
+    params = mdl.init_params(cfg, jax.random.PRNGKey(0))
+    caches = mdl.init_caches(cfg, args.batch, max_len)
+    data = SyntheticLM(cfg.vocab_size, seed=0)
+    prompts = jnp.asarray(data.batch(args.batch, args.prompt_len))
+    batch = {"tokens": prompts}
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jnp.zeros(
+            (args.batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jnp.zeros(
+            (args.batch, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+
+    prefill = jax.jit(lambda p, b, c: mdl.prefill(p, cfg, b, c))
+    decode = jax.jit(lambda p, t, pos, c: mdl.decode_step(p, cfg, t, pos, c))
+
+    t0 = time.perf_counter()
+    logits, caches = prefill(params, batch, caches)
+    jax.block_until_ready(logits)
+    t_prefill = time.perf_counter() - t0
+    print(f"{cfg.name}: prefill {args.batch}x{args.prompt_len} "
+          f"in {t_prefill:.2f}s  (family={cfg.family})")
+
+    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    out = [tok]
+    pos0 = args.prompt_len + (cfg.frontend_tokens
+                              if cfg.family == "vlm" else 0)
+    t0 = time.perf_counter()
+    for i in range(args.gen - 1):
+        logits, caches = decode(params, tok,
+                                jnp.asarray(pos0 + i, jnp.int32), caches)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    gen = np.concatenate([np.asarray(t) for t in out], axis=1)
+    assert gen.shape == (args.batch, args.gen)
+    assert not np.isnan(np.asarray(logits)).any()
+    print(f"decoded {args.gen} tokens/seq: "
+          f"{args.batch * (args.gen - 1) / dt:.1f} tok/s")
+    print("first sequence:", gen[0].tolist())
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

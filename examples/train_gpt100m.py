@@ -1,0 +1,55 @@
+"""End-to-end driver: train a ~100M-parameter GPT for a few hundred
+steps with the GreedySnake vertical schedule + α-delayed optimizer.
+
+    PYTHONPATH=src python examples/train_gpt100m.py [--steps 200]
+
+This is the deliverable-(b) end-to-end example: real data pipeline
+(synthetic LM stream), schedule, mixed-precision Adam, checkpointing,
+and metrics. Runs on whatever devices JAX sees (CPU here, TPU as-is).
+"""
+import argparse
+import os
+import tempfile
+
+import jax
+
+from repro.configs import get_config
+from repro.core.schedules import ScheduleConfig
+from repro.optim import AdamConfig
+from repro.train import Trainer
+from repro.train.checkpoint import restore, save
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--microbatches", type=int, default=4)
+    ap.add_argument("--alpha", type=float, default=0.25)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config("gpt-100m")
+    print(f"training {cfg.name}: {cfg.total_params() / 1e6:.0f}M params, "
+          f"{args.steps} steps, batch {args.batch} x seq {args.seq}, "
+          f"alpha={args.alpha}")
+    sched = ScheduleConfig(schedule="vertical",
+                           num_microbatches=args.microbatches,
+                           alpha=args.alpha, clip_norm=1.0)
+    tr = Trainer(cfg, sched, AdamConfig(lr=6e-4))
+    rep = tr.run(args.steps, args.batch, args.seq, log_every=20)
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="gs_ckpt_")
+    save(ckpt_dir, tr.params, step=tr.step_num)
+    restored, _, step = restore(ckpt_dir, tr.params)
+    n = sum(x.size for x in jax.tree.leaves(restored))
+    print(f"\nfinal loss {rep.losses[-1]:.4f} "
+          f"(start {rep.losses[0]:.4f}); {rep.tokens_per_s:.0f} tok/s")
+    print(f"checkpoint: {ckpt_dir} (step {step}, {n / 1e6:.0f}M params)")
+    assert rep.losses[-1] < rep.losses[0] - 1.0, "training must make progress"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Config registry: ``get_config(name)`` / ``get_smoke(name)``.
+
+The 10 assigned architectures + the paper's own GPT models + small runnable
+configs. ``--arch <id>`` in the launchers resolves through REGISTRY.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.configs.base import ArchConfig, InputShape, INPUT_SHAPES  # noqa: F401
+
+# arch-id -> module (one module per assigned architecture, per the brief)
+_MODULES = {
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "whisper-base": "repro.configs.whisper_base",
+    "falcon-mamba-7b": "repro.configs.falcon_mamba_7b",
+    "phi3-medium-14b": "repro.configs.phi3_medium_14b",
+    "qwen3-4b": "repro.configs.qwen3_4b",
+    "qwen3-moe-235b-a22b": "repro.configs.qwen3_moe_235b_a22b",
+    "jamba-v0.1-52b": "repro.configs.jamba_v01_52b",
+    "starcoder2-7b": "repro.configs.starcoder2_7b",
+    "gemma3-1b": "repro.configs.gemma3_1b",
+    "internvl2-76b": "repro.configs.internvl2_76b",
+    # the paper's own evaluation models
+    "gpt-30b": "repro.configs.gpt_paper",
+    "gpt-65b": "repro.configs.gpt_paper",
+    "gpt-175b": "repro.configs.gpt_paper",
+    # small runnable configs
+    "gpt-100m": "repro.configs.tiny",
+    "gpt-tiny": "repro.configs.tiny",
+}
+
+ASSIGNED_ARCHS = [
+    "deepseek-v2-lite-16b",
+    "whisper-base",
+    "falcon-mamba-7b",
+    "phi3-medium-14b",
+    "qwen3-4b",
+    "qwen3-moe-235b-a22b",
+    "jamba-v0.1-52b",
+    "starcoder2-7b",
+    "gemma3-1b",
+    "internvl2-76b",
+]
+
+# archs eligible for the long_500k decode shape (sub-quadratic context):
+# SSM (O(1) state), hybrid (only 4/32 layers hold full cache), and the one
+# dense arch with a native sliding-window pattern (gemma3: only ~4 global
+# layers hold full cache). Pure full-attention archs skip it (DESIGN.md §4).
+LONG_CONTEXT_ARCHS = ["falcon-mamba-7b", "jamba-v0.1-52b", "gemma3-1b"]
+
+
+def get_config(name: str) -> ArchConfig:
+    mod = importlib.import_module(_MODULES[name])
+    if name == "gpt-30b":
+        return mod.GPT_30B
+    if name == "gpt-65b":
+        return mod.GPT_65B
+    if name == "gpt-175b":
+        return mod.GPT_175B
+    if name == "gpt-100m":
+        return mod.GPT_100M
+    if name == "gpt-tiny":
+        return mod.GPT_TINY
+    return mod.CONFIG
+
+
+def get_smoke(name: str) -> ArchConfig:
+    mod = importlib.import_module(_MODULES[name])
+    return mod.SMOKE
+
+
+def list_archs() -> Dict[str, str]:
+    return dict(_MODULES)
+
+
+def supports_shape(arch: str, shape: str) -> bool:
+    """Whether (arch, shape) is part of the dry-run/roofline matrix."""
+    cfg = get_config(arch)
+    if shape == "long_500k":
+        return arch in LONG_CONTEXT_ARCHS
+    return True

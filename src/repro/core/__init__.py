@@ -1,0 +1,36 @@
+"""The paper's primary contribution: vertical-schedule gradient
+accumulation, α-delayed optimizer overlap, traffic/roofline models, and
+the Algorithm-1 LP configuration search."""
+from repro.core.schedules import (  # noqa: F401
+    ScheduleConfig,
+    grads_fn,
+    init_train_state,
+    make_delayed_train_step,
+    make_train_step,
+)
+from repro.core.traffic import (  # noqa: F401
+    TrafficBreakdown,
+    checkpoint_bytes,
+    horizontal_traffic,
+    model_bytes,
+    optimizer_state_bytes,
+    vertical_traffic,
+)
+from repro.core.perfmodel import (  # noqa: F401
+    MachineParams,
+    StorageRatios,
+    Workload,
+    cpu_mem_horizontal,
+    cpu_mem_vertical,
+    delayed_grads_fit,
+    iteration_time_horizontal,
+    iteration_time_vertical,
+    rooflines,
+    throughput_tokens_per_s,
+)
+from repro.core.lp_search import (  # noqa: F401
+    LPSolution,
+    SearchResult,
+    find_optimal_config,
+    solve_config,
+)

@@ -1,0 +1,137 @@
+"""LP-based configuration search (GreedySnake Algorithm 1).
+
+For each (micro-batch count n, delay ratio α), a small linear program
+finds the storage split x = (ckpt, param, opt) between CPU memory and SSD
+that minimises effective iteration time t_f + t_b under the CPU-memory
+constraint; the outer loop increases n until throughput saturates
+(< 1% improvement) and records the smallest such n with its α* and x*.
+
+Variables: x_c, x_p, x_o in [0,1] (CPU-resident fractions), t_f, t_b.
+Each "t >= max(...)" from Alg. 1 becomes one linear row per term:
+    t >= const - Σ coef_i x_i   <=>   -Σ coef_i x_i - t <= -const
+Active constraints at the decision boundary (paper §4.5): CPU memory
+capacity, GPU computation time, SSD bandwidth. Gradients are 100%
+CPU-resident, as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+from scipy.optimize import linprog
+
+from repro.core import traffic as tr
+from repro.core.perfmodel import (MachineParams, StorageRatios, Workload,
+                                  compute_times)
+
+REG = 1e-12  # SSD-traffic regulariser (s/byte): Alg. 1's "minimise SSD
+             # traffic when possible" tie-breaker
+
+
+@dataclasses.dataclass(frozen=True)
+class LPSolution:
+    x: StorageRatios
+    t_f: float
+    t_b: float
+
+    @property
+    def iteration_time(self) -> float:
+        return self.t_f + self.t_b
+
+
+def solve_config(m: MachineParams, w: Workload, n: int, alpha: float
+                 ) -> Optional[LPSolution]:
+    """One LP solve for fixed (n, α). Returns None if infeasible."""
+    t_f1, t_b1 = compute_times(w, m)
+    rd, wr = m.ssd_read_bw, m.ssd_write_bw
+    A_ub: List[List[float]] = []
+    b_ub: List[float] = []
+
+    def add(row, b):
+        A_ub.append(row)
+        b_ub.append(b)
+
+    def add_time_lb(t_idx: int, const: float, coefs=(0.0, 0.0, 0.0)):
+        """t_{t_idx} >= const - coefs · x."""
+        row = [-coefs[0], -coefs[1], -coefs[2], 0.0, 0.0]
+        row[t_idx] = -1.0
+        add(row, -const)
+
+    # objective: minimise t_f + t_b - REG * (CPU-resident bytes)
+    c = np.array([-REG * 2 * n * w.cs, -REG * 2 * w.ms,
+                  -REG * 2 * w.os_bytes, 1.0, 1.0])
+
+    # CPU memory: n*cs*x_c + ms*x_p + os*x_o + transient layer grads <= DRAM.
+    # Vertical keeps only ~3 layers of gradients in flight (§4.3); the
+    # α-delayed fraction reuses reclaimed param/ckpt memory (§4.4), so it
+    # adds no net footprint but must FIT in that reclaimed memory:
+    #   α·grad_bytes <= ms·x_p + n·cs·x_c
+    add([n * w.cs, w.ms, w.os_bytes, 0, 0],
+        m.cpu_mem * 0.95 - w.grad_transient)
+    add([-n * w.cs, -w.ms, 0, 0, 0], -alpha * w.grad_bytes)
+
+    # --- forward stage lower bounds ---
+    add_time_lb(3, n * t_f1)                                   # GPU compute
+    #   SSD: reads  ms(1-x_p)/rd + α·os(1-x_o)/rd
+    #        writes n·cs(1-x_c)/wr + α·os(1-x_o)/wr
+    const_f = w.ms / rd + n * w.cs / wr + alpha * w.os_bytes * (1 / rd + 1 / wr)
+    add_time_lb(3, const_f, (n * w.cs / wr, w.ms / rd,
+                             alpha * w.os_bytes * (1 / rd + 1 / wr)))
+    adam_t = (w.os_bytes + w.grad_bytes) / m.cpu_adam_bw
+    add_time_lb(3, alpha * adam_t)                             # CPU Adam (α part)
+    pc = tr.vertical_traffic(w.ms, w.cs, n)
+    pcie_fwd = w.ms + (2 * n - 1) * w.cs
+    add_time_lb(3, pcie_fwd / m.pcie_bw)                       # PCIe
+
+    # --- backward stage lower bounds ---
+    add_time_lb(4, n * t_b1)
+    const_b = w.ms / rd + n * w.cs / rd \
+        + (1 - alpha) * w.os_bytes * (1 / rd + 1 / wr)
+    add_time_lb(4, const_b, (n * w.cs / rd, w.ms / rd,
+                             (1 - alpha) * w.os_bytes * (1 / rd + 1 / wr)))
+    add_time_lb(4, (1 - alpha) * adam_t)
+    add_time_lb(4, max(0.0, pc.total - pcie_fwd) / m.pcie_bw)
+
+    bounds = [(0, 1), (0, 1), (0, 1), (0, None), (0, None)]
+    res = linprog(c, A_ub=np.array(A_ub), b_ub=np.array(b_ub), bounds=bounds,
+                  method="highs")
+    if not res.success:
+        return None
+    x_c, x_p, x_o, t_f, t_b = res.x
+    return LPSolution(StorageRatios(ckpt=float(x_c), param=float(x_p),
+                                    opt=float(x_o)), float(t_f), float(t_b))
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchResult:
+    n: int
+    alpha: float
+    x: StorageRatios
+    iteration_time: float
+    throughput_tokens_per_s: float
+
+
+def find_optimal_config(m: MachineParams, w: Workload,
+                        alphas=None, max_n: int = 256,
+                        improve_thresh: float = 1.01) -> Optional[SearchResult]:
+    """Algorithm 1: increase n until throughput saturates; per n pick the
+    best α by grid argmax; per (n, α) solve the storage-ratio LP."""
+    alphas = alphas if alphas is not None else [i / 100 for i in range(0, 51)]
+    best = None
+    max_tp = 0.0
+    n = 0
+    while n < max_n:
+        n += 1
+        sols = [(a, solve_config(m, w, n, a)) for a in alphas]
+        sols = [(a, s) for a, s in sols if s is not None]
+        if not sols:
+            continue
+        a_star, s_star = min(sols, key=lambda t: t[1].iteration_time)
+        tp = n * w.tokens_per_mb / s_star.iteration_time
+        if tp >= improve_thresh * max_tp:
+            max_tp = tp
+            best = SearchResult(n, a_star, s_star.x, s_star.iteration_time, tp)
+        else:
+            break
+    return best

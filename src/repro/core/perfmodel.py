@@ -1,0 +1,201 @@
+"""Iteration-time & roofline model for SSD-offloaded training (§3.1, §4.5).
+
+Predicts per-iteration time for horizontal vs vertical schedules from
+machine parameters (GPU compute rate, PCIe bw, SSD bw, CPU-Adam rate) and
+workload sizes (model bytes ms, checkpoint bytes cs, optimizer-state
+bytes os). This is the "simple yet accurate performance model" that
+Algorithm 1 builds its LP around, and it draws the roofline of Fig. 3:
+
+    throughput(M) = tokens(M) / T_iter(M)
+    I/O-access roofline:   T_iter >= os_ssd_traffic / ssd_bw
+    computation roofline:  T_iter >= total_compute / gpu_flops
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core import traffic as tr
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineParams:
+    """Benchmark results packed as system parameters (Alg. 1's  M)."""
+    name: str = "a100-cloud"
+    gpu_flops: float = 140e12          # sustained matmul FLOP/s (bf16)
+    pcie_bw: float = 24e9              # GPU<->CPU, bytes/s
+    ssd_read_bw: float = 6.0e9
+    ssd_write_bw: float = 3.0e9
+    cpu_adam_bw: float = 8.0e9         # optimizer-state bytes processed /s
+    cpu_mem: float = 400e9             # usable DRAM for offload
+    gpu_mem: float = 40e9
+    num_gpus: int = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """Per-GPU per-iteration quantities for one (model, mb, seq)."""
+    ms: float        # low-precision param bytes (per GPU shard)
+    cs: float        # aggregated ckpt bytes per micro-batch
+    os_bytes: float  # optimizer state bytes (3 x f32 per element)
+    grad_bytes: float  # f32 grad buffer bytes
+    flops_per_mb: float  # fwd-only model FLOPs for one micro-batch
+    tokens_per_mb: int
+    n_layers: int = 1
+
+    @staticmethod
+    def from_config(cfg, micro_batch: int, seq_len: int, num_gpus: int = 1
+                    ) -> "Workload":
+        p = cfg.total_params()
+        tokens = micro_batch * seq_len
+        # fwd ~ 2*P*T; attention adds 2*S per token per layer pair
+        attn = 4 * cfg.num_layers * cfg.d_model * seq_len * tokens \
+            if not cfg.is_attention_free else 0
+        return Workload(
+            ms=tr.model_bytes(cfg) / num_gpus,
+            cs=tr.checkpoint_bytes(cfg, micro_batch, seq_len),
+            os_bytes=tr.optimizer_state_bytes(cfg) / num_gpus,
+            grad_bytes=tr.accum_grad_bytes(cfg) / num_gpus,
+            flops_per_mb=2 * cfg.active_params() * tokens + attn,
+            tokens_per_mb=tokens,
+            n_layers=cfg.num_layers,
+        )
+
+    @property
+    def grad_transient(self) -> float:
+        """CPU bytes for in-flight layer gradients under the VERTICAL
+        schedule: grads are produced per layer, consumed by the optimizer
+        a couple of pipeline stages later, then freed — only ~3 layers'
+        worth is ever alive (§4.3). The horizontal schedule instead keeps
+        the FULL f32 buffer alive across all micro-batches."""
+        return self.grad_bytes * min(1.0, 3.0 / max(1, self.n_layers))
+
+
+@dataclasses.dataclass(frozen=True)
+class StorageRatios:
+    """Fraction of each data type resident in CPU memory (rest on SSD)."""
+    ckpt: float = 0.0
+    param: float = 0.0
+    opt: float = 1.0
+
+
+def _ssd_time(read_bytes, write_bytes, m: MachineParams) -> float:
+    return read_bytes / m.ssd_read_bw + write_bytes / m.ssd_write_bw
+
+
+def cpu_mem_vertical(w: Workload, n: int, x: "StorageRatios",
+                     alpha: float) -> float:
+    """CPU bytes the vertical schedule needs resident: the CPU-cached
+    fractions of ckpts/params/opt-states plus the transient per-layer
+    gradient pipeline. The α-delayed gradients REUSE the reclaimed
+    CPU-resident param/ckpt memory (§4.4) — see delayed_grads_fit."""
+    return n * w.cs * x.ckpt + w.ms * x.param + w.os_bytes * x.opt \
+        + w.grad_transient
+
+
+def delayed_grads_fit(w: Workload, n: int, x: "StorageRatios",
+                      alpha: float) -> bool:
+    """§4.4 memory-reuse requirement: the α-retained gradients must fit
+    in the CPU memory reclaimed from obsolete params + checkpoints."""
+    return alpha * w.grad_bytes <= w.ms * x.param + n * w.cs * x.ckpt + 1e-6
+
+
+def cpu_mem_horizontal(w: Workload, x: "StorageRatios") -> float:
+    """Horizontal keeps the FULL f32 grad-accumulation buffer alive for
+    the whole iteration (only one micro-batch's ckpt is alive at once).
+    Gradients that do not fit spill to SSD (handled in the time model)."""
+    return w.ms * x.param + w.os_bytes * x.opt + w.cs * x.ckpt
+
+
+def compute_times(w: Workload, m: MachineParams):
+    """(t_fwd, t_bwd) GPU seconds for ONE micro-batch.
+    Backward includes recomputation: ~3x fwd FLOPs (2x bwd + 1x recompute)."""
+    t_f = w.flops_per_mb / m.gpu_flops
+    return t_f, 3.0 * t_f
+
+
+def iteration_time_vertical(w: Workload, m: MachineParams, M: int,
+                            alpha: float, x: StorageRatios) -> float:
+    """GreedySnake §4: fwd and bwd stages each bounded by the max of GPU
+    compute, PCIe traffic, SSD traffic, and (overlapped) CPU-Adam time."""
+    t_f1, t_b1 = compute_times(w, m)
+    pcie = tr.vertical_traffic(w.ms, w.cs, M)
+    # PCIe split: fwd moves params (1x) + ckpt writes/reads; bwd the rest.
+    pcie_fwd = w.ms + M * w.cs + (M - 1) * w.cs
+    pcie_bwd = pcie.total - pcie_fwd
+    opt_ssd_rd = 2 * w.os_bytes * (1 - x.opt)   # read states + write back
+    # (read and write each os*(1-x); split across the two directions)
+    fwd_ssd = _ssd_time(w.ms * (1 - x.param) + alpha * w.os_bytes * (1 - x.opt),
+                        M * w.cs * (1 - x.ckpt) + alpha * w.os_bytes * (1 - x.opt), m)
+    bwd_ssd = _ssd_time(w.ms * (1 - x.param) + M * w.cs * (1 - x.ckpt)
+                        + (1 - alpha) * w.os_bytes * (1 - x.opt),
+                        (1 - alpha) * w.os_bytes * (1 - x.opt), m)
+    adam_t = (w.os_bytes + w.grad_bytes) / m.cpu_adam_bw
+    t_fwd = max(M * t_f1, pcie_fwd / m.pcie_bw, fwd_ssd, alpha * adam_t)
+    t_bwd = max(M * t_b1, pcie_bwd / m.pcie_bw, bwd_ssd, (1 - alpha) * adam_t)
+    return t_fwd + t_bwd
+
+
+def iteration_time_horizontal(w: Workload, m: MachineParams, M: int,
+                              x: StorageRatios,
+                              overlap_last_bwd: bool = False) -> float:
+    """ZeRO-Infinity-style: per-micro-batch param reload + grad-buffer
+    swapping (§3.3).
+
+    Two documented ZeRO-Infinity behaviors are modeled:
+    * the grad-accumulation buffer is fetched ON DEMAND when a bucket's
+      backward fires (§2.2 Fig. 2(b) step 4), so its movement is
+      SERIALIZED with backward compute rather than hidden under it;
+    * the optimizer step is NOT overlapped with the backward pass
+      (§6.2: "Ratel ... overlaps the backward pass with the optimizer
+      step ... whereas ZeRO-Infinity does not"). Pass
+      ``overlap_last_bwd=True`` for the paper's generous §1 framing
+      (overlap with the last micro-batch's backward).
+
+    The full f32 gradient-accumulation buffer must persist across all
+    micro-batches; the fraction that does not fit in the CPU-memory
+    leftover (after the x-configured param/opt/ckpt residency) spills to
+    SSD and is re-read + re-written per micro-batch — the dominant cost
+    for models whose grads exceed DRAM (e.g. GPT-175B: 700 GB f32)."""
+    t_f1, t_b1 = compute_times(w, m)
+    leftover = 0.95 * m.cpu_mem - cpu_mem_horizontal(w, x)
+    if leftover < 0:
+        return float("inf")
+    x_g = min(1.0, max(0.0, leftover / w.grad_bytes))
+    # per-micro-batch PCIe: fwd = params + ckpt write; bwd = params + ckpt
+    pcie_f1 = w.ms + w.cs
+    pcie_b1 = w.ms + w.cs
+    fwd_ssd1 = _ssd_time(w.ms * (1 - x.param), w.cs * (1 - x.ckpt), m)
+    bwd_ssd1 = _ssd_time(w.ms * (1 - x.param) + w.cs * (1 - x.ckpt), 0, m)
+    # grad fetch + offload ((2M-1)*2ms total ~= 2/mb): serialized
+    grad_t1 = 2 * w.grad_bytes * x_g / m.pcie_bw \
+        + _ssd_time(w.grad_bytes * (1 - x_g), w.grad_bytes * (1 - x_g), m)
+    t_f = max(t_f1, pcie_f1 / m.pcie_bw, fwd_ssd1)
+    t_b = max(t_b1, pcie_b1 / m.pcie_bw, bwd_ssd1) + grad_t1
+    opt_ssd = _ssd_time(w.os_bytes * (1 - x.opt), w.os_bytes * (1 - x.opt), m)
+    adam_t = (w.os_bytes + w.grad_bytes) / m.cpu_adam_bw
+    opt_time = max(opt_ssd, adam_t)
+    hidden = t_b if overlap_last_bwd else 0.0
+    return M * (t_f + t_b) + max(0.0, opt_time - hidden)
+
+
+def throughput_tokens_per_s(w: Workload, t_iter: float, M: int) -> float:
+    return M * w.tokens_per_mb / t_iter
+
+
+def rooflines(w: Workload, m: MachineParams, x: StorageRatios):
+    """(io_roofline_tokens_per_iter_per_s_slope, compute_roofline) — Fig. 3.
+
+    IO-access roofline: iteration time >= optimizer-state SSD traffic time,
+    so throughput <= (M*tokens) / t_opt_io  (linear in batch).
+    Compute roofline: throughput <= gpu_flops / flops_per_token."""
+    opt_io = _ssd_time(w.os_bytes * (1 - x.opt), w.os_bytes * (1 - x.opt), m)
+    flops_per_token = 4 * w.flops_per_mb / w.tokens_per_mb  # fwd+bwd+recompute
+    comp = m.gpu_flops / flops_per_token
+    return opt_io, comp
+
+
+def mfu(w: Workload, m: MachineParams, t_iter: float, M: int,
+        peak_flops: Optional[float] = None) -> float:
+    total_flops = 4 * w.flops_per_mb * M
+    return total_flops / (t_iter * (peak_flops or m.gpu_flops))

@@ -1,0 +1,168 @@
+"""Train-step builders: horizontal vs vertical gradient accumulation.
+
+GreedySnake's key identity (§3.4): vertical scheduling — running each
+layer over ALL micro-batches before the next layer — computes exactly the
+same gradients as horizontal micro-batch accumulation (linearity of the
+summed gradient). In XLA terms:
+
+* ``horizontal``: ``lax.scan`` over M micro-batches; each iteration runs
+  the full model fwd+bwd (per-layer remat) and accumulates f32 gradients
+  in the scan carry. This is the ZeRO-Infinity baseline: the full-model
+  f32 gradient buffer is carried through all M iterations (its repeated
+  traffic shows up in `cost_analysis` bytes, the HBM analogue of the
+  paper's `(2M-1)·2ms` grad swapping), and sharded params are re-gathered
+  per micro-batch.
+
+* ``vertical``: the concatenated global batch runs layer-by-layer (the
+  scan over layers inside the model) with per-layer remat — parameters
+  are gathered ONCE per layer per iteration and gradients produced once.
+  The inter-layer activation checkpoint (the scan carry, now M× larger)
+  is the extra traffic the paper trades for parameter reuse.
+
+Optimizer-step overlap (§4.3/4.4) is expressed through the α-delayed
+partial Adam: ``alpha`` of every layer's update is deferred into the next
+iteration's forward. On TPU the XLA latency-hiding scheduler overlaps the
+host-offloaded state movement; on the CPU offload engine the overlap is
+real threads (see repro.offload.engine).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as model_lib
+from repro.optim import (AdamConfig, DelayedAdamState, apply_early,
+                         apply_update, clip_by_global_norm, flush_late,
+                         global_norm, init_state)
+
+
+# Optional sharding tree (matching the params pytree) pinned onto the
+# gradients. With model-sharded optimizer states this turns the per-layer
+# data-axis grad all-reduce into a cheaper reduce-scatter (ZeRO-2-style),
+# matching how GreedySnake transfers each layer's fully-accumulated grads
+# exactly once. Set by the launcher; None = let SPMD decide.
+_GRAD_SHARDINGS = None
+
+
+def set_grad_shardings(tree) -> None:
+    global _GRAD_SHARDINGS
+    _GRAD_SHARDINGS = tree
+
+
+def _constrain_grads(grads):
+    if _GRAD_SHARDINGS is None:
+        return grads
+    try:
+        return jax.tree.map(jax.lax.with_sharding_constraint, grads,
+                            _GRAD_SHARDINGS)
+    except (ValueError, RuntimeError):
+        return grads
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    schedule: str = "vertical"       # "vertical" | "horizontal"
+    num_microbatches: int = 1        # M (horizontal splits the batch; for
+                                     # vertical, M only documents the batch
+                                     # composition — execution is layerwise)
+    alpha: float = 0.0               # delayed-optimizer ratio (§4.4)
+    clip_norm: Optional[float] = None
+    remat: bool = True
+    scan_impl: str = "jnp"           # attention/ssm kernel impl
+
+
+def _split(batch, m: int):
+    def sp(x):
+        return x.reshape(m, x.shape[0] // m, *x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def grads_fn(cfg, sched: ScheduleConfig) -> Callable:
+    """Returns grads(params, batch) -> (loss, grads) under the schedule."""
+    def loss_fn(params, batch):
+        return model_lib.loss_fn(params, cfg, batch, remat=sched.remat,
+                                 scan_impl=sched.scan_impl)
+
+    if sched.schedule == "vertical" or sched.num_microbatches == 1:
+        def vertical(params, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            return loss, _constrain_grads(grads)
+        return vertical
+
+    m = sched.num_microbatches
+
+    def horizontal(params, batch):
+        mb = _split(batch, m)
+
+        def body(carry, mbatch):
+            loss_acc, gacc = carry
+            l, g = jax.value_and_grad(loss_fn)(params, mbatch)
+            gacc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gacc, g)
+            return (loss_acc + l, gacc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, gsum), _ = jax.lax.scan(body, (jnp.zeros(()), g0), mb)
+        grads = jax.tree.map(lambda g: g / m, gsum)
+        return loss_sum / m, _constrain_grads(grads)
+
+    return horizontal
+
+
+def make_train_step(cfg, sched: ScheduleConfig, adam: AdamConfig):
+    """Standard (α=0) train step: params, opt_state, batch -> ...
+
+    Works for both schedules; the returned metrics include grad norm.
+    """
+    gfn = grads_fn(cfg, sched)
+
+    def step(params, opt_state, batch):
+        loss, grads = gfn(params, batch)
+        gn = global_norm(grads)
+        if sched.clip_norm is not None:
+            grads, coef, _ = clip_by_global_norm(grads, sched.clip_norm)
+        params, opt_state = apply_update(opt_state, grads, adam)
+        return params, opt_state, {"loss": loss, "grad_norm": gn}
+
+    return step
+
+
+def make_delayed_train_step(cfg, sched: ScheduleConfig, adam: AdamConfig):
+    """GreedySnake train step with the α-delayed optimizer (§4.4).
+
+    State is DelayedAdamState. Semantics per iteration:
+      1. flush the pending α fraction of the previous step's update
+         (the "optimizer step overlapped with forward" — every layer is
+         fully updated before it is used);
+      2. fwd+bwd under the configured schedule;
+      3. apply the (1-α) early fraction immediately (overlapped with
+         backward in the real pipeline); retain grads as pending.
+    With the same inputs, N iterations followed by a final flush are
+    bit-identical (f32) to N standard Adam steps.
+    """
+    gfn = grads_fn(cfg, sched)
+    alpha = sched.alpha
+
+    def step(state: DelayedAdamState, batch):
+        params, state = flush_late(state, adam, alpha)
+        loss, grads = gfn(params, batch)
+        gn = global_norm(grads)
+        if sched.clip_norm is not None:
+            grads, _, _ = clip_by_global_norm(grads, sched.clip_norm)
+        params, state = apply_early(state, grads, adam, alpha)
+        return params, state, {"loss": loss, "grad_norm": gn}
+
+    return step
+
+
+def init_train_state(cfg, key, *, delayed: bool = False):
+    params = model_lib.init_params(cfg, key)
+    opt = init_state(params)
+    if not delayed:
+        return params, opt
+    from repro.optim import init_delayed
+    grads_like = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return params, init_delayed(opt, grads_like)

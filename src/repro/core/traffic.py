@@ -1,0 +1,96 @@
+"""Closed-form data-movement model (GreedySnake §1/§3.3/§3.4).
+
+Notation (paper §1): N layers, total model size ``ms`` bytes (low-precision
+parameters), per-micro-batch aggregated checkpoint size ``cs`` bytes, and
+M micro-batches per iteration. Gradient-accumulation buffers are kept in
+full precision, hence the factor 2·ms for a full set of f32 gradients.
+
+These formulas drive the Fig. 5 reproduction and the perf model; the
+offload engine's measured byte counters are validated against them.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+BYTES_LOW = 2   # bf16/fp16 parameters and checkpoints
+BYTES_F32 = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficBreakdown:
+    """GPU<->lower-hierarchy traffic, bytes per iteration."""
+    param_load: float
+    grad_swap: float          # full-precision grad-accum buffer movement
+    ckpt_write: float
+    ckpt_read: float
+    inter_grad: float         # vertical: inter-layer activation grads via CPU
+
+    @property
+    def load(self) -> float:
+        return self.param_load + self.grad_swap / 2 + self.ckpt_read + self.inter_grad / 2
+
+    @property
+    def offload(self) -> float:
+        return self.grad_swap / 2 + self.ckpt_write + self.inter_grad / 2
+
+    @property
+    def total(self) -> float:
+        return self.param_load + self.grad_swap + self.ckpt_write \
+            + self.ckpt_read + self.inter_grad
+
+
+def model_bytes(cfg) -> int:
+    """ms: low-precision parameter bytes."""
+    return cfg.total_params() * BYTES_LOW
+
+
+def checkpoint_bytes(cfg, micro_batch: int, seq_len: int) -> int:
+    """cs: aggregated inter-layer checkpoint bytes for ONE micro-batch
+    (one (mb, S, d) tensor per layer boundary)."""
+    n_ckpt = cfg.num_layers
+    return n_ckpt * micro_batch * seq_len * cfg.d_model * BYTES_LOW
+
+
+def horizontal_traffic(ms: float, cs: float, M: int) -> TrafficBreakdown:
+    """ZeRO-Infinity-style schedule (paper §1):
+    params loaded 2x per micro-batch (fwd + bwd recompute) = 2·M·ms;
+    checkpoints written once and read once per micro-batch = 2·M·cs;
+    the f32 grad buffer: first mb offloads only, the rest fetch+offload
+    = (2(M-1)+1)·2ms = (2M-1)·2ms."""
+    return TrafficBreakdown(
+        param_load=2 * M * ms,
+        grad_swap=(2 * M - 1) * 2 * ms,
+        ckpt_write=M * cs,
+        ckpt_read=M * cs,
+        inter_grad=0.0,
+    )
+
+
+def vertical_traffic(ms: float, cs: float, M: int) -> TrafficBreakdown:
+    """GreedySnake vertical schedule (§3.4):
+    params loaded once for fwd and once for bwd-recompute = 2·ms;
+    grads accumulated in GPU memory, transferred once = 2·ms (f32);
+    checkpoints: written once per micro-batch per layer (M·cs), read
+    twice (next-layer forward input + backward recompute) minus the
+    boundary micro-batch kept on-GPU (alternating order, §4.2);
+    inter-layer activation gradients pass through CPU memory in the
+    backward pass (2·M·cs·(1/N-th each way ≈ cs per mb per boundary))."""
+    keep = cs / max(M, 1)   # one micro-batch's worth stays on-GPU per layer
+    return TrafficBreakdown(
+        param_load=2 * ms,
+        grad_swap=2 * ms,
+        ckpt_write=M * cs,
+        ckpt_read=2 * M * cs - 2 * keep,
+        inter_grad=2 * M * cs - 2 * keep,
+    )
+
+
+def optimizer_state_bytes(cfg) -> int:
+    """Master + momentum + variance, f32 each (§2.2: master params are
+    treated as optimizer state)."""
+    return cfg.total_params() * 3 * BYTES_F32
+
+
+def accum_grad_bytes(cfg) -> int:
+    return cfg.total_params() * BYTES_F32

@@ -1,0 +1,2 @@
+from repro.data.synthetic import SyntheticLM, make_batch  # noqa: F401
+from repro.data.microbatch import split_microbatches  # noqa: F401

@@ -1,0 +1,13 @@
+"""Micro-batch splitting for gradient accumulation (paper §2.1)."""
+from __future__ import annotations
+
+import jax
+
+
+def split_microbatches(batch, num_microbatches: int):
+    """dict of (B, ...) -> dict of (M, B/M, ...). B must divide evenly."""
+    def split(x):
+        b = x.shape[0]
+        assert b % num_microbatches == 0, (b, num_microbatches)
+        return x.reshape(num_microbatches, b // num_microbatches, *x.shape[1:])
+    return jax.tree.map(split, batch)

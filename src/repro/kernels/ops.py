@@ -1,0 +1,41 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels execute in interpret mode (the kernel
+body runs as traced jnp on CPU); on a real TPU set REPRO_PALLAS_COMPILE=1
+to compile them natively.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.fused_adam import fused_adam
+from repro.kernels.selective_scan import selective_scan_fwd
+
+
+def _interpret() -> bool:
+    if os.environ.get("REPRO_PALLAS_COMPILE"):
+        return False
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal",))
+def flash_attention_op(q, k, v, *, causal: bool = True):
+    return flash_attention_fwd(q, k, v, causal=causal,
+                               interpret=_interpret())
+
+
+@jax.jit
+def selective_scan_op(x, dt, A, Bc, Cc, D):
+    return selective_scan_fwd(x, dt, A, Bc, Cc, D, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("lo", "hi", "lr"))
+def fused_adam_op(p, m, v, g, step, *, lo: int = 0, hi: int = -1,
+                  lr: float = 1e-3):
+    return fused_adam(p, m, v, g, step, lo=lo, hi=hi, lr=lr,
+                      interpret=_interpret())

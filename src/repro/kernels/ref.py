@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_attention(q, k, v, *, causal: bool = True,
+                  scale: Optional[float] = None) -> jax.Array:
+    """Exact softmax attention. q: (B,H,Sq,hd); k,v: (B,H,Skv,hd)."""
+    B, H, Sq, hd = q.shape
+    Skv = k.shape[2]
+    sc = scale if scale is not None else 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sc
+    if causal:
+        msk = jnp.tril(jnp.ones((Sq, Skv), bool), k=Skv - Sq)
+        s = jnp.where(msk, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def ref_selective_scan(x, dt, A, Bc, Cc, D) -> Tuple[jax.Array, jax.Array]:
+    """Naive sequential selective scan.
+    x, dt: (B,S,di); Bc,Cc: (B,S,st); A: (di,st); D: (di,)."""
+    B, S, di = x.shape
+    st = A.shape[-1]
+    xf, dtf = x.astype(jnp.float32), dt.astype(jnp.float32)
+    Bf, Cf = Bc.astype(jnp.float32), Cc.astype(jnp.float32)
+    h = jnp.zeros((B, di, st), jnp.float32)
+    ys = []
+    for t in range(S):
+        da = jnp.exp(dtf[:, t, :, None] * A)
+        h = da * h + (dtf[:, t] * xf[:, t])[..., None] * Bf[:, t][:, None, :]
+        ys.append(jnp.einsum("bds,bs->bd", h, Cf[:, t]))
+    y = jnp.stack(ys, axis=1) + xf * D
+    return y.astype(x.dtype), h
+
+
+def ref_adam(p, m, v, g, step: int, *, lr=1e-3, b1=0.9, b2=0.95, eps=1e-8,
+             wd=0.0):
+    """Element-wise Adam; all f32. Returns (p2, m2, v2)."""
+    g = g.astype(jnp.float32)
+    m2 = b1 * m + (1 - b1) * g
+    v2 = b2 * v + (1 - b2) * g * g
+    mhat = m2 / (1 - b1 ** step)
+    vhat = v2 / (1 - b2 ** step)
+    p2 = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+    return p2, m2, v2

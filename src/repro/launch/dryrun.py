@@ -1,0 +1,356 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any other import (jax locks device count on first init).
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+from typing import Dict  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import (ASSIGNED_ARCHS, INPUT_SHAPES, get_config,  # noqa: E402
+                           supports_shape)
+from repro.core.schedules import ScheduleConfig, make_train_step  # noqa: E402
+from repro.launch import shardings as sh  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as mdl  # noqa: E402
+from repro.optim import AdamConfig, init_state  # noqa: E402
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) and dump
+memory_analysis / cost_analysis / collective-byte parse for the roofline.
+
+No arrays are allocated: parameters, optimizer state, caches, and batches
+are ShapeDtypeStructs via jax.eval_shape.
+"""
+
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
+                "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo: str) -> Dict[str, Dict[str, float]]:
+    """Sum result + operand bytes of every collective op in the (per-device)
+    compiled HLO."""
+    out: Dict[str, Dict[str, float]] = {
+        k: {"count": 0, "result_bytes": 0.0, "operand_bytes": 0.0}
+        for k in _COLL_KINDS}
+    # result = one type or tuple of types; op name; operand list in parens
+    line_re = re.compile(
+        r"=\s*(\(?[^)=]*?\)?)\s+(" + "|".join(_COLL_KINDS) + r")(?:-start)?\((.*)$")
+    type_re = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|c64|c128)\[([0-9,]*)\]")
+    for line in hlo.splitlines():
+        m = line_re.search(line)
+        if not m:
+            continue
+        if "-done" in line.split("=")[1][:60]:
+            continue
+        result_part, kind, operand_part = m.groups()
+        rbytes = sum(_shape_bytes(t, d) for t, d in type_re.findall(result_part))
+        obytes = sum(_shape_bytes(t, d) for t, d in type_re.findall(operand_part))
+        out[kind]["count"] += 1
+        out[kind]["result_bytes"] += rbytes
+        out[kind]["operand_bytes"] += obytes
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no device allocation)
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg, batch: int, seq: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Training/prefill batch for one architecture family."""
+    sds = jax.ShapeDtypeStruct
+    if cfg.family == "vlm":
+        return {"tokens": sds((batch, seq - cfg.frontend_tokens), jnp.int32),
+                "image_embeds": sds((batch, cfg.frontend_tokens, cfg.d_model),
+                                    jnp.bfloat16)}
+    out = {"tokens": sds((batch, seq), jnp.int32)}
+    if cfg.family == "encdec":
+        out["enc_embeds"] = sds((batch, cfg.encoder_seq, cfg.d_model),
+                                jnp.bfloat16)
+    return out
+
+
+def input_specs(arch: str, shape_name: str):
+    cfg = get_config(arch)
+    shp = INPUT_SHAPES[shape_name]
+    return batch_specs(cfg, shp.global_batch, shp.seq_len)
+
+
+# ---------------------------------------------------------------------------
+# Builders: lower the right step for the input shape
+# ---------------------------------------------------------------------------
+
+def _to_host(shardings_tree):
+    """Move a sharding tree to host memory (the TPU analogue of the
+    paper's CPU/SSD-resident optimizer states: resident in host DRAM,
+    streamed to HBM by XLA at use)."""
+    return jax.tree.map(
+        lambda s: s.with_memory_kind("pinned_host"), shardings_tree)
+
+
+def lower_train(cfg, mesh, shape, *, schedule: str, microbatches: int,
+                remat: bool = True, fsdp_batch: bool = False,
+                host_offload: bool = False):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    params_s = jax.eval_shape(
+        lambda k: mdl.init_params(cfg, k), jax.random.PRNGKey(0))
+    opt_s = jax.eval_shape(init_state, params_s)
+    batch_s = batch_specs(cfg, shape.global_batch, shape.seq_len)
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import schedules as sched_lib
+    from repro.launch.mesh import batch_axes
+    from repro.models import moe_ep
+
+    has_moe_arch = any(cfg.is_moe_layer(i) for i in range(cfg.num_layers))
+    full = tuple(batch_axes(mesh)) + ("model",)
+    divides_all = shape.global_batch % int(
+        np.prod([mesh.shape[a] for a in full])) == 0
+    # Expert-dim param sharding is ONLY safe together with the explicit
+    # EP shard_map — under auto-SPMD the sort-based dispatch's scatters
+    # replicate and all-reduce at TB scale (EXPERIMENTS.md §Perf H5).
+    use_ep = fsdp_batch and has_moe_arch and divides_all
+    p_sh = sh.shard_params(params_s, mesh, expert_parallel=use_ep,
+                           fully_shard=fsdp_batch)
+    o_sh = sh.opt_state_shardings(p_sh, mesh)
+    if host_offload:
+        # optimizer states live in host DRAM (GreedySnake's CPU tier);
+        # XLA streams them across the host<->HBM link per layer.
+        o_sh = jax.tree.map(lambda s: s.with_memory_kind("pinned_host"),
+                            o_sh)
+    b_sh = sh.shard_batch(batch_s, mesh,
+                          include_model=fsdp_batch and divides_all)
+    rep = sh.replicated(mesh)
+    if fsdp_batch:
+        if divides_all:
+            # pure FSDP: batch over ALL axes, params gathered at use.
+            # MoE blocks additionally route through the expert-parallel
+            # shard_map (all-to-all within model rows; expert weights
+            # stationary on their shard).
+            mdl.set_activation_spec(
+                NamedSharding(mesh, P(full, None, None)))
+            if use_ep:
+                moe_ep.set_ep_mesh(mesh, axis="model", bax=full)
+        sched_lib.set_grad_shardings(p_sh)
+    else:
+        mdl.set_activation_spec(None)
+        sched_lib.set_grad_shardings(None)
+        moe_ep.set_ep_mesh(None)
+    step = make_train_step(
+        cfg, ScheduleConfig(schedule=schedule, num_microbatches=microbatches,
+                            remat=remat), AdamConfig())
+    if host_offload:
+        # Optimizer states are RESIDENT in host DRAM between steps (the
+        # paper's CPU tier) and streamed to HBM for the update via
+        # explicit transfers — the documented JAX host-offload pattern.
+        # NOTE (recorded in DESIGN.md): inside one XLA program the
+        # streaming granularity is the whole state tree, so peak HBM
+        # still sees the f32 states transiently; per-LAYER streaming —
+        # GreedySnake's actual pipeline — requires the external offload
+        # engine. The dry-run proves the placement lowers and compiles.
+        inner = step
+        o_dev = jax.tree.map(lambda s: s.with_memory_kind("device"), o_sh)
+
+        def step(params, opt, batch):
+            opt_dev = jax.tree.map(jax.device_put, opt, o_dev)
+            p2, o2, m = inner(params, opt_dev, batch)
+            o2h = jax.tree.map(jax.device_put, o2, o_sh)
+            return p2, o2h, m
+    jitted = jax.jit(step,
+                     in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh,
+                                    {"loss": rep, "grad_norm": rep}),
+                     donate_argnums=(0, 1))
+    with mesh:
+        return jitted.lower(params_s, opt_s, batch_s)
+
+
+def lower_prefill(cfg, mesh, shape):
+    params_s = jax.eval_shape(
+        lambda k: mdl.init_params(cfg, k), jax.random.PRNGKey(0))
+    caches_s = jax.eval_shape(
+        lambda: mdl.init_caches(cfg, shape.global_batch, shape.seq_len))
+    batch_s = batch_specs(cfg, shape.global_batch, shape.seq_len)
+    p_sh = sh.shard_params(params_s, mesh)
+    c_sh = sh.shard_caches(caches_s, mesh)
+    b_sh = sh.shard_batch(batch_s, mesh)
+    rep = sh.replicated(mesh)
+
+    def step(params, batch, caches):
+        return mdl.prefill(params, cfg, batch, caches)
+
+    jitted = jax.jit(step, in_shardings=(p_sh, b_sh, c_sh),
+                     out_shardings=(rep, c_sh), donate_argnums=(2,))
+    with mesh:
+        return jitted.lower(params_s, batch_s, caches_s)
+
+
+def lower_decode(cfg, mesh, shape):
+    params_s = jax.eval_shape(
+        lambda k: mdl.init_params(cfg, k), jax.random.PRNGKey(0))
+    caches_s = jax.eval_shape(
+        lambda: mdl.init_caches(cfg, shape.global_batch, shape.seq_len))
+    sds = jax.ShapeDtypeStruct
+    tok_s = sds((shape.global_batch, 1), jnp.int32)
+    pos_s = sds((), jnp.int32)
+    p_sh = sh.shard_params(params_s, mesh)
+    c_sh = sh.shard_caches(caches_s, mesh)
+    t_sh = sh.shard_batch({"t": tok_s}, mesh)["t"]
+    rep = sh.replicated(mesh)
+
+    def step(params, token, pos, caches):
+        logits, new_caches = mdl.decode_step(params, cfg, token, pos, caches)
+        return logits, new_caches
+
+    # logits (B, V): batch sharded, vocab on model
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import batch_axes, batch_axis_size
+    bax = batch_axes(mesh)
+    bspec = bax if shape.global_batch % max(1, batch_axis_size(mesh)) == 0 \
+        and batch_axis_size(mesh) > 1 else None
+    vspec = "model" if cfg.padded_vocab % mesh.shape.get("model", 1) == 0 else None
+    l_sh = NamedSharding(mesh, P(bspec, vspec))
+    jitted = jax.jit(step, in_shardings=(p_sh, t_sh, rep, c_sh),
+                     out_shardings=(l_sh, c_sh), donate_argnums=(3,))
+    with mesh:
+        return jitted.lower(params_s, tok_s, pos_s, caches_s)
+
+
+# ---------------------------------------------------------------------------
+# Run one combination
+# ---------------------------------------------------------------------------
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, *,
+            schedule: str = "vertical", microbatches: int = 8,
+            out_dir: str = "experiments/dryrun",
+            fsdp_batch: bool = False, host_offload: bool = False) -> Dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    if shape.kind == "train":
+        lowered = lower_train(cfg, mesh, shape, schedule=schedule,
+                              microbatches=microbatches,
+                              fsdp_batch=fsdp_batch,
+                              host_offload=host_offload)
+    elif shape.kind == "prefill":
+        lowered = lower_prefill(cfg, mesh, shape)
+    else:
+        lowered = lower_decode(cfg, mesh, shape)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo_text = compiled.as_text()
+    colls_raw = parse_collectives(hlo_text)
+    # trip-count-aware reanalysis: XLA's cost_analysis counts while (scan)
+    # bodies once; hlo_cost weights them by known_trip_count.
+    from repro.launch import hlo_cost
+    corrected = hlo_cost.analyze(hlo_text)
+
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": n_chips,
+        "schedule": schedule if shape.kind == "train" else shape.kind,
+        "sharding": "fsdp" if fsdp_batch else "tp",
+        "host_offload": host_offload,
+        "microbatches": microbatches if shape.kind == "train" else None,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops_per_device": corrected.flops,
+        "bytes_accessed_per_device": corrected.bytes_accessed,
+        "xla_flops_per_device": float(cost.get("flops", 0.0)),
+        "xla_bytes_per_device": float(cost.get("bytes accessed", 0.0)),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": mem.argument_size_in_bytes
+            + mem.temp_size_in_bytes - mem.alias_size_in_bytes,
+        },
+        "collectives": corrected.collectives,
+        "collectives_raw": colls_raw,
+        "total_params": cfg.total_params(),
+        "active_params": cfg.active_params(),
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    sfx = ("_fsdp" if fsdp_batch else "") + ("_host" if host_offload else "")
+    fname = f"{arch}_{shape_name}_{rec['mesh']}_{schedule}{sfx}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all' (assigned pool)")
+    ap.add_argument("--shape", default="all",
+                    help="input shape name or 'all'")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--schedule", default="vertical",
+                    choices=["vertical", "horizontal"])
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--fsdp", action="store_true",
+                    help="batch over (data,model) + activation/grad "
+                         "sharding constraints (beyond-paper optimized)")
+    ap.add_argument("--host-offload", action="store_true",
+                    help="place optimizer states in pinned_host memory "
+                         "(the paper's CPU-resident states). NOTE: lowers "
+                         "everywhere, but the CPU-backend SPMD partitioner "
+                         "rejects placement annotations (XLA RET_CHECK "
+                         "spmd_partitioner.cc:5669) — compiles on real TPU "
+                         "backends only; see DESIGN.md §5.")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = ASSIGNED_ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    for arch in archs:
+        for shape in shapes:
+            if not supports_shape(arch, shape):
+                print(f"SKIP {arch} x {shape} (long-context ineligible, "
+                      f"see DESIGN.md)", flush=True)
+                continue
+            for mp in meshes:
+                tag = f"{arch} x {shape} x {'2x16x16' if mp else '16x16'}"
+                try:
+                    rec = run_one(arch, shape, mp, schedule=args.schedule,
+                                  microbatches=args.microbatches,
+                                  out_dir=args.out, fsdp_batch=args.fsdp,
+                                  host_offload=args.host_offload)
+                    peak = rec["memory"]["peak_estimate_bytes"] / 1e9
+                    print(f"OK   {tag}: compile={rec['compile_s']}s "
+                          f"flops/dev={rec['flops_per_device']:.3e} "
+                          f"peak/dev={peak:.2f}GB", flush=True)
+                except Exception as e:  # noqa: BLE001
+                    print(f"FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

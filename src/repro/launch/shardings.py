@@ -1,0 +1,167 @@
+"""PartitionSpec rules for every model/optimizer/batch/cache leaf.
+
+Parameters are FSDP-sharded over the "model" axis (the paper integrates
+ZeRO-style FSDP, §5): each weight leaf is sharded along its largest
+mesh-divisible dimension, and XLA SPMD inserts the all-gather at use —
+the ICI analogue of GreedySnake's parameter loads. Stacked period leaves
+(leading n_periods dim from the layer scan) are never sharded on the
+layer dim, so the gather happens once per layer per iteration under the
+vertical schedule. Activations/batch shard over ("pod","data"); decode
+caches shard the sequence dim over "model".
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import batch_axes, batch_axis_size, model_axis_size
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_pspec(path, leaf, mesh, *, expert_parallel: bool = False,
+                fully_shard: bool = False) -> P:
+    """FSDP rule: shard the largest divisible dim on "model".
+
+    With ``expert_parallel`` MoE expert weights (…/moe/w_*: (E, d, f))
+    shard the EXPERT dim instead — expert weights stay stationary and
+    only the dispatched (E·C, d) tokens cross the mesh (all-to-all),
+    which beats within-expert tensor parallelism for large E."""
+    name = _path_str(path)
+    msize = model_axis_size(mesh)
+    shape = leaf.shape
+    if leaf.ndim == 0 or msize == 1:
+        return P()
+    start = 1 if "periods" in name else 0  # skip stacked layer dim
+    dims = list(range(start, len(shape)))
+    if not dims:
+        return P()
+    spec: list = [None] * len(shape)
+    if expert_parallel and "moe/w_" in name and len(dims) >= 3 \
+            and shape[start] % msize == 0:
+        spec[start] = "model"   # the expert dim
+    else:
+        # prefer the largest dimension divisible by the model axis
+        cand = [d for d in dims if shape[d] % msize == 0]
+        if not cand:
+            return P()
+        d = max(cand, key=lambda i: shape[i])
+        spec[d] = "model"
+    if fully_shard:
+        # fully shard (2-D FSDP): spread a second dim over the data axes
+        # so params + optimizer states occupy N·bytes/|devices|, not
+        # N·bytes/|model|. XLA gathers at use either way; the resting
+        # footprint is what must fit HBM (or host memory when offloaded).
+        dax = tuple(a for a in mesh.axis_names if a != "model")
+        dsize = int(np.prod([mesh.shape[a] for a in dax]))
+        rest = [d for d in dims if spec[d] is None and shape[d] % dsize == 0]
+        if rest and dsize > 1:
+            d2 = max(rest, key=lambda i: shape[i])
+            spec[d2] = dax if len(dax) > 1 else dax[0]
+    return P(*spec)
+
+
+def shard_params(tree, mesh, *, expert_parallel: bool = False,
+                 fully_shard: bool = False):
+    def rule(path, leaf):
+        return NamedSharding(mesh, param_pspec(
+            path, leaf, mesh, expert_parallel=expert_parallel,
+            fully_shard=fully_shard))
+    return jax.tree_util.tree_map_with_path(rule, tree)
+
+
+def opt_state_shardings(params_shardings, mesh):
+    """AdamState(master, m, v, step): states shard like params."""
+    from repro.optim import AdamState
+    rep = NamedSharding(mesh, P())
+    return AdamState(master=params_shardings, m=params_shardings,
+                     v=params_shardings, step=rep)
+
+
+def batch_pspec(shape, mesh, *, batch_dim: int = 0,
+                include_model: bool = False) -> P:
+    """Shard dim0 over the batch axes; with ``include_model`` the batch
+    also spreads over "model" (pure-FSDP mode: activations fully
+    batch-sharded, parameters gathered at use — no tensor-parallel
+    activation all-reduces). Falls back to progressively fewer axes when
+    the batch is not divisible."""
+    bax = batch_axes(mesh)                      # ("pod","data") or ("data",)
+    candidates = []
+    if include_model:
+        candidates.append(tuple(bax) + ("model",))
+    candidates.append(tuple(bax))
+    if len(bax) > 1:
+        candidates.append((bax[-1],))
+    spec: list = [None] * len(shape)
+    for axes in candidates:
+        n = int(np.prod([mesh.shape[a] for a in axes]))
+        if n > 1 and shape[batch_dim] % n == 0:
+            spec[batch_dim] = axes if len(axes) > 1 else axes[0]
+            break
+    return P(*spec)
+
+
+def shard_batch(tree, mesh, *, include_model: bool = False):
+    def rule(path, leaf):
+        return NamedSharding(mesh, batch_pspec(leaf.shape, mesh,
+                                               include_model=include_model))
+    return jax.tree_util.tree_map_with_path(rule, tree)
+
+
+def cache_pspec(path, leaf, mesh, *, stacked: bool) -> P:
+    """Decode caches: batch on ("pod","data"), sequence on "model".
+
+    Layouts (see models/attention.py, models/mamba.py):
+      KVCache.k/v:      (B, Hk, S, hd)    -> (bax, None, "model", None)
+      KVCache.slot_pos: (S,)              -> replicated
+      MLACache.latent:  (B, S, r)         -> (bax, "model", None)
+      MLACache.k_rope:  (B, S, rope)      -> (bax, "model", None)
+      MambaState.conv:  (B, K-1, di)      -> (bax, None, "model")
+      MambaState.h:     (B, di, st)       -> (bax, "model", None)
+    Stacked period caches carry a leading n_periods dim (skipped).
+    """
+    name = _path_str(path)
+    msize = model_axis_size(mesh)
+    bax = batch_axes(mesh)
+    bsz = batch_axis_size(mesh)
+    shape = list(leaf.shape)
+    off = 1 if stacked and "periods" in name else 0
+    spec: list = [None] * len(shape)
+    if "slot_pos" in name:
+        return P(*spec)
+    ndim = len(shape) - off
+    if ndim == 0:
+        return P(*spec)
+    # batch dim
+    if bsz > 1 and shape[off] % bsz == 0:
+        spec[off] = bax
+    # sequence / feature dim on "model"
+    if msize > 1:
+        if "latent" in name or "k_rope" in name:
+            if ndim >= 2 and shape[off + 1] % msize == 0:
+                spec[off + 1] = "model"
+        elif name.endswith("k") or name.endswith("v"):
+            if ndim >= 3 and shape[off + 2] % msize == 0:
+                spec[off + 2] = "model"
+        elif "conv" in name:
+            if ndim >= 3 and shape[off + 2] % msize == 0:
+                spec[off + 2] = "model"
+        elif "/h" in name or name.endswith("h"):
+            if ndim >= 2 and shape[off + 1] % msize == 0:
+                spec[off + 1] = "model"
+    return P(*spec)
+
+
+def shard_caches(tree, mesh):
+    def rule(path, leaf):
+        return NamedSharding(mesh, cache_pspec(path, leaf, mesh, stacked=True))
+    return jax.tree_util.tree_map_with_path(rule, tree)
+
+
+def replicated(mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,10 @@
+"""Model zoo: all assigned architectures as composable JAX modules."""
+from repro.models.model import (  # noqa: F401
+    decode_step,
+    forward_hidden,
+    init_caches,
+    init_params,
+    loss_fn,
+    prefill,
+)
+from repro.models.blocks import LayerKind, LayerPlan, build_plan  # noqa: F401

@@ -1,0 +1,70 @@
+"""Shared model building blocks: norms, RoPE, init helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm with f32 accumulation, output in x.dtype."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def init_rms_scale(d: int) -> jax.Array:
+    # stored as zero-centered ("1 + scale" applied in rms_norm, gemma-style)
+    return jnp.zeros((d,), jnp.float32)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim // 2,), f32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding, "split halves" convention (Llama/NeoX).
+
+    x: (B, S, H, hd); positions: (1, S) or (B, S) int32.
+    """
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * inv  # (B?, S, hd/2)
+    ang = ang[:, :, None, :]  # broadcast over heads
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos_emb(seq: int, d: int, dtype=jnp.float32) -> jax.Array:
+    """Classic transformer sinusoidal table (whisper-style), (seq, d)."""
+    pos = np.arange(seq)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / (10_000.0 ** (2 * dim / d))
+    tab = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(tab, dtype)
+
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.bfloat16) -> jax.Array:
+    """Truncated-normal fan-in init (stddev = 1/sqrt(fan_in))."""
+    fan_in = shape[in_axis]
+    std = 1.0 / np.sqrt(fan_in)
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16) -> jax.Array:
+    std = 1.0 / np.sqrt(d)
+    return (std * jax.random.truncated_normal(key, -2.0, 2.0, (vocab, d), jnp.float32)).astype(dtype)
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))

@@ -1,0 +1,167 @@
+"""Mamba-1 block (Falcon-Mamba / Jamba mixer): selective state-space scan.
+
+The selective scan is a two-level chunked ``lax.scan`` (outer over chunks
+with the SSM state as carry, inner sequential within a chunk) with the
+outer body rematerialised, so backward memory is O(S/chunk * B*di*st)
+checkpointed states + one chunk of residuals — the same
+checkpoint/recompute structure GreedySnake applies at layer granularity,
+applied here along time.
+
+Also the pure-jnp oracle for ``repro.kernels.selective_scan``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rms_norm
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array  # (B, conv-1, di) — trailing conv inputs
+    h: jax.Array     # (B, di, st) f32 — SSM state
+
+
+def mamba_init(key, cfg, dtype=jnp.bfloat16):
+    d, di, st, rk = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    ks = jax.random.split(key, 6)
+    # S4D-real initialisation for A; dt bias so softplus(dt) spans [1e-3, 1e-1]
+    a = jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32)[None, :], (di, 1))
+    dt_init = jnp.exp(jax.random.uniform(ks[0], (di,), jnp.float32)
+                      * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))  # inverse softplus
+    return {
+        "in_proj": dense_init(ks[1], (d, 2 * di), dtype=dtype),
+        "conv_w": dense_init(ks[2], (cfg.ssm_conv, di), in_axis=0, dtype=dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[3], (di, rk + 2 * st), dtype=dtype),
+        "dt_proj": dense_init(ks[4], (rk, di), dtype=dtype),
+        "dt_bias": dt_bias,
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], (di, d), dtype=dtype),
+    }
+
+
+def selective_scan(x, dt, A, Bc, Cc, D, *, h0=None, chunk: int = 64
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Selective SSM scan.
+
+    x, dt: (B, S, di); Bc, Cc: (B, S, st); A: (di, st); D: (di,).
+    Returns (y: (B,S,di), h_final: (B,di,st) f32).
+    """
+    B, S, di = x.shape
+    st = A.shape[-1]
+    c = chunk
+    while S % c != 0:
+        c //= 2
+    nch = S // c
+    if h0 is None:
+        h0 = jnp.zeros((B, di, st), jnp.float32)
+
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bc.astype(jnp.float32)
+    Cf = Cc.astype(jnp.float32)
+
+    def inner_step(h, args):
+        xt, dtt, bt, ct = args  # (B,di),(B,di),(B,st),(B,st)
+        da = jnp.exp(dtt[..., None] * A)          # (B,di,st)
+        h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, ct)
+        return h, y
+
+    @functools.partial(jax.checkpoint, prevent_cse=False)
+    def outer_body(h, args):
+        xc, dtc, bc, cc = args  # (c, B, ...)
+        h, ys = jax.lax.scan(inner_step, h, (xc, dtc, bc, cc))
+        return h, ys
+
+    def to_chunks(a):  # (B,S,F) -> (nch, c, B, F)
+        return jnp.moveaxis(a.reshape(B, nch, c, -1), 0, 2)
+
+    h, ys = jax.lax.scan(outer_body, h0,
+                         (to_chunks(xf), to_chunks(dtf), to_chunks(Bf), to_chunks(Cf)))
+    y = jnp.moveaxis(ys.reshape(S, B, di), 0, 1)  # wait-free reshape: (nch*c,B,di)
+    y = y + xf * D
+    return y.astype(x.dtype), h
+
+
+def _causal_conv(x_in, conv_w, conv_b, tail: Optional[jax.Array] = None):
+    """Depthwise causal conv along S. x_in: (B,S,di); conv_w: (K,di).
+
+    tail: (B, K-1, di) previous inputs for streaming prefill (zeros if None).
+    """
+    B, S, di = x_in.shape
+    K = conv_w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((B, K - 1, di), x_in.dtype)
+    xp = jnp.concatenate([tail, x_in], axis=1)  # (B, S+K-1, di)
+    # sum_k w[k] * x[t - (K-1) + k]
+    out = jnp.zeros((B, S, di), jnp.float32)
+    for k in range(K):
+        out = out + xp[:, k:k + S, :].astype(jnp.float32) * conv_w[k].astype(jnp.float32)
+    return (out + conv_b.astype(jnp.float32)).astype(x_in.dtype)
+
+
+def mamba_apply(params, x, cfg, *, state: Optional[MambaState] = None,
+                mode: str = "train", scan_impl: str = "jnp"
+                ) -> Tuple[jax.Array, Optional[MambaState]]:
+    """x: (B,S,d). decode: S==1 with state; prefill returns final state."""
+    B, S, d = x.shape
+    di, st, K = cfg.d_inner, cfg.ssm_state, cfg.ssm_conv
+    rk = cfg.dt_rank
+    xz = x @ params["in_proj"]
+    x_in, z = xz[..., :di], xz[..., di:]
+    A = -jnp.exp(params["A_log"])
+
+    if mode == "decode":
+        assert state is not None
+        xp = jnp.concatenate([state.conv.astype(x_in.dtype), x_in], axis=1)  # (B,K,di)
+        xc = jnp.einsum("bkd,kd->bd", xp.astype(jnp.float32),
+                        params["conv_w"].astype(jnp.float32)) + params["conv_b"].astype(jnp.float32)
+        xc = jax.nn.silu(xc).astype(x.dtype)[:, None, :]  # (B,1,di)
+        new_conv = xp[:, 1:, :].astype(state.conv.dtype)
+    else:
+        xc = jax.nn.silu(_causal_conv(x_in, params["conv_w"], params["conv_b"]
+                                      ).astype(jnp.float32)).astype(x.dtype)
+        new_conv = None
+
+    proj = xc @ params["x_proj"]  # (B,S,rk+2st)
+    dt_raw, Bc, Cc = proj[..., :rk], proj[..., rk:rk + st], proj[..., rk + st:]
+    dt = jax.nn.softplus((dt_raw @ params["dt_proj"]).astype(jnp.float32)
+                         + params["dt_bias"])  # (B,S,di) f32
+
+    if mode == "decode":
+        h = state.h
+        da = jnp.exp(dt[:, 0, :, None] * A)
+        h = da * h + (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] \
+            * Bc[:, 0].astype(jnp.float32)[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, Cc[:, 0].astype(jnp.float32))
+        y = (y + xc[:, 0].astype(jnp.float32) * params["D"])[:, None, :]
+        new_state = MambaState(conv=new_conv, h=h)
+    else:
+        if scan_impl == "pallas":
+            from repro.kernels.ops import selective_scan_op
+            y, h = selective_scan_op(xc, dt, A, Bc, Cc, params["D"])
+        else:
+            y, h = selective_scan(xc, dt, A, Bc, Cc, params["D"])
+        new_state = None
+        if mode == "prefill":
+            tail = jnp.concatenate(
+                [jnp.zeros((B, K - 1, di), x_in.dtype), x_in], axis=1)[:, S:, :] \
+                if S < K - 1 else x_in[:, S - (K - 1):, :]
+            new_state = MambaState(conv=tail.astype(jnp.bfloat16), h=h)
+
+    y = (y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return y @ params["out_proj"], new_state
+
+
+def mamba_state_shape(cfg, batch: int, dtype=jnp.bfloat16) -> MambaState:
+    return MambaState(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        h=jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    )

@@ -1,0 +1,31 @@
+"""Feed-forward blocks: SwiGLU and GELU MLPs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+
+
+def mlp_init(key, d: int, f: int, act: str, dtype=jnp.bfloat16):
+    if act == "swiglu":
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w_gate": dense_init(k1, (d, f), dtype=dtype),
+            "w_up": dense_init(k2, (d, f), dtype=dtype),
+            "w_down": dense_init(k3, (f, d), dtype=dtype),
+        }
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "w_in": dense_init(k1, (d, f), dtype=dtype),
+        "w_out": dense_init(k2, (f, d), dtype=dtype),
+    }
+
+
+def mlp_apply(params, x, act: str):
+    if act == "swiglu":
+        g = jax.nn.silu((x @ params["w_gate"]).astype(jnp.float32))
+        u = (x @ params["w_up"]).astype(jnp.float32)
+        return ((g * u).astype(x.dtype)) @ params["w_down"]
+    h = jax.nn.gelu((x @ params["w_in"]).astype(jnp.float32), approximate=True)
+    return h.astype(x.dtype) @ params["w_out"]

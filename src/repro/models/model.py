@@ -1,0 +1,328 @@
+"""Top-level models: causal LM (dense/MoE/SSM/hybrid/VLM) and enc-dec.
+
+Layer execution is ``prefix -> lax.scan(period) -> suffix`` (see blocks.py),
+with the period body rematerialised: that is exactly the paper's per-layer
+activation checkpointing — the scan carry (one layer's output for the whole
+batch) is the "inter-layer activation checkpoint" of GreedySnake §2.2.
+
+Training-memory discipline mirrors GreedySnake: the quadratic attention
+intermediates and FFN activations are recomputed in backward (remat), so
+peak memory holds one layer's working set plus the per-layer checkpoints.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks as blk
+from repro.models.common import embed_init, init_rms_scale, rms_norm, sinusoidal_pos_emb
+
+AUX_COEF = 0.01  # router load-balance coefficient
+
+# Optional activation-sharding constraint (set by the launcher): a
+# PartitionSpec pinned onto the layer-scan carry so XLA SPMD keeps
+# activations fully batch-sharded (pure FSDP) instead of flip-flopping
+# into tensor-parallel layouts with per-layer activation all-reduces.
+_ACT_SPEC: Optional[Any] = None
+
+
+def set_activation_spec(spec) -> None:
+    global _ACT_SPEC
+    _ACT_SPEC = spec
+
+
+def _constrain(x):
+    if _ACT_SPEC is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, _ACT_SPEC)
+    except (ValueError, RuntimeError):  # no ambient mesh / spec mismatch
+        return x
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _stack_periods(keys, cfg, period, dtype):
+    def one(key):
+        ks = jax.random.split(key, max(1, len(period)))
+        return {f"sub{j}": blk.block_init(ks[j], cfg, kind, dtype)
+                for j, kind in enumerate(period)}
+    per = [one(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *per)
+
+
+def init_params(cfg, key, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    plan = blk.build_plan(cfg)
+    n_keys = 4 + len(plan.prefix) + plan.n_periods + len(plan.suffix) + 1
+    ks = list(jax.random.split(key, n_keys))
+    params: Dict[str, Any] = {}
+    params["embed"] = embed_init(ks[0], cfg.padded_vocab, cfg.d_model, dtype)
+    i = 1
+    params["prefix"] = tuple(
+        blk.block_init(ks[i + j], cfg, kind, dtype)
+        for j, kind in enumerate(plan.prefix))
+    i += len(plan.prefix)
+    if plan.n_periods:
+        params["periods"] = _stack_periods(ks[i:i + plan.n_periods], cfg,
+                                           plan.period, dtype)
+    i += plan.n_periods
+    params["suffix"] = tuple(
+        blk.block_init(ks[i + j], cfg, kind, dtype)
+        for j, kind in enumerate(plan.suffix))
+    i += len(plan.suffix)
+    params["final_norm"] = init_rms_scale(cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["unembed"] = embed_init(ks[i], cfg.padded_vocab, cfg.d_model, dtype).T
+    i += 1
+    if cfg.family == "encdec":
+        eplan = blk.build_plan(cfg, decoder=False, num_layers=cfg.encoder_layers)
+        eks = list(jax.random.split(ks[i], eplan.n_periods + len(eplan.prefix) + 2))
+        enc: Dict[str, Any] = {}
+        enc["prefix"] = tuple(
+            blk.block_init(eks[j], cfg, kind, dtype)
+            for j, kind in enumerate(eplan.prefix))
+        if eplan.n_periods:
+            enc["periods"] = _stack_periods(
+                eks[len(eplan.prefix):len(eplan.prefix) + eplan.n_periods],
+                cfg, eplan.period, dtype)
+        enc["suffix"] = ()
+        enc["final_norm"] = init_rms_scale(cfg.d_model)
+        params["encoder"] = enc
+    return params
+
+
+def unembed_matrix(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"].T  # (d, V)
+    return params["unembed"]
+
+
+# ---------------------------------------------------------------------------
+# Stack execution
+# ---------------------------------------------------------------------------
+
+def _run_stack(params, x, cfg, plan, *, mode, caches=None, pos=None,
+               enc_out=None, remat=True, scan_impl="jnp"):
+    """Run prefix + scanned periods + suffix. Returns (x, new_caches, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_caches: Dict[str, Any] = {"prefix": [], "suffix": []}
+
+    def apply_one(bp, x, kind, cache):
+        return blk.block_apply(bp, x, cfg, kind, mode=mode, cache=cache,
+                               pos=pos, enc_out=enc_out, scan_impl=scan_impl)
+
+    for j, kind in enumerate(plan.prefix):
+        cache = caches["prefix"][j] if caches else None
+        fn = apply_one
+        if mode == "train" and remat:
+            fn = jax.checkpoint(apply_one, static_argnums=(2,), prevent_cse=False)
+        x, nc, a = fn(params["prefix"][j], x, kind, cache)
+        aux += a
+        new_caches["prefix"].append(nc)
+
+    if plan.n_periods:
+        if mode == "train":
+            def body(carry, pparams):
+                x, aux = carry
+                x = _constrain(x)
+                for j, kind in enumerate(plan.period):
+                    x, _, a = blk.block_apply(pparams[f"sub{j}"], x, cfg, kind,
+                                              mode="train", enc_out=enc_out,
+                                              scan_impl=scan_impl)
+                    aux = aux + a
+                return (_constrain(x), aux), None
+            if remat:
+                body = jax.checkpoint(body, prevent_cse=False)
+            (x, aux), _ = jax.lax.scan(body, (x, aux), params["periods"])
+        else:
+            def body(x, xs):
+                pparams, pcache = xs
+                ncs = {}
+                for j, kind in enumerate(plan.period):
+                    x, nc, _ = blk.block_apply(pparams[f"sub{j}"], x, cfg, kind,
+                                               mode=mode, cache=pcache[f"sub{j}"],
+                                               pos=pos, enc_out=enc_out,
+                                               scan_impl=scan_impl)
+                    ncs[f"sub{j}"] = nc
+                return x, ncs
+            x, pcs = jax.lax.scan(body, x, (params["periods"], caches["periods"]))
+            new_caches["periods"] = pcs
+
+    for j, kind in enumerate(plan.suffix):
+        cache = caches["suffix"][j] if caches else None
+        fn = apply_one
+        if mode == "train" and remat:
+            fn = jax.checkpoint(apply_one, static_argnums=(2,), prevent_cse=False)
+        x, nc, a = fn(params["suffix"][j], x, kind, cache)
+        aux += a
+        new_caches["suffix"].append(nc)
+
+    new_caches["prefix"] = tuple(new_caches["prefix"])
+    new_caches["suffix"] = tuple(new_caches["suffix"])
+    return x, new_caches, aux
+
+
+def _embed_inputs(params, cfg, batch, *, decode=False):
+    """Returns decoder-input embeddings (B,S,d) from the batch dict."""
+    tokens = batch["tokens"]
+    x = params["embed"][jnp.clip(tokens, 0, cfg.padded_vocab - 1)]
+    if cfg.scale_embed:
+        x = (x.astype(jnp.float32) * jnp.sqrt(float(cfg.d_model))).astype(x.dtype)
+    if cfg.family == "vlm" and not decode:
+        img = batch["image_embeds"].astype(x.dtype)  # (B,P,d)
+        x = jnp.concatenate([img, x], axis=1)
+    return x
+
+
+def _encode(params, cfg, enc_embeds, *, remat=True):
+    """Whisper-style encoder over stubbed frame embeddings (B,F,d)."""
+    B, F, d = enc_embeds.shape
+    pos = sinusoidal_pos_emb(F, d).astype(enc_embeds.dtype)
+    x = enc_embeds + pos[None]
+    eplan = blk.build_plan(cfg, decoder=False, num_layers=cfg.encoder_layers)
+    x, _, _ = _run_stack(params["encoder"], x, cfg, eplan, mode="train",
+                         remat=remat)
+    return rms_norm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def forward_hidden(params, cfg, batch, *, remat=True, scan_impl="jnp"
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Full-batch forward to final hidden states. Returns (hidden, aux)."""
+    plan = blk.build_plan(cfg)
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(params, cfg, batch["enc_embeds"], remat=remat)
+    x = _embed_inputs(params, cfg, batch)
+    x, _, aux = _run_stack(params, x, cfg, plan, mode="train", enc_out=enc_out,
+                           remat=remat, scan_impl=scan_impl)
+    return rms_norm(x, params["final_norm"], cfg.norm_eps), aux
+
+
+# ---------------------------------------------------------------------------
+# Loss (chunked over sequence so (B,chunk,V) is the only logits buffer)
+# ---------------------------------------------------------------------------
+
+def _xent_chunk(h, unembed, labels, weights):
+    logits = (h @ unembed).astype(jnp.float32)  # (B,c,V)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.sum((lse - ll) * weights), jnp.sum(weights)
+
+
+def chunked_xent(hidden, unembed, labels, weights, chunk: int = 0):
+    """Mean token cross-entropy; logits are formed ``chunk`` positions at a
+    time (remat'd) so the (B,S,V) tensor never exists."""
+    B, S, d = hidden.shape
+    V = unembed.shape[-1]
+    if chunk <= 0:
+        # Two constraints: (a) the (B, chunk, V) logits buffer stays small
+        # (the bytes bound uses the GLOBAL batch, conservative under batch
+        # sharding); (b) at most ~32 chunks — every chunk's backward
+        # all-reduces the partial d(unembed) across the batch axis, so
+        # thousands of tiny chunks turn the loss into a collective storm
+        # (796 GB/device for qwen3-4b train_4k before this bound).
+        by_bytes = max(1, int((64 << 20) / max(B * V, 1)))
+        chunk = min(S, max(S // 32, by_bytes))
+    while S % chunk != 0:
+        chunk -= 1
+    nch = S // chunk
+
+    def to_chunks(a):
+        return jnp.moveaxis(a.reshape(B, nch, chunk, *a.shape[2:]), 0, 1)
+
+    body = jax.checkpoint(
+        lambda carry, args: (
+            tuple(c + v for c, v in zip(carry, _xent_chunk(args[0], unembed,
+                                                           args[1], args[2]))),
+            None),
+        prevent_cse=False)
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (to_chunks(hidden), to_chunks(labels), to_chunks(weights)))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def labels_and_weights(cfg, batch):
+    """Next-token labels/weights over the FULL decoder sequence."""
+    tokens = batch["tokens"]
+    B, St = tokens.shape
+    labels = jnp.concatenate([tokens[:, 1:], jnp.zeros((B, 1), tokens.dtype)], 1)
+    weights = jnp.concatenate(
+        [jnp.ones((B, St - 1), jnp.float32), jnp.zeros((B, 1), jnp.float32)], 1)
+    if cfg.family == "vlm":
+        P = cfg.frontend_tokens
+        # sequence = [P image tokens; St text tokens]; positions P-1..P+St-2
+        # predict text tokens 0..St-1; position P-1 predicts text token 0.
+        S = P + St
+        lab = jnp.zeros((B, S), tokens.dtype)
+        lab = jax.lax.dynamic_update_slice(lab, tokens, (0, P - 1))
+        w = jnp.zeros((B, S), jnp.float32)
+        w = jax.lax.dynamic_update_slice(w, jnp.ones((B, St), jnp.float32), (0, P - 1))
+        return lab, w
+    return labels, weights
+
+
+def loss_fn(params, cfg, batch, *, remat=True, scan_impl="jnp"):
+    hidden, aux = forward_hidden(params, cfg, batch, remat=remat,
+                                 scan_impl=scan_impl)
+    labels, weights = labels_and_weights(cfg, batch)
+    loss = chunked_xent(hidden, unembed_matrix(params, cfg), labels, weights)
+    return loss + AUX_COEF * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode
+# ---------------------------------------------------------------------------
+
+def init_caches(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16):
+    plan = blk.build_plan(cfg)
+
+    def stack_cache():
+        one = {f"sub{j}": blk.block_cache_shape(cfg, kind, batch, seq_len, dtype)
+               for j, kind in enumerate(plan.period)}
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (plan.n_periods,) + x.shape), one)
+
+    caches = {
+        "prefix": tuple(blk.block_cache_shape(cfg, kind, batch, seq_len, dtype)
+                        for kind in plan.prefix),
+        "suffix": tuple(blk.block_cache_shape(cfg, kind, batch, seq_len, dtype)
+                        for kind in plan.suffix),
+    }
+    if plan.n_periods:
+        caches["periods"] = stack_cache()
+    return caches
+
+
+def prefill(params, cfg, batch, caches, *, scan_impl="jnp"):
+    """Process the prompt; fill caches; return (last_logits, caches)."""
+    plan = blk.build_plan(cfg)
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(params, cfg, batch["enc_embeds"], remat=False)
+    x = _embed_inputs(params, cfg, batch)
+    x, new_caches, _ = _run_stack(params, x, cfg, plan, mode="prefill",
+                                  caches=caches, enc_out=enc_out, remat=False,
+                                  scan_impl=scan_impl)
+    h = rms_norm(x[:, -1:, :], params["final_norm"], cfg.norm_eps)
+    logits = (h @ unembed_matrix(params, cfg))[:, 0, :]
+    return logits.astype(jnp.float32), new_caches
+
+
+def decode_step(params, cfg, token, pos, caches, *, scan_impl="jnp"):
+    """One decode step. token: (B,1) int32; pos: scalar int32 position.
+
+    Returns (logits (B,V) f32, updated caches)."""
+    plan = blk.build_plan(cfg)
+    x = _embed_inputs(params, cfg, {"tokens": token}, decode=True)
+    x, new_caches, _ = _run_stack(params, x, cfg, plan, mode="decode",
+                                  caches=caches, pos=pos, remat=False,
+                                  scan_impl=scan_impl)
+    h = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (h @ unembed_matrix(params, cfg))[:, 0, :]
+    return logits.astype(jnp.float32), new_caches

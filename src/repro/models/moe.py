@@ -1,0 +1,99 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based capacity dispatch.
+
+Dispatch is sort-based (Mixtral/MegaBlocks style) rather than GShard
+one-hot: a (T, E, C) dispatch tensor at assigned scales (T=65k, E=128,
+C=5k) would be ~4e13 elements. Sorting T*k assignments keeps memory
+O(T*k + E*C*d) and the expert einsum FLOPs equal to *active* FLOPs
+(top_k/E of the dense-all-experts cost), which matters for the roofline:
+compiled HLO_FLOPs stay proportional to N_active.
+
+Experts are sharded over the "model" mesh axis (expert parallelism); the
+scatter/gather across the token<->expert resharding is where the
+all-to-all shows up in the dry-run collective parse.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init
+from repro.models.mlp import mlp_apply, mlp_init
+
+
+def moe_init(key, cfg, dtype=jnp.bfloat16):
+    d, f, E = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    mult = 3 if cfg.act == "swiglu" else 2
+    p = {"router": dense_init(ks[0], (d, E), dtype=jnp.float32)}
+    if cfg.act == "swiglu":
+        p["w_gate"] = dense_init(ks[1], (E, d, f), in_axis=1, dtype=dtype)
+        p["w_up"] = dense_init(ks[2], (E, d, f), in_axis=1, dtype=dtype)
+        p["w_down"] = dense_init(ks[3], (E, f, d), in_axis=1, dtype=dtype)
+    else:
+        p["w_in"] = dense_init(ks[1], (E, d, f), in_axis=1, dtype=dtype)
+        p["w_out"] = dense_init(ks[2], (E, f, d), in_axis=1, dtype=dtype)
+    if cfg.num_shared_experts:
+        p["shared"] = mlp_init(ks[4], d, cfg.moe_d_ff * cfg.num_shared_experts,
+                               cfg.act, dtype)
+    return p
+
+
+def _expert_ffn(params, xe, act: str):
+    """xe: (E, C, d) -> (E, C, d)."""
+    if act == "swiglu":
+        g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["w_gate"]).astype(jnp.float32))
+        u = jnp.einsum("ecd,edf->ecf", xe, params["w_up"]).astype(jnp.float32)
+        h = (g * u).astype(xe.dtype)
+        return jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xe, params["w_in"]).astype(jnp.float32),
+                    approximate=True).astype(xe.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, params["w_out"])
+
+
+def moe_apply(params, x, cfg, *, capacity_factor: float = 1.25
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B,S,d). Returns (y, aux_loss). Tokens over capacity are dropped
+    (their contribution is the shared-expert/residual path only)."""
+    B, S, d = x.shape
+    E, K = cfg.num_experts, cfg.moe_top_k
+    T = B * S
+    C = max(1, int(math.ceil(T * K / E * capacity_factor)))
+
+    xf = x.reshape(T, d)
+    logits = (xf.astype(jnp.float32) @ params["router"])  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)  # (T,K)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux load-balance loss (Switch-style over all K slots) ----
+    me = jnp.mean(probs, axis=0)  # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[gate_idx.reshape(-1)].add(1.0) / (T * K)
+    aux = E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch ----
+    flat_e = gate_idx.reshape(T * K)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+    flat_g = gate_vals.reshape(T * K)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    # position within expert = rank - (first rank of that expert)
+    counts = jnp.zeros((E,), jnp.int32).at[se].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    pos_in_e = jnp.arange(T * K) - starts[se]
+    keep = pos_in_e < C
+    slot = jnp.where(keep, se * C + pos_in_e, E * C)  # E*C = trash slot
+
+    xe = jnp.zeros((E * C + 1, d), x.dtype).at[slot].set(xf[st])
+    ye = _expert_ffn(params, xe[:-1].reshape(E, C, d), cfg.act)
+    ye = jnp.concatenate([ye.reshape(E * C, d),
+                          jnp.zeros((1, d), ye.dtype)], axis=0)
+    contrib = ye[slot] * (sg * keep)[:, None].astype(ye.dtype)
+    y = jnp.zeros((T, d), jnp.float32).at[st].add(contrib.astype(jnp.float32))
+    y = y.astype(x.dtype).reshape(B, S, d)
+
+    if cfg.num_shared_experts:
+        y = y + mlp_apply(params["shared"], x, cfg.act)
+    return y, aux

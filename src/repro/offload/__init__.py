@@ -1,0 +1,4 @@
+from repro.offload.engine import OffloadConfig, OffloadEngine  # noqa: F401
+from repro.offload.stores import (HostStore, SSDStore, TieredVector,  # noqa: F401
+                                  TrafficMeter)
+from repro.offload.buffers import naive_padded, pack, waste_ratio  # noqa: F401

@@ -1,0 +1,244 @@
+"""The three coordinators of GreedySnake §5.
+
+* ParameterCoordinator — per-layer low-precision params in tiered storage;
+  two-stage prefetch (§4.2): SSD->CPU staged two pipeline stages ahead,
+  CPU->device one stage ahead (async thread), device copy dropped after use.
+* InterLayerTensorCoordinator — activation checkpoints (forward) and
+  inter-layer gradients (backward). Checkpoints are written to CPU and the
+  (1-x_c) tail streamed to SSD; the forward-pass consumer reads the CPU
+  cache (paper: "written to SSD but at the same time cached in CPU"), after
+  which the tail is dropped from CPU; the backward-pass recompute re-reads
+  the tail from SSD. Inter-layer gradients stay in CPU (never SSD).
+* OptimizerStepCoordinator — master/momentum/variance in tiered f32
+  vectors; the (1-α) fraction updates right after a layer's backward
+  (async, overlapped), the α fraction is flushed just before the layer's
+  next forward (§4.4). Gradients for the α fraction are retained in CPU
+  memory (the paper reuses reclaimed param/ckpt buffers; we meter the
+  bytes the same way).
+"""
+from __future__ import annotations
+
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.offload.stores import HostStore, SSDStore, TieredVector, TrafficMeter
+from repro.optim.cpu_adam import CpuAdam
+
+
+class ParameterCoordinator:
+    def __init__(self, vectors: List[TieredVector], meter: TrafficMeter,
+                 io: ThreadPoolExecutor, dtype=np.float16):
+        self.vectors = vectors
+        self.meter = meter
+        self.io = io
+        self._futures: Dict[int, Future] = {}
+        self._gate: Dict[int, Callable[[], None]] = {}
+
+    def set_gate(self, l: int, fn: Callable[[], None]):
+        """Barrier that must complete before layer l's params are read
+        (used to order the α-delayed optimizer flush before the fetch)."""
+        self._gate[l] = fn
+
+    def _fetch(self, l: int):
+        gate = self._gate.pop(l, None)
+        if gate is not None:
+            gate()
+        host_arr = self.vectors[l].read()          # meters ssd->cpu
+        dev = jnp.asarray(host_arr)                 # "PCIe" copy
+        self.meter.add("param", "cpu->gpu", host_arr.nbytes)
+        return dev
+
+    def prefetch(self, l: int):
+        if 0 <= l < len(self.vectors) and l not in self._futures:
+            self._futures[l] = self.io.submit(self._fetch, l)
+
+    def get(self, l: int) -> jax.Array:
+        if l not in self._futures:
+            self.prefetch(l)
+        return self._futures.pop(l).result()
+
+
+class InterLayerTensorCoordinator:
+    """Checkpoints: dict (layer, mb) -> (host_head, ssd_name or None).
+    x_c = CPU-resident fraction; the tail beyond k goes to SSD."""
+
+    def __init__(self, x_cpu: float, host: HostStore, ssd: SSDStore,
+                 meter: TrafficMeter, io: ThreadPoolExecutor):
+        self.x = x_cpu
+        self.host = host
+        self.ssd = ssd
+        self.meter = meter
+        self.io = io
+        self._pending: Dict[Tuple[str, int, int], Future] = {}
+        self._shapes: Dict[Tuple[str, int, int], tuple] = {}
+        self._device_kept: Dict[Tuple[int, int], jax.Array] = {}
+
+    def _key(self, kind: str, l: int, m: int) -> str:
+        return f"{kind}:{l}:{m}"
+
+    # ---- forward checkpoints ----
+    def put_ckpt(self, l: int, m: int, y_dev: jax.Array,
+                 keep_on_device: bool = False):
+        """Offload layer-l input checkpoint for micro-batch m."""
+        if keep_on_device:
+            self._device_kept[(l, m)] = y_dev
+        arr = np.asarray(y_dev).reshape(-1)
+        self.meter.add("ckpt", "gpu->cpu", arr.nbytes)
+        self._shapes[("c", l, m)] = y_dev.shape
+        k = int(round(self.x * arr.size))
+        name = self._key("c", l, m)
+        self.host.put(name + ":h", arr[:k].copy())
+        self.host.put(name + ":tail", arr[k:].copy())  # CPU cache until consumed
+        if k < arr.size:
+            tail = arr[k:].copy()
+            self._pending[("c", l, m)] = self.io.submit(
+                self.ssd.write, name + ":s", tail, "ckpt")
+
+    def get_ckpt_fwd(self, l: int, m: int) -> jax.Array:
+        """Next-layer forward input: device-kept or CPU cache (no SSD read).
+        Drops the CPU tail afterwards (reclaimed, §4.4)."""
+        if (l, m) in self._device_kept:
+            return self._device_kept.pop((l, m))
+        name = self._key("c", l, m)
+        head = self.host.get(name + ":h")
+        tail = self.host.pop(name + ":tail")   # consume CPU cache
+        arr = np.concatenate([head, tail])
+        self.meter.add("ckpt", "cpu->gpu", arr.nbytes)
+        return jnp.asarray(arr).reshape(self._shapes[("c", l, m)])
+
+    def get_ckpt_bwd(self, l: int, m: int) -> jax.Array:
+        """Backward recompute input: CPU head + SSD tail."""
+        self._device_kept.pop((l, m), None)
+        name = self._key("c", l, m)
+        fut = self._pending.pop(("c", l, m), None)
+        if fut is not None:
+            fut.result()
+        head = self.host.get(name + ":h")
+        shape = self._shapes[("c", l, m)]
+        n = int(np.prod(shape))
+        if head.size < n:
+            if name + ":tail" in self.host:      # never trimmed (x=1 case)
+                tail = self.host.get(name + ":tail")
+            else:
+                tail = self.ssd.read(name + ":s", "ckpt")
+            arr = np.concatenate([head, tail])
+        else:
+            arr = head
+        self.meter.add("ckpt", "cpu->gpu", arr.nbytes)
+        return jnp.asarray(arr).reshape(shape)
+
+    def drop_ckpt(self, l: int, m: int):
+        name = self._key("c", l, m)
+        self.host.pop(name + ":h") if name + ":h" in self.host else None
+        if name + ":tail" in self.host:
+            self.host.pop(name + ":tail")
+
+    # ---- inter-layer gradients (backward; CPU only, §4.3) ----
+    def put_grad(self, l: int, m: int, dx_dev: jax.Array,
+                 keep_on_device: bool = False):
+        if keep_on_device:
+            self._device_kept[(-l - 1, m)] = dx_dev
+            return
+        arr = np.asarray(dx_dev)
+        self.meter.add("inter_grad", "gpu->cpu", arr.nbytes)
+        self._shapes[("g", l, m)] = dx_dev.shape
+        self.host.put(self._key("g", l, m), arr)
+
+    def get_grad(self, l: int, m: int) -> jax.Array:
+        if (-l - 1, m) in self._device_kept:
+            return self._device_kept.pop((-l - 1, m))
+        arr = self.host.pop(self._key("g", l, m))
+        self.meter.add("inter_grad", "cpu->gpu", arr.nbytes)
+        return jnp.asarray(arr).reshape(self._shapes[("g", l, m)])
+
+
+class OptimizerStepCoordinator:
+    """Per-layer Adam over tiered f32 state vectors with α-delay."""
+
+    def __init__(self, masters: List[TieredVector], ms: List[TieredVector],
+                 vs: List[TieredVector], params: List[TieredVector],
+                 host: HostStore, meter: TrafficMeter,
+                 cpu: ThreadPoolExecutor, adam: CpuAdam, alpha: float,
+                 param_dtype=np.dtype("bfloat16")):
+        self.masters, self.ms, self.vs = masters, ms, vs
+        self.params = params
+        self.host = host
+        self.meter = meter
+        self.cpu = cpu
+        self.adam = adam
+        self.alpha = alpha
+        self.param_dtype = param_dtype
+        self._early_futs: Dict[int, Future] = {}
+        self._late_futs: Dict[int, Future] = {}
+
+    def _k_early(self, l: int) -> int:
+        return int(round((1.0 - self.alpha) * self.masters[l].n))
+
+    def submit_early(self, l: int, g_dev: jax.Array, step: int):
+        """After layer l's backward: transfer grads, update the (1-α)
+        fraction, retain grads for the α fraction (CPU-resident)."""
+        g = np.asarray(g_dev).astype(np.float32)
+        self.meter.add("grad", "gpu->cpu", g.nbytes)
+
+        def work():
+            n = self.masters[l].n
+            k = self._k_early(l)
+            if k > 0:
+                mast = self.masters[l].read_range(0, k)
+                m_ = self.ms[l].read_range(0, k)
+                v_ = self.vs[l].read_range(0, k)
+                self.adam.update(mast, m_, v_, g[:k], step)
+                self._write_range(self.masters[l], mast, 0, k)
+                self._write_range(self.ms[l], m_, 0, k)
+                self._write_range(self.vs[l], v_, 0, k)
+                lowp = mast.astype(self.param_dtype)
+                self._write_range(self.params[l], lowp, 0, k)
+            if k < n:
+                self.host.put(f"pending_grad:{l}", g[k:].copy())
+
+        self._early_futs[l] = self.cpu.submit(work)
+
+    def _write_range(self, vec: TieredVector, data: np.ndarray, lo: int, hi: int):
+        vec.write_seg(data, lo)
+
+    def flush_late(self, l: int, step: int):
+        """Before layer l's next forward: update the remaining α fraction."""
+        f = self._early_futs.pop(l, None)
+        if f is not None:
+            f.result()
+        n = self.masters[l].n
+        k = self._k_early(l)
+        if k >= n:
+            return
+        key = f"pending_grad:{l}"
+        if key not in self.host:
+            return
+        g_tail = self.host.pop(key)
+
+        def work():
+            mast = self.masters[l].read_range(k, n)
+            m_ = self.ms[l].read_range(k, n)
+            v_ = self.vs[l].read_range(k, n)
+            self.adam.update(mast, m_, v_, g_tail, step)
+            self._write_range(self.masters[l], mast, k, n)
+            self._write_range(self.ms[l], m_, k, n)
+            self._write_range(self.vs[l], v_, k, n)
+            self._write_range(self.params[l], mast.astype(self.params[l].dtype), k, n)
+
+        self._late_futs[l] = self.cpu.submit(work)
+
+    def wait_late(self, l: int):
+        f = self._late_futs.pop(l, None)
+        if f is not None:
+            f.result()
+
+    def wait_all(self):
+        for d in (self._early_futs, self._late_futs):
+            for f in list(d.values()):
+                f.result()
+            d.clear()

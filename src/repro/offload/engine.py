@@ -1,0 +1,413 @@
+"""OffloadEngine: GreedySnake's pipelined vertical (and baseline
+horizontal) schedule executed against REAL three-tier storage.
+
+This is the runnable counterpart of the paper's system on this container:
+* "GPU"  = the jax device (compute + per-layer working set),
+* "CPU"  = numpy host buffers,
+* "SSD"  = binary files under a work directory.
+
+Per iteration, the engine moves exactly the bytes the paper's §1/§3.4
+analysis predicts (validated in tests against repro.core.traffic):
+
+  vertical:    params 2·ms, grads 2·ms (f32 once), ckpt M·cs written,
+               read twice minus the on-device boundary micro-batch
+  horizontal:  params 2·M·ms, grad buffer (2M-1)·2·ms, ckpt 2·M·cs
+
+and overlaps the (1-α) optimizer fraction with backward and the α
+fraction with the next forward via worker threads.
+
+The embedding and LM head stay device-resident (the paper excludes them
+from the per-layer pipeline and adds their time separately, §4.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.perfmodel import StorageRatios
+from repro.models import blocks as blk
+from repro.models.common import rms_norm
+from repro.models.model import _xent_chunk, labels_and_weights
+from repro.offload.coordinators import (InterLayerTensorCoordinator,
+                                        OptimizerStepCoordinator,
+                                        ParameterCoordinator)
+from repro.offload.stores import HostStore, SSDStore, TieredVector, TrafficMeter
+from repro.optim.cpu_adam import CpuAdam
+
+
+@dataclasses.dataclass
+class OffloadConfig:
+    schedule: str = "vertical"          # "vertical" | "horizontal"
+    num_microbatches: int = 4
+    micro_batch: int = 2
+    seq_len: int = 128
+    alpha: float = 0.0                  # delayed optimizer ratio (§4.4)
+    ratios: StorageRatios = dataclasses.field(default_factory=StorageRatios)
+    lr: float = 1e-3
+    io_workers: int = 4
+    param_dtype: str = "float32"        # f32 => bit-exact vs in-memory ref
+
+
+def _flatten_tree(tree) -> Tuple[np.ndarray, list, list]:
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = [l.shape for l in leaves]
+    flat = np.concatenate([np.asarray(l).reshape(-1) for l in leaves])
+    return flat, treedef, shapes
+
+
+def _make_unflatten(treedef, shapes, dtype):
+    sizes = [int(np.prod(s)) for s in shapes]
+    offs = np.cumsum([0] + sizes)
+
+    def unflatten(flat):
+        leaves = [jax.lax.dynamic_slice_in_dim(flat, int(offs[i]), sizes[i], 0)
+                  .reshape(shapes[i]).astype(dtype)
+                  for i in range(len(sizes))]
+        return jax.tree.unflatten(treedef, leaves)
+    return unflatten
+
+
+class OffloadEngine:
+    def __init__(self, cfg, ocfg: OffloadConfig, key, workdir: str):
+        assert cfg.family in ("dense",), "engine drives homogeneous GPT stacks"
+        plan = blk.build_plan(cfg)
+        assert len(plan.period) == 1 and not plan.prefix and not plan.suffix
+        self.cfg = cfg
+        self.ocfg = ocfg
+        self.kind = plan.period[0]
+        self.L = cfg.num_layers
+        self.dtype = jnp.dtype(ocfg.param_dtype)
+        self.meter = TrafficMeter()
+        self.host = HostStore(self.meter)
+        self.ssd = SSDStore(workdir, self.meter)
+        self.io = ThreadPoolExecutor(max_workers=ocfg.io_workers)
+        self.cpu = ThreadPoolExecutor(max_workers=2)
+        self.step_num = 0
+        self.phase_time: Dict[str, float] = {"fwd": 0.0, "bwd": 0.0, "opt_wait": 0.0}
+
+        # ---- init params layerwise straight into tiered storage ----
+        keys = jax.random.split(key, self.L + 1)
+        x = ocfg.ratios
+        self.p_vecs: List[TieredVector] = []
+        self.m_master: List[TieredVector] = []
+        self.m_m: List[TieredVector] = []
+        self.m_v: List[TieredVector] = []
+        tmpl = None
+        for l in range(self.L):
+            lp = blk.block_init(keys[l], cfg, self.kind, dtype=self.dtype)
+            flat, treedef, shapes = _flatten_tree(lp)
+            flat = flat.astype(ocfg.param_dtype)
+            if tmpl is None:
+                tmpl = (treedef, shapes)
+                self.P = flat.size
+            pv = TieredVector(f"param:{l}", self.P, ocfg.param_dtype,
+                              x.param, self.host, self.ssd, "param")
+            pv.write_full(flat)
+            self.p_vecs.append(pv)
+            for name, lst, init in (("master", self.m_master, flat.astype(np.float32)),
+                                    ("m", self.m_m, np.zeros(self.P, np.float32)),
+                                    ("v", self.m_v, np.zeros(self.P, np.float32))):
+                tv = TieredVector(f"{name}:{l}", self.P, np.float32,
+                                  x.opt, self.host, self.ssd, "opt")
+                tv.write_full(init)
+                lst.append(tv)
+        self._unflatten = _make_unflatten(tmpl[0], tmpl[1], self.dtype)
+
+        # embedding / head resident on device (+ their own device Adam)
+        from repro.models.common import embed_init, init_rms_scale
+        ek = jax.random.split(keys[self.L], 2)
+        self.embed = embed_init(ek[0], cfg.padded_vocab, cfg.d_model, self.dtype)
+        self.unembed = embed_init(ek[1], cfg.padded_vocab, cfg.d_model, self.dtype).T
+        self.final_norm = init_rms_scale(cfg.d_model)
+        self.head_state = {
+            t: {"m": jnp.zeros_like(getattr(self, t), dtype=jnp.float32),
+                "v": jnp.zeros_like(getattr(self, t), dtype=jnp.float32)}
+            for t in ("embed", "unembed", "final_norm")}
+
+        # coordinators
+        self.params_c = ParameterCoordinator(self.p_vecs, self.meter, self.io)
+        self.ckpt_c = InterLayerTensorCoordinator(x.ckpt, self.host, self.ssd,
+                                                  self.meter, self.io)
+        self.opt_c = OptimizerStepCoordinator(
+            self.m_master, self.m_m, self.m_v, self.p_vecs, self.host,
+            self.meter, self.cpu, CpuAdam(lr=ocfg.lr), ocfg.alpha,
+            param_dtype=np.dtype(ocfg.param_dtype))
+
+        self._build_jit_fns()
+
+    # ------------------------------------------------------------------
+    def _build_jit_fns(self):
+        cfg, kind = self.cfg, self.kind
+
+        def layer_fwd(p_flat, x):
+            lp = self._unflatten(p_flat)
+            y, _, _ = blk.block_apply(lp, x, cfg, kind, mode="train")
+            return y
+
+        def layer_bwd(p_flat, x, dy):
+            y, vjp = jax.vjp(lambda p, xx: layer_fwd(p, xx), p_flat, x)
+            dp, dx = vjp(dy)
+            return dx, dp.astype(jnp.float32), y
+
+        def embed_fwd(embed, tokens):
+            return embed[tokens]
+
+        def head_loss(unembed, norm, x, labels, weights, denom):
+            h = rms_norm(x, norm, cfg.norm_eps)
+            tot, _ = _xent_chunk(h, unembed, labels, weights)
+            return tot / denom
+
+        def head_bwd(unembed, norm, x, labels, weights, denom):
+            (loss), vjp = jax.vjp(
+                lambda u, nm, xx: head_loss(u, nm, xx, labels, weights, denom),
+                unembed, norm, x)
+            du, dn, dx = vjp(jnp.ones((), jnp.float32))
+            return loss, du, dn, dx
+
+        def embed_bwd(embed, tokens, dx):
+            f = lambda e: e[tokens]
+            _, vjp = jax.vjp(f, embed)
+            return vjp(dx)[0]
+
+        self.j_layer_fwd = jax.jit(layer_fwd)
+        self.j_layer_bwd = jax.jit(layer_bwd)
+        self.j_embed = jax.jit(embed_fwd)
+        self.j_head_bwd = jax.jit(head_bwd)
+        self.j_embed_bwd = jax.jit(embed_bwd)
+        self.j_adam_dev = jax.jit(self._adam_device)
+
+    def _adam_device(self, p, m, v, g, step, lr):
+        b1, b2, eps = 0.9, 0.95, 1e-8
+        g = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        t = step.astype(jnp.float32)
+        up = (m2 / (1 - b1 ** t)) / (jnp.sqrt(v2 / (1 - b2 ** t)) + eps)
+        return (p.astype(jnp.float32) - lr * up).astype(p.dtype), m2, v2
+
+    # ------------------------------------------------------------------
+    def _mb_order(self, l: int) -> List[int]:
+        """Alternating micro-batch order between consecutive layers (§4.2)
+        so the boundary micro-batch's activations stay on device."""
+        M = self.ocfg.num_microbatches
+        return list(range(M)) if l % 2 == 0 else list(range(M - 1, -1, -1))
+
+    def train_step(self, tokens: np.ndarray) -> float:
+        if self.ocfg.schedule == "vertical":
+            return self._step_vertical(tokens)
+        return self._step_horizontal(tokens)
+
+    # ------------------------------------------------------------------
+    def _split_tokens(self, tokens):
+        M, mb = self.ocfg.num_microbatches, self.ocfg.micro_batch
+        assert tokens.shape[0] == M * mb
+        return tokens.reshape(M, mb, -1)
+
+    def _labels(self, tok_mb):
+        lab = np.concatenate([tok_mb[:, 1:], np.zeros((tok_mb.shape[0], 1),
+                                                      tok_mb.dtype)], 1)
+        w = np.ones(tok_mb.shape, np.float32)
+        w[:, -1] = 0.0
+        return jnp.asarray(lab), jnp.asarray(w)
+
+    def _step_vertical(self, tokens: np.ndarray) -> float:
+        ocfg = self.ocfg
+        M = ocfg.num_microbatches
+        mbs = self._split_tokens(tokens)
+        self.step_num += 1
+        step = self.step_num
+        denom = jnp.asarray(float(np.prod(tokens.shape) - tokens.shape[0]),
+                            jnp.float32)
+
+        # ---------- forward ----------
+        t0 = time.perf_counter()
+        # α-delayed flush must complete before each layer's params are read:
+        # submit the late-fraction updates and gate the prefetches on them.
+        if ocfg.alpha > 0 and step > 1:
+            for l in range(self.L):
+                self.opt_c.flush_late(l, step - 1)
+                self.params_c.set_gate(
+                    l, (lambda ll: lambda: self.opt_c.wait_late(ll))(l))
+        for m in self._mb_order(0):
+            x = self.j_embed(self.embed, jnp.asarray(mbs[m]))
+            self.ckpt_c.put_ckpt(0, m, x,
+                                 keep_on_device=(m == self._mb_order(0)[-1]))
+        self.params_c.prefetch(0)
+        for l in range(self.L):
+            p_dev = self.params_c.get(l)
+            self.params_c.prefetch(l + 1)
+            order = self._mb_order(l)
+            for m in order:
+                x = self.ckpt_c.get_ckpt_fwd(l, m)
+                y = self.j_layer_fwd(p_dev, x)
+                self.ckpt_c.put_ckpt(l + 1, m, y,
+                                     keep_on_device=(m == order[-1]))
+            del p_dev
+        jax.effects_barrier()
+        self.phase_time["fwd"] += time.perf_counter() - t0
+
+        # ---------- backward (+ overlapped optimizer) ----------
+        t0 = time.perf_counter()
+        loss_total = 0.0
+        # head: produce inter-layer grads dL/dx_L per micro-batch
+        order = self._mb_order(self.L)
+        d_un = jnp.zeros_like(self.unembed, dtype=jnp.float32)
+        d_nm = jnp.zeros_like(self.final_norm, dtype=jnp.float32)
+        for m in order:
+            x = self.ckpt_c.get_ckpt_fwd(self.L, m)   # head input
+            lab, w = self._labels(mbs[m])
+            loss, du, dn, dx = self.j_head_bwd(self.unembed, self.final_norm,
+                                               x, lab, w, denom)
+            loss_total += float(loss)
+            d_un += du
+            d_nm += dn
+            self.ckpt_c.put_grad(self.L, m, dx,
+                                 keep_on_device=(m == order[-1]))
+            self.ckpt_c.drop_ckpt(self.L, m)
+        self.params_c._futures.clear()
+        self.params_c.prefetch(self.L - 1)
+        d_embed = jnp.zeros_like(self.embed, dtype=jnp.float32)
+        for l in range(self.L - 1, -1, -1):
+            p_dev = self.params_c.get(l)
+            self.params_c.prefetch(l - 1)
+            gacc = jnp.zeros((self.P,), jnp.float32)
+            order = self._mb_order(l + 1)  # consume grads in producer order
+            for m in order:
+                x = self.ckpt_c.get_ckpt_bwd(l, m)
+                dy = self.ckpt_c.get_grad(l + 1, m)
+                dx, dp, _ = self.j_layer_bwd(p_dev, x, dy)
+                gacc = gacc + dp
+                self.ckpt_c.put_grad(l, m, dx,
+                                     keep_on_device=(m == order[-1]))
+                self.ckpt_c.drop_ckpt(l, m)
+            # fully-accumulated layer grads -> CPU, optimizer overlapped
+            self.opt_c.submit_early(l, gacc, step)
+            del p_dev
+        # embedding backward
+        for m in self._mb_order(0):
+            dx0 = self.ckpt_c.get_grad(0, m)
+            d_embed += self.j_embed_bwd(self.embed, jnp.asarray(mbs[m]), dx0)
+        self.phase_time["bwd"] += time.perf_counter() - t0
+
+        # head params update (device adam)
+        t0 = time.perf_counter()
+        for name, g in (("embed", d_embed), ("unembed", d_un),
+                        ("final_norm", d_nm)):
+            st = self.head_state[name]
+            p2, st["m"], st["v"] = self.j_adam_dev(
+                getattr(self, name), st["m"], st["v"], g,
+                jnp.asarray(step, jnp.int32), jnp.asarray(self.ocfg.lr))
+            setattr(self, name, p2)
+        if ocfg.alpha == 0:
+            self.opt_c.wait_all()
+        self.phase_time["opt_wait"] += time.perf_counter() - t0
+        return loss_total
+
+    # ------------------------------------------------------------------
+    def _step_horizontal(self, tokens: np.ndarray) -> float:
+        """ZeRO-Infinity-style baseline: per micro-batch full fwd+bwd with
+        the f32 accumulation buffer swapped through device memory."""
+        ocfg = self.ocfg
+        M = ocfg.num_microbatches
+        mbs = self._split_tokens(tokens)
+        self.step_num += 1
+        step = self.step_num
+        denom = jnp.asarray(float(np.prod(tokens.shape) - tokens.shape[0]),
+                            jnp.float32)
+        loss_total = 0.0
+        d_un = jnp.zeros_like(self.unembed, dtype=jnp.float32)
+        d_nm = jnp.zeros_like(self.final_norm, dtype=jnp.float32)
+        d_embed = jnp.zeros_like(self.embed, dtype=jnp.float32)
+
+        for m in range(M):
+            # -------- forward (activations stay on device within the mb) ----
+            t0 = time.perf_counter()
+            if ocfg.alpha > 0 and step > 1 and m == 0:
+                for l in range(self.L):
+                    self.opt_c.flush_late(l, step - 1)
+                    self.params_c.set_gate(
+                        l, (lambda ll: lambda: self.opt_c.wait_late(ll))(l))
+            x = self.j_embed(self.embed, jnp.asarray(mbs[m]))
+            self.params_c.prefetch(0)
+            for l in range(self.L):
+                p_dev = self.params_c.get(l)
+                self.params_c.prefetch(l + 1)
+                self.ckpt_c.put_ckpt(l, m, x)   # save layer INPUT for bwd
+                x = self.j_layer_fwd(p_dev, x)
+                del p_dev
+            self.phase_time["fwd"] += time.perf_counter() - t0
+
+            # -------- backward --------
+            t0 = time.perf_counter()
+            lab, w = self._labels(mbs[m])
+            loss, du, dn, dy = self.j_head_bwd(self.unembed, self.final_norm,
+                                               x, lab, w, denom)
+            loss_total += float(loss)
+            d_un += du
+            d_nm += dn
+            self.params_c._futures.clear()
+            self.params_c.prefetch(self.L - 1)
+            dy_dev = dy
+            for l in range(self.L - 1, -1, -1):
+                p_dev = self.params_c.get(l)
+                self.params_c.prefetch(l - 1)
+                xin = self.ckpt_c.get_ckpt_bwd(l, m)
+                dx, dp, _ = self.j_layer_bwd(p_dev, xin, dy_dev)
+                self.ckpt_c.drop_ckpt(l, m)
+                dy_dev = dx
+                # f32 grad-accum buffer swapped via CPU (the horizontal tax):
+                # mb 0 offloads; mb 1..M-2 fetch+offload; the last mb fetches
+                # and hands the sum to the optimizer => (2M-1) x 2ms total.
+                if m == 0:
+                    g = np.asarray(dp)
+                    self.meter.add("grad", "gpu->cpu", g.nbytes)
+                    self.host.put(f"gacc:{l}", g)
+                elif m < M - 1:
+                    g_host = self.host.get(f"gacc:{l}")
+                    self.meter.add("grad", "cpu->gpu", g_host.nbytes)
+                    g = np.asarray(dp + jnp.asarray(g_host))
+                    self.meter.add("grad", "gpu->cpu", g.nbytes)
+                    self.host.put(f"gacc:{l}", g)
+                else:
+                    g_host = self.host.pop(f"gacc:{l}")
+                    self.meter.add("grad", "cpu->gpu", g_host.nbytes)
+                    g_dev = dp + jnp.asarray(g_host)
+                    # optimizer overlaps only with this LAST micro-batch (§3.3)
+                    self.opt_c.submit_early(l, g_dev, step)
+                del p_dev
+            d_embed += self.j_embed_bwd(self.embed, jnp.asarray(mbs[m]), dy_dev)
+            self.phase_time["bwd"] += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        for name, g in (("embed", d_embed), ("unembed", d_un),
+                        ("final_norm", d_nm)):
+            st = self.head_state[name]
+            p2, st["m"], st["v"] = self.j_adam_dev(
+                getattr(self, name), st["m"], st["v"], g,
+                jnp.asarray(step, jnp.int32), jnp.asarray(self.ocfg.lr))
+            setattr(self, name, p2)
+        if ocfg.alpha == 0:
+            self.opt_c.wait_all()
+        self.phase_time["opt_wait"] += time.perf_counter() - t0
+        return loss_total
+
+    # ------------------------------------------------------------------
+    def finish(self):
+        """Flush any α-pending optimizer work (end of training)."""
+        for l in range(self.L):
+            self.opt_c.flush_late(l, self.step_num)
+            self.opt_c.wait_late(l)
+        self.opt_c.wait_all()
+
+    def traffic(self) -> Dict[str, int]:
+        return self.meter.snapshot()
+
+    def close(self):
+        self.io.shutdown(wait=True)
+        self.cpu.shutdown(wait=True)

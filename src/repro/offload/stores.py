@@ -1,0 +1,210 @@
+"""Three-tier tensor storage: device (jax) / host (numpy) / SSD (files).
+
+On this container the "GPU" tier is the jax CPU device and the SSD tier is
+the filesystem — the data movement, byte counters, and thread-overlap
+structure are real; only the device arithmetic rate differs from the
+paper's A100s. All traffic is metered by category so the engine's counters
+can be validated against the closed-form model in repro.core.traffic.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from collections import defaultdict
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+
+class TrafficMeter:
+    """Byte counters keyed by (category, route)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.bytes: Dict[Tuple[str, str], int] = defaultdict(int)
+
+    def add(self, category: str, route: str, n: int):
+        with self._lock:
+            self.bytes[(category, route)] += int(n)
+
+    def total(self, route_prefix: str = "") -> int:
+        return sum(v for (c, r), v in self.bytes.items()
+                   if r.startswith(route_prefix))
+
+    def by_category(self) -> Dict[str, int]:
+        out: Dict[str, int] = defaultdict(int)
+        for (c, r), v in self.bytes.items():
+            out[c] += v
+        return dict(out)
+
+    def snapshot(self) -> Dict[str, int]:
+        with self._lock:
+            return {f"{c}:{r}": v for (c, r), v in sorted(self.bytes.items())}
+
+    def reset(self):
+        with self._lock:
+            self.bytes.clear()
+
+
+class SSDStore:
+    """Flat binary files, one per tensor name."""
+
+    def __init__(self, root: str, meter: TrafficMeter):
+        self.root = root
+        self.meter = meter
+        os.makedirs(root, exist_ok=True)
+        self._shapes: Dict[str, Tuple[tuple, np.dtype]] = {}
+
+    def _path(self, name: str) -> str:
+        return os.path.join(self.root, name.replace("/", "_") + ".bin")
+
+    def write(self, name: str, arr: np.ndarray, category: str):
+        arr = np.ascontiguousarray(arr)
+        arr.tofile(self._path(name))
+        self._shapes[name] = (arr.shape, arr.dtype)
+        self.meter.add(category, "cpu->ssd", arr.nbytes)
+
+    def read(self, name: str, category: str, out: Optional[np.ndarray] = None
+             ) -> np.ndarray:
+        shape, dtype = self._shapes[name]
+        arr = np.fromfile(self._path(name), dtype=dtype).reshape(shape)
+        self.meter.add(category, "ssd->cpu", arr.nbytes)
+        if out is not None:
+            np.copyto(out, arr)
+            return out
+        return arr
+
+    def read_range(self, name: str, lo: int, hi: int, category: str
+                   ) -> np.ndarray:
+        """Partial read of elements [lo, hi) via seek — only the needed
+        fraction touches the device (the paper's chunked optimizer I/O)."""
+        _, dtype = self._shapes[name]
+        with open(self._path(name), "rb") as f:
+            f.seek(lo * dtype.itemsize)
+            arr = np.fromfile(f, dtype=dtype, count=hi - lo)
+        self.meter.add(category, "ssd->cpu", arr.nbytes)
+        return arr
+
+    def write_range(self, name: str, arr: np.ndarray, lo: int,
+                    category: str):
+        """Partial in-place write of elements [lo, lo+len) via seek."""
+        _, dtype = self._shapes[name]
+        arr = np.ascontiguousarray(arr, dtype=dtype)
+        with open(self._path(name), "r+b") as f:
+            f.seek(lo * dtype.itemsize)
+            f.write(arr.tobytes())
+        self.meter.add(category, "cpu->ssd", arr.nbytes)
+
+    def exists(self, name: str) -> bool:
+        return name in self._shapes
+
+    def nbytes(self) -> int:
+        return sum(int(np.prod(s)) * d.itemsize
+                   for s, d in self._shapes.values())
+
+
+class HostStore:
+    """Host ("pinned") buffers. Tracks resident bytes — the CPU-memory
+    budget the LP of Algorithm 1 constrains."""
+
+    def __init__(self, meter: TrafficMeter):
+        self.meter = meter
+        self._bufs: Dict[str, np.ndarray] = {}
+
+    def put(self, name: str, arr: np.ndarray):
+        self._bufs[name] = arr
+
+    def get(self, name: str) -> np.ndarray:
+        return self._bufs[name]
+
+    def pop(self, name: str) -> np.ndarray:
+        return self._bufs.pop(name)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._bufs
+
+    def nbytes(self) -> int:
+        return sum(a.nbytes for a in self._bufs.values())
+
+
+class TieredVector:
+    """A flat 1-D tensor split between host memory and SSD by a ratio
+    x in [0,1] (fraction host-resident): elements [0, k) live in host,
+    [k, n) on SSD — the paper's per-data-type storage ratio."""
+
+    def __init__(self, name: str, n: int, dtype, x_host: float,
+                 host: HostStore, ssd: SSDStore, category: str):
+        self.name = name
+        self.n = n
+        self.dtype = np.dtype(dtype)
+        self.k = int(round(x_host * n))
+        self.host = host
+        self.ssd = ssd
+        self.category = category
+
+    def write_full(self, arr: np.ndarray):
+        """Initial population (not counted as training traffic)."""
+        assert arr.shape == (self.n,) and arr.dtype == self.dtype
+        if self.k:
+            self.host.put(self.name + ":h", arr[:self.k].copy())
+        if self.k < self.n:
+            sub = arr[self.k:]
+            sub.tofile(self.ssd._path(self.name + ":s"))
+            self.ssd._shapes[self.name + ":s"] = (sub.shape, sub.dtype)
+
+    def read(self, out: Optional[np.ndarray] = None) -> np.ndarray:
+        """Assemble the full vector; SSD portion is metered."""
+        if out is None:
+            out = np.empty((self.n,), self.dtype)
+        if self.k:
+            np.copyto(out[:self.k], self.host.get(self.name + ":h"))
+        if self.k < self.n:
+            self.ssd.read(self.name + ":s", self.category, out=out[self.k:])
+        return out
+
+    def write(self, arr: np.ndarray, lo: int = 0, hi: Optional[int] = None):
+        """Write back elements [lo, hi); SSD portion is metered."""
+        hi = self.n if hi is None else hi
+        if lo < self.k:
+            h = min(hi, self.k)
+            np.copyto(self.host.get(self.name + ":h")[lo:h], arr[lo:h])
+        if hi > self.k:
+            lo_s = max(lo, self.k)
+            if lo_s == self.k and hi == self.n:
+                sub = np.ascontiguousarray(arr[self.k:])
+                sub.tofile(self.ssd._path(self.name + ":s"))
+                self.meter_write(sub.nbytes)
+            else:
+                # partial SSD write: seek-based, only [lo_s, hi) touches disk
+                self.ssd.write_range(self.name + ":s",
+                                     arr[lo_s:hi], lo_s - self.k,
+                                     self.category)
+
+    def write_seg(self, data: np.ndarray, lo: int):
+        """Write back the segment [lo, lo+len(data)) given only the
+        segment's data (no full-size staging buffer needed)."""
+        hi = lo + data.size
+        if lo < self.k:
+            h = min(hi, self.k)
+            np.copyto(self.host.get(self.name + ":h")[lo:h], data[:h - lo])
+        if hi > self.k:
+            lo_s = max(lo, self.k)
+            self.ssd.write_range(self.name + ":s", data[lo_s - lo:],
+                                 lo_s - self.k, self.category)
+
+    def read_range(self, lo: int, hi: int, out: Optional[np.ndarray] = None
+                   ) -> np.ndarray:
+        if out is None:
+            out = np.empty((hi - lo,), self.dtype)
+        if lo < self.k:
+            h = min(hi, self.k)
+            np.copyto(out[:h - lo], self.host.get(self.name + ":h")[lo:h])
+        if hi > self.k:
+            lo_s = max(lo, self.k)
+            seg = self.ssd.read_range(self.name + ":s", lo_s - self.k,
+                                      hi - self.k, self.category)
+            np.copyto(out[lo_s - lo:], seg)
+        return out
+
+    def meter_write(self, n: int):
+        self.ssd.meter.add(self.category, "cpu->ssd", n)

@@ -1,0 +1,15 @@
+from repro.optim.adam import (  # noqa: F401
+    AdamConfig,
+    AdamState,
+    apply_update,
+    clip_by_global_norm,
+    global_norm,
+    init_state,
+)
+from repro.optim.partial import (  # noqa: F401
+    DelayedAdamState,
+    apply_early,
+    flush_late,
+    init_delayed,
+)
+from repro.optim.cpu_adam import CpuAdam  # noqa: F401

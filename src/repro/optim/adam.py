@@ -1,0 +1,81 @@
+"""Mixed-precision Adam (paper §2.1/§2.2 conventions).
+
+Each weight element carries three full-precision optimizer states —
+master parameter, momentum, variance (the paper folds master params into
+"optimizer states"; so do we). Forward/backward use the low-precision
+(bf16) parameters; gradients are accumulated in f32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    master: Any   # f32 pytree (master parameters)
+    m: Any        # f32 pytree
+    v: Any        # f32 pytree
+    step: jax.Array  # int32 scalar
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+
+def init_state(params) -> AdamState:
+    f32 = lambda x: x.astype(jnp.float32)
+    zeros = lambda x: jnp.zeros(x.shape, jnp.float32)
+    return AdamState(
+        master=jax.tree.map(f32, params),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def _adam_update(p, g, m, v, step, cfg: AdamConfig):
+    g = g.astype(jnp.float32)
+    m2 = cfg.b1 * m + (1 - cfg.b1) * g
+    v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+    t = step.astype(jnp.float32)
+    mhat = m2 / (1 - cfg.b1 ** t)
+    vhat = v2 / (1 - cfg.b2 ** t)
+    p2 = p - cfg.lr * (mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p)
+    return p2, m2, v2
+
+
+def apply_update(state: AdamState, grads, cfg: AdamConfig,
+                 compute_dtype=jnp.bfloat16):
+    """Full optimizer step. Returns (new low-precision params, new state)."""
+    step = state.step + 1
+    flat_p, treedef = jax.tree.flatten(state.master)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [_adam_update(p, g, m, v, step, cfg)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    master = treedef.unflatten([o[0] for o in out])
+    m = treedef.unflatten([o[1] for o in out])
+    v = treedef.unflatten([o[2] for o in out])
+    params = jax.tree.map(lambda p: p.astype(compute_dtype), master)
+    return params, AdamState(master, m, v, step)
+
+
+def global_norm(grads) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                        for g in jax.tree.leaves(grads)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    """Returns (clipped grads, clip_coef<=1, raw norm)."""
+    n = global_norm(grads)
+    coef = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-12))
+    return jax.tree.map(lambda g: g.astype(jnp.float32) * coef, grads), coef, n

@@ -1,0 +1,100 @@
+"""α-delayed partial optimizer step (GreedySnake §4.4) as a JAX transform.
+
+Adam is element-wise, so each tensor can be partitioned into an "early"
+fraction (1-α), updated right after its layer's backward pass, and a
+"late" fraction α, deferred to just before the layer's forward pass in
+the NEXT iteration. Both fractions use the same gradients and the same
+step counter, so the composition is EXACTLY one standard Adam step —
+split in time, not in math (tests assert bit-equality in f32).
+
+The partition is a static flat-index split at k = round((1-α)·size) per
+leaf, mirroring the paper's chunk-granularity CPU optimizer (chunks need
+not align with layer boundaries, §2.2).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adam import AdamConfig, AdamState, _adam_update
+
+
+class DelayedAdamState(NamedTuple):
+    adam: AdamState
+    pending: Any          # f32 grads retained for the late fraction
+    has_pending: jax.Array  # bool scalar (first iteration has none)
+
+
+def init_delayed(adam_state: AdamState, grads_like) -> DelayedAdamState:
+    zeros = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+    return DelayedAdamState(adam_state, zeros, jnp.zeros((), bool))
+
+
+def _split_k(x, alpha: float) -> int:
+    return int(round((1.0 - alpha) * x.size))
+
+
+def _partial_leaf(p, g, m, v, step, cfg, lo: int, hi: int):
+    """Update flat elements [lo, hi) of one leaf; leave the rest."""
+    shape = p.shape
+    pf, gf = p.reshape(-1), g.reshape(-1)
+    mf, vf = m.reshape(-1), v.reshape(-1)
+    n = hi - lo
+    if n <= 0:
+        return p, m, v
+    ps = jax.lax.dynamic_slice_in_dim(pf, lo, n, 0)
+    gs = jax.lax.dynamic_slice_in_dim(gf, lo, n, 0)
+    ms = jax.lax.dynamic_slice_in_dim(mf, lo, n, 0)
+    vs = jax.lax.dynamic_slice_in_dim(vf, lo, n, 0)
+    p2, m2, v2 = _adam_update(ps, gs, ms, vs, step, cfg)
+    pf = jax.lax.dynamic_update_slice_in_dim(pf, p2, lo, 0)
+    mf = jax.lax.dynamic_update_slice_in_dim(mf, m2, lo, 0)
+    vf = jax.lax.dynamic_update_slice_in_dim(vf, v2, lo, 0)
+    return pf.reshape(shape), mf.reshape(shape), vf.reshape(shape)
+
+
+def _apply_fraction(state: AdamState, grads, cfg: AdamConfig, alpha: float,
+                    which: str, step) -> AdamState:
+    """Update the early [0,k) or late [k,size) fraction of every leaf."""
+    leaves_p, treedef = jax.tree.flatten(state.master)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_m = treedef.flatten_up_to(state.m)
+    leaves_v = treedef.flatten_up_to(state.v)
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(leaves_p, leaves_g, leaves_m, leaves_v):
+        k = _split_k(p, alpha)
+        lo, hi = (0, k) if which == "early" else (k, p.size)
+        p2, m2, v2 = _partial_leaf(p, g, m, v, step, cfg, lo, hi)
+        new_p.append(p2)
+        new_m.append(m2)
+        new_v.append(v2)
+    return AdamState(treedef.unflatten(new_p), treedef.unflatten(new_m),
+                     treedef.unflatten(new_v), state.step)
+
+
+def flush_late(state: DelayedAdamState, cfg: AdamConfig, alpha: float,
+               compute_dtype=jnp.bfloat16):
+    """Apply the deferred α fraction (start of next iteration's forward).
+
+    Returns (fully-updated low-precision params, DelayedAdamState)."""
+    def do(adam: AdamState) -> AdamState:
+        return _apply_fraction(adam, state.pending, cfg, alpha, "late",
+                               adam.step)
+
+    adam = jax.lax.cond(state.has_pending, do, lambda a: a, state.adam)
+    params = jax.tree.map(lambda p: p.astype(compute_dtype), adam.master)
+    return params, DelayedAdamState(adam, state.pending, jnp.zeros((), bool))
+
+
+def apply_early(state: DelayedAdamState, grads, cfg: AdamConfig, alpha: float,
+                compute_dtype=jnp.bfloat16):
+    """Apply the (1-α) fraction right after backward; retain grads for the
+    late fraction. Returns (partially-updated params, DelayedAdamState)."""
+    step = state.adam.step + 1
+    adam = _apply_fraction(state.adam._replace(step=step), grads, cfg,
+                           alpha, "early", step)
+    pending = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    params = jax.tree.map(lambda p: p.astype(compute_dtype), adam.master)
+    return params, DelayedAdamState(adam, pending, jnp.ones((), bool))

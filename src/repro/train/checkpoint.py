@@ -1,0 +1,62 @@
+"""Layerwise checkpoint save/restore (host .npz files).
+
+Parameters and optimizer state are flattened with stable key paths and
+written as one compressed npz per top-level group — the same layer-major
+layout the offload engine uses, so a training run can be resumed either
+in-memory or SSD-offloaded.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or str(arr.dtype) == "bfloat16":
+            # npz cannot round-trip ml_dtypes (bf16 loads back as raw
+            # void); store as f32 — lossless upcast, restore() casts
+            # back to the leaf dtype.
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save(path: str, params, opt_state=None, *, step: int = 0, meta: dict = None):
+    os.makedirs(path, exist_ok=True)
+    np.savez_compressed(os.path.join(path, "params.npz"), **_flatten(params))
+    if opt_state is not None:
+        np.savez_compressed(os.path.join(path, "opt.npz"), **_flatten(opt_state))
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump({"step": step, **(meta or {})}, f)
+
+
+def _unflatten_like(tree, flat: Dict[str, np.ndarray]):
+    leaves_p, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in leaves_p:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = flat[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        out.append(jnp.asarray(arr, leaf.dtype))
+    return jax.tree_util.tree_unflatten(jax.tree.structure(tree), out)
+
+
+def restore(path: str, params_like, opt_like=None) -> Tuple[Any, Any, int]:
+    with np.load(os.path.join(path, "params.npz")) as z:
+        params = _unflatten_like(params_like, dict(z))
+    opt = None
+    if opt_like is not None:
+        with np.load(os.path.join(path, "opt.npz")) as z:
+            opt = _unflatten_like(opt_like, dict(z))
+    with open(os.path.join(path, "meta.json")) as f:
+        step = json.load(f)["step"]
+    return params, opt, step

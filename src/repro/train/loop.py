@@ -1,0 +1,74 @@
+"""Trainer: jit'd train loop over the configured schedule."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.schedules import (ScheduleConfig, init_train_state,
+                                  make_delayed_train_step, make_train_step)
+from repro.data import SyntheticLM, make_batch
+from repro.optim import AdamConfig
+
+
+@dataclasses.dataclass
+class TrainReport:
+    losses: List[float]
+    steps_per_s: float
+    tokens_per_s: float
+
+
+class Trainer:
+    """End-to-end driver: synthetic data -> schedule -> Adam -> metrics."""
+
+    def __init__(self, cfg, sched: ScheduleConfig, adam: Optional[AdamConfig] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.sched = sched
+        self.adam = adam or AdamConfig()
+        self.key = jax.random.PRNGKey(seed)
+        self.data = SyntheticLM(cfg.vocab_size, seed=seed)
+        self.delayed = sched.alpha > 0.0
+        self.params, self.state = init_train_state(cfg, self.key,
+                                                   delayed=self.delayed)
+        if self.delayed:
+            step = make_delayed_train_step(cfg, sched, self.adam)
+            self._step = jax.jit(step)
+        else:
+            step = make_train_step(cfg, sched, self.adam)
+            self._step = jax.jit(step)
+        self.step_num = 0
+
+    def _next_batch(self, batch_size: int, seq_len: int) -> Dict[str, Any]:
+        b = make_batch(self.cfg, batch_size, seq_len,
+                       seed=self.step_num + 1, data=self.data)
+        return {k: jnp.asarray(v) for k, v in b.items()}
+
+    def run(self, steps: int, batch_size: int, seq_len: int,
+            log_every: int = 10, log=print) -> TrainReport:
+        losses = []
+        t0 = None
+        for i in range(steps):
+            batch = self._next_batch(batch_size, seq_len)
+            if self.delayed:
+                self.params, self.state, metrics = self._step(self.state, batch)
+            else:
+                self.params, self.state, metrics = self._step(
+                    self.params, self.state, batch)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            self.step_num += 1
+            if i == 0:
+                jax.block_until_ready(metrics["loss"])
+                t0 = time.perf_counter()  # exclude compile
+            if log_every and (i % log_every == 0 or i == steps - 1):
+                log(f"step {self.step_num:5d} loss {loss:8.4f} "
+                    f"gnorm {float(metrics['grad_norm']):8.3f}")
+        jax.block_until_ready(self.params)
+        dt = time.perf_counter() - (t0 or time.perf_counter())
+        sps = (steps - 1) / dt if steps > 1 and dt > 0 else 0.0
+        return TrainReport(losses, sps, sps * batch_size * seq_len)

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run on the single real CPU device. The dry-run (and ONLY the
+# dry-run, spawned as a subprocess) sets the 512-device XLA flag itself.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

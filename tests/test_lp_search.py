@@ -1,0 +1,92 @@
+"""Algorithm 1 behaviour tests."""
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.lp_search import find_optimal_config, solve_config
+from repro.core.perfmodel import (MachineParams, StorageRatios, Workload,
+                                  cpu_mem_vertical, delayed_grads_fit,
+                                  iteration_time_horizontal,
+                                  iteration_time_vertical, rooflines)
+
+
+M65 = MachineParams()
+
+
+def _w65(mb=2):
+    return Workload.from_config(get_config("gpt-65b"), micro_batch=mb,
+                                seq_len=2048)
+
+
+def test_lp_matches_bruteforce_grid():
+    """The LP optimum must match a dense grid search over x."""
+    w = _w65()
+    n, alpha = 8, 0.2
+    sol = solve_config(M65, w, n, alpha)
+    best = np.inf
+    grid = np.linspace(0, 1, 21)
+    for xc in grid:
+        for xp in grid:
+            for xo in grid:
+                x = StorageRatios(xc, xp, xo)
+                if cpu_mem_vertical(w, n, x, alpha) > 0.95 * M65.cpu_mem:
+                    continue
+                if not delayed_grads_fit(w, n, x, alpha):
+                    continue
+                t = iteration_time_vertical(w, M65, n, alpha, x)
+                best = min(best, t)
+    assert sol is not None
+    # grid is coarse; LP must be at least as good (within tolerance)
+    assert sol.iteration_time <= best * 1.02
+
+
+def test_throughput_monotone_then_saturates():
+    w = _w65()
+    res = find_optimal_config(M65, w, alphas=[0.0, 0.2, 0.4], max_n=64)
+    assert res is not None
+    assert res.n >= 2
+    # saturated throughput below compute roofline
+    _, comp_roof = rooflines(w, M65, res.x)
+    assert res.throughput_tokens_per_s <= comp_roof * 1.001
+
+
+def test_vertical_beats_horizontal_at_saturation():
+    """The headline claim: saturated vertical throughput exceeds the
+    horizontal schedule's by a wide margin for GPT-65B-scale models."""
+    w = _w65()
+    res = find_optimal_config(M65, w, alphas=[0.0, 0.2, 0.4], max_n=64)
+    tv = res.iteration_time / res.n
+    # horizontal gets its own best CPU-cache config (generous baseline)
+    th_best = np.inf
+    for M in (4, 8, 16, 32, 64):
+        th = iteration_time_horizontal(w, M65, M,
+                                       StorageRatios(0.0, 1.0, 0.0)) / M
+        th_best = min(th_best, th)
+    assert tv < th_best, (tv, th_best)
+    assert th_best / tv > 1.4   # paper: 1.9-2.5x on A100s
+
+
+def test_delay_ratio_helps_small_batch_and_converges():
+    """Fig. 11: delaying α of the optimizer step lifts the I/O-bound
+    (small-n) region toward the roofline; both curves converge to the
+    same saturated throughput at large n."""
+    w = _w65()
+
+    def tp(n, alpha):
+        sol = solve_config(M65, w, n, alpha)
+        return n * w.tokens_per_mb / sol.iteration_time
+
+    # The benefit window is the "knee" of the roofline (Fig. 11): once the
+    # forward stage turns compute-bound but the backward stage is still
+    # I/O-bound, delaying α of the optimizer step moves opt-state I/O into
+    # the forward stage's compute slack. Deep in the I/O-bound regime
+    # (tiny n: BOTH stages I/O-bound) moving I/O between stages cannot
+    # reduce the total — and the §4.4 reuse constraint can even make a
+    # FORCED α slightly harmful there (delayed grads displace opt-state
+    # caching). Algorithm 1's per-n argmax over α (which includes 0)
+    # therefore never loses.
+    knee_n = 16
+    assert tp(knee_n, 0.3) > tp(knee_n, 0.0) * 1.02
+    tiny_n = 4
+    assert tp(tiny_n, 0.3) <= tp(tiny_n, 0.0) * 1.01
+    big_n = 48
+    assert abs(tp(big_n, 0.3) - tp(big_n, 0.0)) / tp(big_n, 0.0) < 0.05

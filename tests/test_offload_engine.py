@@ -1,0 +1,102 @@
+"""End-to-end tests of the SSD-offload engine against the paper's
+traffic model and the schedule-equivalence identity."""
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.perfmodel import StorageRatios
+from repro.data import SyntheticLM
+from repro.offload import OffloadConfig, OffloadEngine
+
+CFG = get_config("gpt-tiny")
+M, MB, S = 4, 2, 64
+
+
+def _run(schedule, alpha=0.0, ratios=StorageRatios(0.5, 0.5, 0.0), steps=2,
+         seed=0):
+    with tempfile.TemporaryDirectory() as d:
+        eng = OffloadEngine(CFG, OffloadConfig(
+            schedule=schedule, num_microbatches=M, micro_batch=MB, seq_len=S,
+            alpha=alpha, ratios=ratios), jax.random.PRNGKey(7), d)
+        data = SyntheticLM(CFG.vocab_size, seed=seed)
+        eng.meter.reset()
+        losses = [eng.train_step(data.batch(M * MB, S)) for _ in range(steps)]
+        eng.finish()
+        routes = dict(eng.meter.bytes)
+        eng.close()
+        return losses, routes, eng
+
+
+def test_vertical_equals_horizontal_loss():
+    lv, _, _ = _run("vertical")
+    lh, _, _ = _run("horizontal")
+    np.testing.assert_allclose(lv, lh, atol=1e-4)
+
+
+@pytest.mark.parametrize("alpha", [0.2, 0.5])
+def test_alpha_delay_loss_identical(alpha):
+    l0, _, _ = _run("vertical", alpha=0.0)
+    la, _, _ = _run("vertical", alpha=alpha)
+    np.testing.assert_allclose(l0, la, atol=1e-4)
+
+
+def test_vertical_traffic_matches_formula():
+    """§3.4: params loaded 2x per iteration (GPU loads), grads moved once."""
+    _, routes, eng = _run("vertical", steps=3)
+    ms = eng.L * eng.P * 4          # f32 params bytes
+    # params: cpu->gpu == 2 * ms per iteration
+    assert routes[("param", "cpu->gpu")] == 3 * 2 * ms
+    # grads: gpu->cpu == 1 * ms (f32) per iteration, never fetched back
+    assert routes[("grad", "gpu->cpu")] == 3 * ms
+    assert ("grad", "cpu->gpu") not in routes
+
+
+def test_horizontal_traffic_matches_formula():
+    """§1: params 2M x ms; grad buffer (2M-1) x ms_f32."""
+    _, routes, eng = _run("horizontal", steps=3)
+    ms = eng.L * eng.P * 4
+    assert routes[("param", "cpu->gpu")] == 3 * 2 * M * ms
+    grad_total = routes[("grad", "gpu->cpu")] + routes[("grad", "cpu->gpu")]
+    assert grad_total == 3 * (2 * M - 1) * ms
+
+
+def test_vertical_param_traffic_independent_of_M():
+    """The core §3.4 claim: vertical parameter traffic does not scale
+    with the number of micro-batches."""
+    with tempfile.TemporaryDirectory() as d:
+        eng = OffloadEngine(CFG, OffloadConfig(
+            schedule="vertical", num_microbatches=8, micro_batch=1,
+            seq_len=S), jax.random.PRNGKey(7), d)
+        data = SyntheticLM(CFG.vocab_size, seed=0)
+        eng.meter.reset()
+        eng.train_step(data.batch(8, S))
+        eng.finish()
+        p8 = eng.meter.bytes[("param", "cpu->gpu")]
+        eng.close()
+    _, routes, eng2 = _run("vertical", steps=1)
+    assert p8 == routes[("param", "cpu->gpu")] == 2 * eng2.L * eng2.P * 4
+
+
+def test_ssd_files_actually_used():
+    """With x=0 everything lives on SSD: files must be read and written."""
+    _, routes, _ = _run("vertical", ratios=StorageRatios(0.0, 0.0, 0.0),
+                        steps=1)
+    assert routes[("param", "ssd->cpu")] > 0
+    assert routes[("opt", "ssd->cpu")] > 0
+    assert routes[("opt", "cpu->ssd")] > 0
+    assert routes[("ckpt", "cpu->ssd")] > 0
+
+
+def test_loss_decreases_offloaded():
+    with tempfile.TemporaryDirectory() as d:
+        eng = OffloadEngine(CFG, OffloadConfig(
+            schedule="vertical", num_microbatches=M, micro_batch=4,
+            seq_len=S, alpha=0.3, lr=3e-3), jax.random.PRNGKey(7), d)
+        data = SyntheticLM(CFG.vocab_size, seed=0)
+        losses = [eng.train_step(data.batch(M * 4, S)) for _ in range(25)]
+        eng.finish()
+        eng.close()
+    assert np.mean(losses[-5:]) < losses[0] - 0.5, losses

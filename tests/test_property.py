@@ -1,0 +1,145 @@
+"""Hypothesis property tests on the system's invariants (deliverable c)."""
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core.lp_search import solve_config
+from repro.core.perfmodel import MachineParams, Workload
+from repro.core.traffic import horizontal_traffic, vertical_traffic
+from repro.offload.buffers import naive_padded, pack
+
+
+# ---------------------------------------------------------------------------
+# Buffer packing DP (§5)
+# ---------------------------------------------------------------------------
+
+def _brute_force(n, size, max_log2=22):
+    """Exhaustive search over block multisets for small instances."""
+    blocks = []
+    b = 1
+    while b < size:
+        b <<= 1
+    while b <= (1 << max_log2):
+        blocks.append(b)
+        b <<= 1
+    best = [float("inf")]
+
+    def rec(remaining, total):
+        if total >= best[0]:
+            return
+        if remaining <= 0:
+            best[0] = min(best[0], total)
+            return
+        for blk in blocks:
+            rec(remaining - blk // size, total + blk)
+
+    rec(n, 0)
+    return best[0]
+
+
+@given(n=st.integers(1, 12), size=st.integers(1, 5000))
+@settings(max_examples=60, deadline=None)
+def test_pack_optimal_vs_bruteforce(n, size):
+    total, blks = pack(n, size, max_block_log2=22)
+    assert total == _brute_force(n, size)
+    # blocks really hold n buffers
+    assert sum(b // size for b in blks) >= n
+    # and never worse than naive per-buffer padding
+    assert total <= naive_padded(n, size)
+
+
+@given(n=st.integers(1, 64), size=st.integers(1, 10 ** 7))
+@settings(max_examples=60, deadline=None)
+def test_pack_feasible_and_bounded(n, size):
+    total, blks = pack(n, size)
+    assert sum(b // size for b in blks) >= n
+    assert total >= n * size
+    assert all(b & (b - 1) == 0 for b in blks)  # powers of two
+
+
+# ---------------------------------------------------------------------------
+# Traffic model (§1/§3.4)
+# ---------------------------------------------------------------------------
+
+@given(ms=st.floats(1e6, 1e12), cs=st.floats(1e4, 1e10),
+       M=st.integers(1, 64))
+@settings(max_examples=100, deadline=None)
+def test_vertical_param_traffic_constant_in_M(ms, cs, M):
+    v = vertical_traffic(ms, cs, M)
+    h = horizontal_traffic(ms, cs, M)
+    assert v.param_load == 2 * ms                  # independent of M
+    assert h.param_load == 2 * M * ms
+    assert v.grad_swap == 2 * ms
+    assert h.grad_swap == (2 * M - 1) * 2 * ms
+    # the crossover claim: once M >= 2, vertical moves fewer param+grad bytes
+    if M >= 2:
+        assert v.param_load + v.grad_swap < h.param_load + h.grad_swap
+
+
+@given(ms=st.floats(1e8, 1e11), cs_ratio=st.floats(0.01, 0.5),
+       M=st.integers(2, 32))
+@settings(max_examples=50, deadline=None)
+def test_vertical_total_traffic_wins_when_ckpt_small(ms, cs_ratio, M):
+    """§3.4: params scale quadratically vs checkpoints linearly => when
+    cs < ms/4 the vertical schedule moves fewer total bytes."""
+    cs = cs_ratio * ms
+    v = vertical_traffic(ms, cs, M)
+    h = horizontal_traffic(ms, cs, M)
+    if cs <= ms / 4:
+        assert v.total < h.total
+
+
+# ---------------------------------------------------------------------------
+# LP configuration search (Alg. 1)
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(1, 16), alpha=st.floats(0.0, 0.5),
+       cpu_gb=st.floats(16, 512))
+@settings(max_examples=40, deadline=None)
+def test_lp_solution_feasible(n, alpha, cpu_gb):
+    m = MachineParams(cpu_mem=cpu_gb * 1e9)
+    w = Workload(ms=20e9, cs=0.5e9, os_bytes=120e9, grad_bytes=40e9,
+                 flops_per_mb=2e9 * 2 * 4096, tokens_per_mb=4096)
+    sol = solve_config(m, w, n, alpha)
+    if sol is None:
+        return  # infeasible is a legal outcome for tiny DRAM
+    x = sol.x
+    assert -1e-6 <= x.ckpt <= 1 + 1e-6
+    assert -1e-6 <= x.param <= 1 + 1e-6
+    assert -1e-6 <= x.opt <= 1 + 1e-6
+    # CPU memory constraint honored (vertical: only transient layer grads)
+    used = (n * w.cs * x.ckpt + w.ms * x.param + w.os_bytes * x.opt
+            + w.grad_transient)
+    assert used <= 0.95 * m.cpu_mem + 1e6
+    # §4.4 reuse constraint: delayed grads fit in reclaimed param/ckpt mem
+    assert alpha * w.grad_bytes <= w.ms * x.param + n * w.cs * x.ckpt + 1e6
+    # t_f/t_b at least the GPU compute time
+    t_f1 = w.flops_per_mb / m.gpu_flops
+    assert sol.t_f >= n * t_f1 - 1e-9
+    assert sol.t_b >= 3 * n * t_f1 - 1e-9
+
+
+@given(seed=st.integers(0, 2 ** 16))
+@settings(max_examples=15, deadline=None)
+def test_delayed_adam_random_trees(seed):
+    """Random shapes/alphas: delayed == plain (f32)."""
+    from repro.optim import (AdamConfig, apply_early, apply_update,
+                             flush_late, init_delayed, init_state)
+    rng = np.random.default_rng(seed)
+    alpha = float(rng.uniform(0, 1))
+    shapes = [tuple(rng.integers(1, 9, size=rng.integers(1, 3)))
+              for _ in range(3)]
+    params = {f"p{i}": jnp.asarray(rng.standard_normal(s), jnp.float32)
+              for i, s in enumerate(shapes)}
+    g = {k: jnp.asarray(rng.standard_normal(v.shape), jnp.float32)
+         for k, v in params.items()}
+    cfg = AdamConfig(lr=1e-2)
+    p1, _ = apply_update(init_state(params), g, cfg, compute_dtype=jnp.float32)
+    dst = init_delayed(init_state(params), params)
+    _, dst = flush_late(dst, cfg, alpha, compute_dtype=jnp.float32)
+    _, dst = apply_early(dst, g, cfg, alpha, compute_dtype=jnp.float32)
+    p2, _ = flush_late(dst, cfg, alpha, compute_dtype=jnp.float32)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
