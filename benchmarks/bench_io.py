@@ -1,0 +1,132 @@
+"""Benchmark the `repro.io` transfer engine.
+
+Three measurements on the real filesystem of this container:
+
+1. **Striping** — single-path vs multi-path chunked writes/reads of one
+   large tensor (MLP-Offload's lever: once one path saturates, add
+   paths). On a 2-core container the win comes from overlapping the
+   per-path channel threads' memcpy+syscall work.
+2. **Bandwidth simulation** — a token-bucket cap on ``cpu->ssd`` /
+   ``ssd->cpu`` must reproduce the configured rate in wall-clock
+   (the knob that makes perfmodel rooflines testable here).
+3. **Perf-model plumbing** — ``machine_from_bandwidth`` +
+   ``transfer_seconds`` predictions vs the measured capped transfers.
+
+    PYTHONPATH=src python benchmarks/bench_io.py [--size-mb 256]
+        [--paths 1 2 4] [--chunk-kb 1024] [--cap-mbs 150] [--csv out.csv]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(__file__))
+from common import Reporter, gb  # noqa: E402
+
+from repro.core.perfmodel import machine_from_bandwidth, transfer_seconds
+from repro.io import IOConfig, IOEngine
+from repro.offload.stores import SSDStore, TrafficMeter
+
+
+def _store(root: str, n_paths: int, chunk: int, bandwidth=None) -> SSDStore:
+    paths = [os.path.join(root, f"nvme{i}") for i in range(n_paths)]
+    eng = IOEngine(IOConfig(paths=paths, chunk_bytes=chunk,
+                            bandwidth=bandwidth or {}))
+    return SSDStore(paths[0], TrafficMeter(), engine=eng)
+
+
+def _timed_write(ssd: SSDStore, name: str, arr: np.ndarray, reps: int = 3
+                 ) -> float:
+    best = float("inf")
+    for r in range(reps):
+        t0 = time.perf_counter()
+        ssd.write(f"{name}:{r}", arr, "opt")
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _timed_read(ssd: SSDStore, name: str, nbytes: int, reps: int = 3
+                ) -> float:
+    out = np.empty(nbytes, np.uint8)
+    best = float("inf")
+    for r in range(reps):
+        t0 = time.perf_counter()
+        ssd.read(f"{name}:{r % reps}", "opt", out=out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size-mb", type=int, default=256)
+    ap.add_argument("--paths", type=int, nargs="+", default=[1, 2, 4])
+    ap.add_argument("--chunk-kb", type=int, default=1024)
+    ap.add_argument("--cap-mbs", type=float, default=150.0)
+    ap.add_argument("--csv", default="")
+    args = ap.parse_args()
+
+    rep = Reporter()
+    nbytes = args.size_mb << 20
+    chunk = args.chunk_kb << 10
+    rng = np.random.default_rng(0)
+    arr = rng.integers(0, 255, nbytes, dtype=np.uint8)
+
+    # ---- 1. striping ----
+    rep.section(f"striped writes/reads, {args.size_mb} MB, "
+                f"chunk {args.chunk_kb} KB")
+    t_write, t_read = {}, {}
+    with tempfile.TemporaryDirectory(prefix="bench_io_") as root:
+        for P in args.paths:
+            ssd = _store(os.path.join(root, f"P{P}"), P, chunk)
+            t_write[P] = _timed_write(ssd, "x", arr)
+            t_read[P] = _timed_read(ssd, "x", nbytes)
+            rep.add(f"write_GBps_paths{P}", f"{nbytes / t_write[P] / 1e9:.2f}")
+            rep.add(f"read_GBps_paths{P}", f"{nbytes / t_read[P] / 1e9:.2f}")
+            ssd.close()
+    base = args.paths[0]
+    multi = [p for p in args.paths if p > 1]
+    if base == 1 and multi:
+        best = min(multi, key=lambda p: t_write[p])
+        speedup = t_write[1] / t_write[best]
+        rep.add("write_speedup_striped_vs_single", f"{speedup:.2f}",
+                f"best={best}-path; target >= 1.3x")
+        rd = t_read[1] / min(t_read[p] for p in multi)
+        rep.add("read_speedup_striped_vs_single", f"{rd:.2f}")
+
+    # ---- 2 + 3. bandwidth simulation vs perf model ----
+    cap = args.cap_mbs * 1e6
+    bw = {"cpu->ssd": cap, "ssd->cpu": 2 * cap}
+    m = machine_from_bandwidth(bw)
+    rep.section(f"token-bucket cap {args.cap_mbs:.0f} MB/s write, "
+                f"{2 * args.cap_mbs:.0f} MB/s read")
+    cap_bytes = min(nbytes, 64 << 20)
+    sub = arr[:cap_bytes]
+    with tempfile.TemporaryDirectory(prefix="bench_io_cap_") as root:
+        ssd = _store(root, 1, chunk, bandwidth=bw)
+        ssd.write("warm", sub[:4 << 20], "opt")       # settle fds/allocators
+        tw = _timed_write(ssd, "capped", sub, reps=2)
+        tr = _timed_read(ssd, "capped", cap_bytes, reps=2)
+        ssd.close()
+    for route, t_meas in (("cpu->ssd", tw), ("ssd->cpu", tr)):
+        t_pred = transfer_seconds(m, route, cap_bytes)
+        achieved = cap_bytes / t_meas
+        rep.add(f"sim_{route.replace('->', '_to_')}_MBps",
+                f"{achieved / 1e6:.1f}",
+                f"configured {bw[route] / 1e6:.0f}")
+        rep.add(f"sim_{route.replace('->', '_to_')}_vs_model",
+                f"{t_meas / t_pred:.3f}",
+                "measured/predicted seconds; target within +-20%")
+
+    rep.section("summary")
+    rep.add("bytes_benchmarked", gb(nbytes), "GB per striping config")
+    if args.csv:
+        rep.dump_csv(args.csv)
+
+
+if __name__ == "__main__":
+    main()

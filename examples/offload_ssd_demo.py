@@ -4,12 +4,19 @@ moved layer-by-layer through the vertical pipeline with overlapped
 CPU-Adam — the runnable counterpart of the paper's system.
 
     PYTHONPATH=src python examples/offload_ssd_demo.py [--schedule vertical]
+        [--io-paths 2] [--cap-ssd-mbs 500]
+
+Every byte flows through the `repro.io` engine: pass ``--io-paths N`` to
+stripe the SSD tier across N directories (MLP-Offload-style multi-path)
+and ``--cap-ssd-mbs`` to pace the SSD link with the token-bucket
+simulator, turning the perf model's rooflines into wall-clock effects.
 
 Prints per-iteration loss, the measured traffic by (category, route) —
-which matches the paper's closed-form §3.4 predictions — and the phase
-wall-times showing optimizer overlap.
+which matches the paper's closed-form §3.4 predictions — the I/O-engine
+scheduling stats, and the phase wall-times showing optimizer overlap.
 """
 import argparse
+import os
 import tempfile
 import time
 
@@ -19,8 +26,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.perfmodel import StorageRatios
 from repro.core.traffic import horizontal_traffic, vertical_traffic
+from repro.offload import IOConfig, OffloadConfig, OffloadEngine
 from repro.data import SyntheticLM
-from repro.offload import OffloadConfig, OffloadEngine
 
 
 def main() -> None:
@@ -32,18 +39,32 @@ def main() -> None:
     ap.add_argument("--micro-batch", type=int, default=2)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--alpha", type=float, default=0.25)
+    ap.add_argument("--io-paths", type=int, default=1,
+                    help="stripe the SSD tier across this many directories")
+    ap.add_argument("--chunk-kb", type=int, default=1024)
+    ap.add_argument("--cap-ssd-mbs", type=float, default=0.0,
+                    help="simulate an SSD bandwidth cap (MB/s, 0 = off)")
     args = ap.parse_args()
 
     cfg = get_config("gpt-tiny")
     M, mb = args.microbatches, args.micro_batch
     with tempfile.TemporaryDirectory(prefix="greedysnake_ssd_") as ssd:
-        print(f"SSD tier: {ssd}")
+        paths = [os.path.join(ssd, f"nvme{i}") for i in range(args.io_paths)]
+        bandwidth = {}
+        if args.cap_ssd_mbs > 0:
+            bandwidth = {"cpu->ssd": args.cap_ssd_mbs * 1e6,
+                         "ssd->cpu": args.cap_ssd_mbs * 1e6}
+        iocfg = IOConfig(paths=paths, chunk_bytes=args.chunk_kb << 10,
+                         bandwidth=bandwidth)
+        print(f"SSD tier: {args.io_paths} path(s) under {ssd}"
+              + (f", capped at {args.cap_ssd_mbs:.0f} MB/s" if bandwidth
+                 else ""))
         eng = OffloadEngine(cfg, OffloadConfig(
             schedule=args.schedule, num_microbatches=M, micro_batch=mb,
             seq_len=args.seq, alpha=args.alpha if args.schedule == "vertical"
             else 0.0, lr=3e-3,
-            ratios=StorageRatios(ckpt=0.5, param=0.5, opt=0.0)),
-            jax.random.PRNGKey(0), ssd)
+            ratios=StorageRatios(ckpt=0.5, param=0.5, opt=0.0),
+            io=iocfg), jax.random.PRNGKey(0), ssd)
         data = SyntheticLM(cfg.vocab_size, seed=0)
         eng.meter.reset()
         t0 = time.perf_counter()
@@ -65,6 +86,16 @@ def main() -> None:
         print(f"\npaper closed form (params+grads, per step): "
               f"load {pred.param_load / 1e9:.3f} GB + "
               f"grad {pred.grad_swap / 1e9:.3f} GB")
+        st = eng.stats()
+        io = st["io"]
+        print(f"\nio engine: {io['submitted']} requests "
+              f"({io['cancelled']} cancelled), {io['chunk_ops']} chunk ops "
+              f"over {io['num_paths']} path(s), "
+              f"peak in-flight {io['max_inflight_bytes'] / 1e6:.1f} MB")
+        print("  bytes by priority:",
+              {k: f"{v / 1e9:.3f} GB"
+               for k, v in io["bytes_by_priority"].items() if v})
+        print(f"host residency peak: {st['host_peak_nbytes'] / 1e6:.1f} MB")
         print("phase seconds:",
               {k: round(v, 2) for k, v in eng.phase_time.items()})
         eng.close()

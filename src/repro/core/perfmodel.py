@@ -32,6 +32,33 @@ class MachineParams:
     num_gpus: int = 1
 
 
+def machine_from_bandwidth(bandwidth, base: Optional[MachineParams] = None
+                           ) -> MachineParams:
+    """MachineParams whose link rates mirror a simulated-bandwidth map
+    (``repro.io.IOConfig.bandwidth``: route -> bytes/s). This is the
+    plumbing that lets the roofline/LP predictions be validated in
+    wall-clock against the I/O engine's token-bucket pacing: configure
+    caps, run the real engine, and compare measured times with this
+    machine's predictions (see ``benchmarks/bench_io.py``).
+
+    Takes a plain mapping (not an IOConfig) so ``repro.core`` stays
+    independent of ``repro.io``."""
+    base = base or MachineParams()
+    pcie = bandwidth.get("cpu->gpu", bandwidth.get("gpu->cpu", base.pcie_bw))
+    return dataclasses.replace(
+        base, name=f"{base.name}-simulated",
+        pcie_bw=float(pcie),
+        ssd_read_bw=float(bandwidth.get("ssd->cpu", base.ssd_read_bw)),
+        ssd_write_bw=float(bandwidth.get("cpu->ssd", base.ssd_write_bw)))
+
+
+def transfer_seconds(m: MachineParams, route: str, nbytes: float) -> float:
+    """Predicted wall-clock for moving ``nbytes`` over one route."""
+    bw = {"cpu->gpu": m.pcie_bw, "gpu->cpu": m.pcie_bw,
+          "ssd->cpu": m.ssd_read_bw, "cpu->ssd": m.ssd_write_bw}[route]
+    return nbytes / bw
+
+
 @dataclasses.dataclass(frozen=True)
 class Workload:
     """Per-GPU per-iteration quantities for one (model, mb, seq)."""

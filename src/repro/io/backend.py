@@ -1,0 +1,119 @@
+"""Chunked, striped flat-tensor files across N SSD paths.
+
+Layout (MLP-Offload-style round robin): a tensor of ``nbytes`` is cut
+into chunks of ``chunk_bytes``; chunk ``i`` lives on path ``i % P`` at
+file offset ``(i // P) * chunk_bytes`` of that path's stripe file
+(``<path>/<name>.s<p>.bin``). Only the globally-last chunk may be short,
+and it is the last chunk of its stripe file, so offsets never shift.
+
+All byte movement is positioned I/O (``pread``/``pwritev`` on cached
+fds), submitted as one chunk op per chunk on the owning path's channel —
+so a P-path store keeps P threads busy in parallel, and a
+higher-priority tensor's chunks overtake a lower-priority one's in each
+channel's heap. Bandwidth pacing (``cpu->ssd`` / ``ssd->cpu``) applies
+per chunk before the syscall.
+"""
+from __future__ import annotations
+
+import os
+import threading
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.io.engine import IOEngine, IOPriority
+
+
+def _mangle(name: str) -> str:
+    return name.replace("/", "_")
+
+
+class StripedFiles:
+    def __init__(self, engine: IOEngine):
+        self.engine = engine
+        self.paths = engine.paths
+        self.chunk = int(engine.chunk_bytes)
+        self._fds: Dict[Tuple[str, int], int] = {}
+        self._fd_lock = threading.Lock()
+
+    # ---------------- fd cache ----------------
+    def _fd(self, name: str, p: int) -> int:
+        key = (name, p)
+        with self._fd_lock:
+            fd = self._fds.get(key)
+            if fd is None:
+                path = os.path.join(self.paths[p],
+                                    _mangle(name) + f".s{p}.bin")
+                fd = os.open(path, os.O_RDWR | os.O_CREAT, 0o644)
+                self._fds[key] = fd
+            return fd
+
+    def _chunk_spans(self, byte_lo: int, byte_hi: int):
+        """Yield (path, file_offset, lo, hi) per chunk overlapping
+        [byte_lo, byte_hi) — lo/hi are tensor-relative byte offsets."""
+        P, C = len(self.paths), self.chunk
+        for c in range(byte_lo // C, (byte_hi + C - 1) // C):
+            lo = max(byte_lo, c * C)
+            hi = min(byte_hi, (c + 1) * C)
+            if lo < hi:
+                yield c % P, (c // P) * C + (lo - c * C), lo, hi
+
+    # ---------------- bulk ops ----------------
+    def _positioned(self, name: str, data_u8: np.ndarray, byte_lo: int,
+                    write: bool, route: str, priority: IOPriority):
+        """Chunked read into / write from ``data_u8`` (a uint8 view) that
+        occupies tensor bytes [byte_lo, byte_lo + data_u8.nbytes).
+        One channel op per chunk, so a higher-priority transfer's chunks
+        can overtake this one's mid-flight."""
+        nbytes = data_u8.nbytes
+        if nbytes == 0:
+            self._fd(name, 0)        # ensure the tensor exists on disk
+            return
+        byte_hi = byte_lo + nbytes
+        eng = self.engine
+        futs: List = []
+        for p, off, lo, hi in self._chunk_spans(byte_lo, byte_hi):
+            mv = memoryview(data_u8[lo - byte_lo:hi - byte_lo])
+
+            def op(p=p, off=off, mv=mv, n=hi - lo):
+                fd = self._fd(name, p)
+                eng.throttle(route, n)
+                if write:
+                    os.pwritev(fd, [mv], off)
+                else:
+                    got = os.preadv(fd, [mv], off)
+                    if got != n:
+                        raise IOError(
+                            f"short read on {name!r} path {p}: "
+                            f"{got}/{n} bytes at offset {off}")
+            futs.append(eng.submit_chunk(p, op, priority))
+        for f in futs:
+            f.result()
+
+    def write(self, name: str, data_u8: np.ndarray, byte_lo: int,
+              priority: IOPriority):
+        self._positioned(name, data_u8, byte_lo, write=True,
+                         route="cpu->ssd", priority=priority)
+
+    def readinto(self, name: str, out_u8: np.ndarray, byte_lo: int,
+                 priority: IOPriority):
+        self._positioned(name, out_u8, byte_lo, write=False,
+                         route="ssd->cpu", priority=priority)
+
+    def delete(self, name: str):
+        for p in range(len(self.paths)):
+            with self._fd_lock:
+                fd = self._fds.pop((name, p), None)
+            if fd is not None:
+                os.close(fd)
+            path = os.path.join(self.paths[p], _mangle(name) + f".s{p}.bin")
+            try:
+                os.unlink(path)
+            except FileNotFoundError:
+                pass
+
+    def close(self):
+        with self._fd_lock:
+            fds, self._fds = list(self._fds.values()), {}
+        for fd in fds:
+            os.close(fd)

@@ -1,0 +1,65 @@
+"""Token-bucket bandwidth pacing per transfer route.
+
+The container's filesystem is far faster than the SSDs the paper models,
+so byte counters alone cannot validate the perf model's *time*
+predictions. The simulator paces each configured route to a target
+bytes/s, turning `repro.core.perfmodel` rooflines into wall-clock
+observables (bench_io measures the achieved rate against the cap).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, Mapping, Optional
+
+
+class TokenBucket:
+    """Classic token bucket: ``rate`` bytes/s refill, ``burst`` bytes
+    capacity. ``consume(n)`` may overdraw the bucket and then sleeps off
+    the deficit, so the *aggregate* rate across any number of threads
+    converges to ``rate`` while short transfers keep sub-burst latency.
+    """
+
+    def __init__(self, rate: float, burst: Optional[float] = None):
+        if rate <= 0:
+            raise ValueError(f"TokenBucket rate must be > 0, got {rate}")
+        self.rate = float(rate)
+        self.burst = float(burst) if burst is not None else max(rate / 64.0,
+                                                                1 << 16)
+        self._tokens = self.burst
+        self._t = time.perf_counter()
+        self._lock = threading.Lock()
+
+    def consume(self, nbytes: int):
+        if nbytes <= 0:
+            return
+        with self._lock:
+            now = time.perf_counter()
+            self._tokens = min(self.burst,
+                               self._tokens + (now - self._t) * self.rate)
+            self._t = now
+            self._tokens -= nbytes
+            wait = -self._tokens / self.rate if self._tokens < 0 else 0.0
+        if wait > 0:
+            time.sleep(wait)
+
+
+class BandwidthSimulator:
+    """Per-route token buckets built from an ``IOConfig.bandwidth`` map.
+    Unconfigured routes pass through untouched."""
+
+    def __init__(self, caps: Mapping[str, float]):
+        self._buckets: Dict[str, TokenBucket] = {
+            route: TokenBucket(bw) for route, bw in caps.items() if bw}
+
+    def throttle(self, route: str, nbytes: int):
+        b = self._buckets.get(route)
+        if b is not None:
+            b.consume(nbytes)
+
+    def cap(self, route: str) -> Optional[float]:
+        b = self._buckets.get(route)
+        return b.rate if b is not None else None
+
+    def __bool__(self) -> bool:
+        return bool(self._buckets)

@@ -1,0 +1,48 @@
+"""Configuration for the async I/O engine (`repro.io.IOEngine`).
+
+Routes are named ``"src->dst"`` over the three tiers (``gpu``, ``cpu``,
+``ssd``) — the same strings the :class:`~repro.offload.stores.TrafficMeter`
+uses, so one config describes both the real transfer topology and the
+optional simulated bandwidth caps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class IOConfig:
+    """Knobs of the transfer engine.
+
+    * ``paths`` — SSD mount points (directories). More than one enables
+      MLP-Offload-style striping: chunk *i* of every tensor lands on path
+      ``i % len(paths)``, and each path has its own worker thread, so
+      transfers proceed in parallel across paths.
+    * ``chunk_bytes`` — stripe unit; also the staging-buffer size.
+    * ``inflight_bytes`` — backpressure budget: ``IOEngine.submit``
+      blocks while the bytes of queued+running requests would exceed it
+      (a single oversized request is admitted when the engine is idle).
+    * ``workers`` — request-level worker threads (chunk execution runs
+      on the per-path channel threads, not these). Keep >= 2: a
+      parameter-fetch request may *gate* on a lower-priority optimizer
+      request (the α-delay ordering), so at least one worker must stay
+      free to run the gating request.
+    * ``bandwidth`` — optional simulated caps, route -> bytes/s
+      (e.g. ``{"cpu->ssd": 2e9, "ssd->cpu": 4e9, "cpu->gpu": 24e9}``).
+      Empty dict = no pacing. Used to validate
+      :mod:`repro.core.perfmodel` rooflines in wall-clock.
+    * ``staging_buffers`` — host staging pool depth for asynchronous
+      spills (2 = classic double buffering).
+    """
+
+    paths: Optional[Sequence[str]] = None
+    chunk_bytes: int = 1 << 20
+    inflight_bytes: int = 1 << 30
+    workers: int = 4
+    bandwidth: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    staging_buffers: int = 2
+
+    def resolved_paths(self, default_root: str) -> Sequence[str]:
+        """The stripe directories, falling back to a single default."""
+        return list(self.paths) if self.paths else [default_root]

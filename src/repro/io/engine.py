@@ -1,0 +1,265 @@
+"""The asynchronous transfer engine all offload traffic flows through.
+
+Two scheduling levels, chosen so requests never deadlock on each other:
+
+* **Request level** — `IOEngine.submit` enqueues a whole logical
+  transfer (fetch layer-l params, spill a checkpoint tail, run one
+  layer's optimizer segment) on a priority heap drained by a small
+  worker pool. Priorities encode the critical path: a parameter fetch
+  the GPU is about to block on always jumps ahead of a deferrable
+  checkpoint spill.
+* **Chunk level** — request bodies issue fixed-size chunk operations on
+  the per-path channels (`submit_chunk`), one thread per SSD path, each
+  with its own priority heap. Channels never wait on anything, so they
+  always drain, so request workers always finish. The only permitted
+  request-on-request wait is a *gate* (α-delay ordering: a param fetch
+  waiting on an optimizer flush); keep ``workers >= 2`` so the gating
+  request can run while the gated one waits.
+
+Backpressure is a bounded in-flight byte budget charged at submit and
+released at completion/cancellation. Cancellation is
+best-effort-before-start (`IORequest.cancel`), which is exactly what a
+schedule reset needs: queued prefetches die, a running one is drained.
+"""
+from __future__ import annotations
+
+import enum
+import heapq
+import itertools
+import os
+import threading
+from concurrent.futures import CancelledError, Future
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.io.bandwidth import BandwidthSimulator
+from repro.io.config import IOConfig
+from repro.io.staging import StagingPool
+
+
+class IOPriority(enum.IntEnum):
+    """Lower value = more urgent (GreedySnake's critical-path order)."""
+    PARAM_FETCH = 0
+    INTER_LAYER_GRAD = 1
+    OPTIMIZER_STATE = 2
+    CKPT_SPILL = 3
+
+
+#: Default priority for a given traffic-meter category.
+CATEGORY_PRIORITY: Dict[str, IOPriority] = {
+    "param": IOPriority.PARAM_FETCH,
+    "inter_grad": IOPriority.INTER_LAYER_GRAD,
+    "grad": IOPriority.INTER_LAYER_GRAD,
+    "opt": IOPriority.OPTIMIZER_STATE,
+    "ckpt": IOPriority.CKPT_SPILL,
+}
+
+
+class IORequest:
+    """A scheduled transfer: callable + priority + accounting metadata.
+    ``result()/cancel()/done()`` delegate to the underlying future."""
+
+    __slots__ = ("priority", "seq", "category", "route", "nbytes", "fn",
+                 "future", "_engine", "_accounted")
+
+    def __init__(self, priority: int, seq: int, category: str, route: str,
+                 nbytes: int, fn: Callable, engine: Optional["IOEngine"]):
+        self.priority = int(priority)
+        self.seq = seq
+        self.category = category
+        self.route = route
+        self.nbytes = int(nbytes)
+        self.fn = fn
+        self.future: Future = Future()
+        self._engine = engine
+        self._accounted = False
+
+    def __lt__(self, other: "IORequest") -> bool:
+        return (self.priority, self.seq) < (other.priority, other.seq)
+
+    def result(self, timeout: Optional[float] = None):
+        return self.future.result(timeout)
+
+    def _settle_once(self) -> bool:
+        """The budget/stat settlement must happen exactly once per
+        request (cancel() on an already-cancelled Future returns True
+        again, and completion follows a failed cancel)."""
+        if self._accounted:
+            return False
+        self._accounted = True
+        return True
+
+    def cancel(self) -> bool:
+        ok = self.future.cancel()
+        if ok and self._engine is not None and self._settle_once():
+            self._engine._on_cancelled(self)
+        return ok
+
+    def done(self) -> bool:
+        return self.future.done()
+
+    def cancelled(self) -> bool:
+        return self.future.cancelled()
+
+
+class _PriorityWorkers:
+    """N threads draining a priority heap of IORequests."""
+
+    def __init__(self, n: int, name: str):
+        self._heap: List[IORequest] = []
+        self._cv = threading.Condition()
+        self._closed = False
+        self._threads = [threading.Thread(target=self._run,
+                                          name=f"{name}-{i}", daemon=True)
+                         for i in range(n)]
+        for t in self._threads:
+            t.start()
+
+    def submit(self, req: IORequest):
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("I/O engine is shut down")
+            heapq.heappush(self._heap, req)
+            self._cv.notify()
+
+    def _run(self):
+        while True:
+            with self._cv:
+                while not self._heap and not self._closed:
+                    self._cv.wait()
+                if not self._heap:
+                    return                       # closed and drained
+                req = heapq.heappop(self._heap)
+            if not req.future.set_running_or_notify_cancel():
+                continue                         # cancelled while queued
+            try:
+                req.future.set_result(req.fn())
+            except BaseException as e:           # propagate via the future
+                req.future.set_exception(e)
+            finally:
+                if req._engine is not None and req._settle_once():
+                    req._engine._on_done(req)
+
+    def shutdown(self, wait: bool = True):
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        if wait:
+            for t in self._threads:
+                t.join()
+
+
+class IOEngine:
+    """Priority-scheduled, budgeted, optionally bandwidth-paced transfers
+    across one or more SSD paths. See the module docstring."""
+
+    def __init__(self, config: IOConfig = IOConfig(), meter=None,
+                 default_root: Optional[str] = None):
+        paths = config.resolved_paths(default_root) if (
+            config.paths or default_root) else None
+        if not paths:
+            raise ValueError("IOConfig.paths must name at least one "
+                             "directory (or pass default_root)")
+        for p in paths:
+            os.makedirs(p, exist_ok=True)
+        self.config = config
+        self.paths: Sequence[str] = list(paths)
+        self.meter = meter
+        self.chunk_bytes = int(config.chunk_bytes)
+        self.simulator = BandwidthSimulator(config.bandwidth)
+        self.staging = StagingPool(config.staging_buffers,
+                                   max(self.chunk_bytes, 1 << 20))
+        self._seq = itertools.count()
+        self._front = _PriorityWorkers(max(1, config.workers), "io-req")
+        self._channels = [_PriorityWorkers(1, f"io-path{i}")
+                          for i in range(len(self.paths))]
+        self._budget = int(config.inflight_bytes)
+        self._inflight = 0
+        self._bp_cv = threading.Condition()
+        self._closed = False
+        self._stats_lock = threading.Lock()
+        self._stats = {
+            "submitted": 0, "completed": 0, "cancelled": 0, "chunk_ops": 0,
+            "max_inflight_bytes": 0,
+            "bytes_by_priority": {p.name: 0 for p in IOPriority},
+        }
+
+    # ---------------- request level ----------------
+    def submit(self, fn: Callable, *, priority: IOPriority,
+               category: str = "", route: str = "", nbytes: int = 0
+               ) -> IORequest:
+        """Schedule ``fn()`` with the given priority. Blocks while the
+        in-flight byte budget is exhausted (backpressure); a request
+        larger than the whole budget is admitted once the engine drains.
+        """
+        nbytes = int(nbytes)
+        with self._bp_cv:
+            while (not self._closed and self._inflight > 0
+                   and self._inflight + nbytes > self._budget):
+                self._bp_cv.wait()
+            if self._closed:
+                raise RuntimeError("I/O engine is shut down")
+            self._inflight += nbytes
+            with self._stats_lock:
+                self._stats["submitted"] += 1
+                self._stats["max_inflight_bytes"] = max(
+                    self._stats["max_inflight_bytes"], self._inflight)
+        req = IORequest(priority, next(self._seq), category, route, nbytes,
+                        fn, self)
+        try:
+            self._front.submit(req)
+        except RuntimeError:
+            self._release_bytes(nbytes)
+            raise
+        return req
+
+    def _release_bytes(self, nbytes: int):
+        with self._bp_cv:
+            self._inflight -= nbytes
+            self._bp_cv.notify_all()
+
+    def _on_done(self, req: IORequest):
+        self._release_bytes(req.nbytes)
+        with self._stats_lock:
+            self._stats["completed"] += 1
+            self._stats["bytes_by_priority"][IOPriority(req.priority).name] \
+                += req.nbytes
+
+    def _on_cancelled(self, req: IORequest):
+        self._release_bytes(req.nbytes)
+        with self._stats_lock:
+            self._stats["cancelled"] += 1
+
+    # ---------------- chunk level ----------------
+    def submit_chunk(self, path_index: int, fn: Callable,
+                     priority: IOPriority) -> Future:
+        """Enqueue one chunk operation on a path channel. Channels are
+        leaf workers: ``fn`` must not wait on other engine work."""
+        req = IORequest(priority, next(self._seq), "", "", 0, fn, None)
+        with self._stats_lock:
+            self._stats["chunk_ops"] += 1
+        self._channels[path_index].submit(req)
+        return req.future
+
+    # ---------------- accounting ----------------
+    def throttle(self, route: str, nbytes: int):
+        """Pace a transfer on a simulated-bandwidth route (no-op when the
+        route has no configured cap)."""
+        self.simulator.throttle(route, nbytes)
+
+    def stats(self) -> dict:
+        with self._stats_lock:
+            s = {k: (dict(v) if isinstance(v, dict) else v)
+                 for k, v in self._stats.items()}
+        s["inflight_bytes"] = self._inflight
+        s["num_paths"] = len(self.paths)
+        s["staging_oversized_allocs"] = self.staging.oversized_allocs
+        return s
+
+    # ---------------- lifecycle ----------------
+    def shutdown(self, wait: bool = True):
+        with self._bp_cv:
+            self._closed = True
+            self._bp_cv.notify_all()
+        self._front.shutdown(wait)
+        for ch in self._channels:
+            ch.shutdown(wait)

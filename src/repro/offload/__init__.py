@@ -1,3 +1,4 @@
+from repro.io import IOConfig, IOEngine, IOPriority  # noqa: F401
 from repro.offload.engine import OffloadConfig, OffloadEngine  # noqa: F401
 from repro.offload.stores import (HostStore, SSDStore, TieredVector,  # noqa: F401
                                   TrafficMeter)

@@ -2,7 +2,9 @@
 
 * ParameterCoordinator — per-layer low-precision params in tiered storage;
   two-stage prefetch (§4.2): SSD->CPU staged two pipeline stages ahead,
-  CPU->device one stage ahead (async thread), device copy dropped after use.
+  CPU->device one stage ahead (async engine request), device copy dropped
+  after use. ``reset()`` cancels in-flight fetches via the I/O engine's
+  cancellation API at a schedule boundary.
 * InterLayerTensorCoordinator — activation checkpoints (forward) and
   inter-layer gradients (backward). Checkpoints are written to CPU and the
   (1-x_c) tail streamed to SSD; the forward-pass consumer reads the CPU
@@ -15,28 +17,41 @@
   next forward (§4.4). Gradients for the α fraction are retained in CPU
   memory (the paper reuses reclaimed param/ckpt buffers; we meter the
   bytes the same way).
+
+All three submit their asynchronous work to :class:`repro.io.IOEngine`
+rather than raw executors, so a parameter fetch the GPU is about to
+block on is scheduled ahead of a deferrable checkpoint spill, and every
+transfer is budgeted, cancellable, and (optionally) bandwidth-paced.
 """
 from __future__ import annotations
 
-import threading
-from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Callable, Dict, List, Optional, Tuple
+from concurrent.futures import CancelledError
+from typing import Callable, Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.io import IOEngine, IOPriority, IORequest
 from repro.offload.stores import HostStore, SSDStore, TieredVector, TrafficMeter
 from repro.optim.cpu_adam import CpuAdam
 
 
+def _xfer(meter: TrafficMeter, engine: IOEngine, category: str, route: str,
+          nbytes: int):
+    """Meter + (optionally) pace one device-side copy — the single place
+    the meter.add/throttle pair lives for non-chunked transfers."""
+    meter.add(category, route, nbytes)
+    engine.throttle(route, nbytes)
+
+
 class ParameterCoordinator:
     def __init__(self, vectors: List[TieredVector], meter: TrafficMeter,
-                 io: ThreadPoolExecutor, dtype=np.float16):
+                 engine: IOEngine, dtype=np.float16):
         self.vectors = vectors
         self.meter = meter
-        self.io = io
-        self._futures: Dict[int, Future] = {}
+        self.engine = engine
+        self._futures: Dict[int, IORequest] = {}
         self._gate: Dict[int, Callable[[], None]] = {}
 
     def set_gate(self, l: int, fn: Callable[[], None]):
@@ -50,17 +65,33 @@ class ParameterCoordinator:
             gate()
         host_arr = self.vectors[l].read()          # meters ssd->cpu
         dev = jnp.asarray(host_arr)                 # "PCIe" copy
-        self.meter.add("param", "cpu->gpu", host_arr.nbytes)
+        _xfer(self.meter, self.engine, "param", "cpu->gpu", host_arr.nbytes)
         return dev
 
     def prefetch(self, l: int):
         if 0 <= l < len(self.vectors) and l not in self._futures:
-            self._futures[l] = self.io.submit(self._fetch, l)
+            v = self.vectors[l]
+            self._futures[l] = self.engine.submit(
+                lambda l=l: self._fetch(l),
+                priority=IOPriority.PARAM_FETCH, category="param",
+                route="ssd->cpu", nbytes=v.n * v.dtype.itemsize)
 
     def get(self, l: int) -> jax.Array:
         if l not in self._futures:
             self.prefetch(l)
         return self._futures.pop(l).result()
+
+    def reset(self):
+        """Drop all outstanding prefetches at a schedule boundary:
+        queued requests are cancelled before they touch storage; a
+        running one is drained so its buffers settle."""
+        for req in self._futures.values():
+            if not req.cancel():
+                try:
+                    req.result()
+                except CancelledError:
+                    pass
+        self._futures.clear()
 
 
 class InterLayerTensorCoordinator:
@@ -68,13 +99,13 @@ class InterLayerTensorCoordinator:
     x_c = CPU-resident fraction; the tail beyond k goes to SSD."""
 
     def __init__(self, x_cpu: float, host: HostStore, ssd: SSDStore,
-                 meter: TrafficMeter, io: ThreadPoolExecutor):
+                 meter: TrafficMeter, engine: IOEngine):
         self.x = x_cpu
         self.host = host
         self.ssd = ssd
         self.meter = meter
-        self.io = io
-        self._pending: Dict[Tuple[str, int, int], Future] = {}
+        self.engine = engine
+        self._pending: Dict[Tuple[str, int, int], IORequest] = {}
         self._shapes: Dict[Tuple[str, int, int], tuple] = {}
         self._device_kept: Dict[Tuple[int, int], jax.Array] = {}
 
@@ -88,16 +119,19 @@ class InterLayerTensorCoordinator:
         if keep_on_device:
             self._device_kept[(l, m)] = y_dev
         arr = np.asarray(y_dev).reshape(-1)
-        self.meter.add("ckpt", "gpu->cpu", arr.nbytes)
+        _xfer(self.meter, self.engine, "ckpt", "gpu->cpu", arr.nbytes)
         self._shapes[("c", l, m)] = y_dev.shape
         k = int(round(self.x * arr.size))
         name = self._key("c", l, m)
         self.host.put(name + ":h", arr[:k].copy())
         self.host.put(name + ":tail", arr[k:].copy())  # CPU cache until consumed
         if k < arr.size:
-            tail = arr[k:].copy()
-            self._pending[("c", l, m)] = self.io.submit(
-                self.ssd.write, name + ":s", tail, "ckpt")
+            old = self._pending.pop(("c", l, m), None)
+            if old is not None:
+                old.result()    # never two in-flight spills of one name
+            # spill via the staging pool: lowest priority, cancellable
+            self._pending[("c", l, m)] = self.ssd.write_async(
+                name + ":s", arr[k:], "ckpt")
 
     def get_ckpt_fwd(self, l: int, m: int) -> jax.Array:
         """Next-layer forward input: device-kept or CPU cache (no SSD read).
@@ -108,16 +142,16 @@ class InterLayerTensorCoordinator:
         head = self.host.get(name + ":h")
         tail = self.host.pop(name + ":tail")   # consume CPU cache
         arr = np.concatenate([head, tail])
-        self.meter.add("ckpt", "cpu->gpu", arr.nbytes)
+        _xfer(self.meter, self.engine, "ckpt", "cpu->gpu", arr.nbytes)
         return jnp.asarray(arr).reshape(self._shapes[("c", l, m)])
 
     def get_ckpt_bwd(self, l: int, m: int) -> jax.Array:
         """Backward recompute input: CPU head + SSD tail."""
         self._device_kept.pop((l, m), None)
         name = self._key("c", l, m)
-        fut = self._pending.pop(("c", l, m), None)
-        if fut is not None:
-            fut.result()
+        req = self._pending.pop(("c", l, m), None)
+        if req is not None:
+            req.result()
         head = self.host.get(name + ":h")
         shape = self._shapes[("c", l, m)]
         n = int(np.prod(shape))
@@ -129,10 +163,25 @@ class InterLayerTensorCoordinator:
             arr = np.concatenate([head, tail])
         else:
             arr = head
-        self.meter.add("ckpt", "cpu->gpu", arr.nbytes)
+        _xfer(self.meter, self.engine, "ckpt", "cpu->gpu", arr.nbytes)
         return jnp.asarray(arr).reshape(shape)
 
+    def wait_pending(self):
+        """Drain all outstanding checkpoint spills (engine teardown)."""
+        for req in list(self._pending.values()):
+            try:
+                req.result()
+            except CancelledError:
+                pass
+        self._pending.clear()
+
     def drop_ckpt(self, l: int, m: int):
+        # A ckpt consumed only via get_ckpt_fwd (the head layer) still has
+        # its SSD spill in flight: drain it so no orphan write can race a
+        # next-step spill of the same name and counters stay deterministic.
+        req = self._pending.pop(("c", l, m), None)
+        if req is not None:
+            req.result()
         name = self._key("c", l, m)
         self.host.pop(name + ":h") if name + ":h" in self.host else None
         if name + ":tail" in self.host:
@@ -145,7 +194,7 @@ class InterLayerTensorCoordinator:
             self._device_kept[(-l - 1, m)] = dx_dev
             return
         arr = np.asarray(dx_dev)
-        self.meter.add("inter_grad", "gpu->cpu", arr.nbytes)
+        _xfer(self.meter, self.engine, "inter_grad", "gpu->cpu", arr.nbytes)
         self._shapes[("g", l, m)] = dx_dev.shape
         self.host.put(self._key("g", l, m), arr)
 
@@ -153,28 +202,31 @@ class InterLayerTensorCoordinator:
         if (-l - 1, m) in self._device_kept:
             return self._device_kept.pop((-l - 1, m))
         arr = self.host.pop(self._key("g", l, m))
-        self.meter.add("inter_grad", "cpu->gpu", arr.nbytes)
+        _xfer(self.meter, self.engine, "inter_grad", "cpu->gpu", arr.nbytes)
         return jnp.asarray(arr).reshape(self._shapes[("g", l, m)])
 
 
 class OptimizerStepCoordinator:
-    """Per-layer Adam over tiered f32 state vectors with α-delay."""
+    """Per-layer Adam over tiered f32 state vectors with α-delay.
+    Each layer's update runs as an OPTIMIZER_STATE-priority engine
+    request: its tiered-vector reads/writes become chunked channel ops
+    that yield to parameter fetches on the same SSD paths."""
 
     def __init__(self, masters: List[TieredVector], ms: List[TieredVector],
                  vs: List[TieredVector], params: List[TieredVector],
                  host: HostStore, meter: TrafficMeter,
-                 cpu: ThreadPoolExecutor, adam: CpuAdam, alpha: float,
+                 engine: IOEngine, adam: CpuAdam, alpha: float,
                  param_dtype=np.dtype("bfloat16")):
         self.masters, self.ms, self.vs = masters, ms, vs
         self.params = params
         self.host = host
         self.meter = meter
-        self.cpu = cpu
+        self.engine = engine
         self.adam = adam
         self.alpha = alpha
         self.param_dtype = param_dtype
-        self._early_futs: Dict[int, Future] = {}
-        self._late_futs: Dict[int, Future] = {}
+        self._early_futs: Dict[int, IORequest] = {}
+        self._late_futs: Dict[int, IORequest] = {}
 
     def _k_early(self, l: int) -> int:
         return int(round((1.0 - self.alpha) * self.masters[l].n))
@@ -183,7 +235,7 @@ class OptimizerStepCoordinator:
         """After layer l's backward: transfer grads, update the (1-α)
         fraction, retain grads for the α fraction (CPU-resident)."""
         g = np.asarray(g_dev).astype(np.float32)
-        self.meter.add("grad", "gpu->cpu", g.nbytes)
+        _xfer(self.meter, self.engine, "grad", "gpu->cpu", g.nbytes)
 
         def work():
             n = self.masters[l].n
@@ -201,7 +253,9 @@ class OptimizerStepCoordinator:
             if k < n:
                 self.host.put(f"pending_grad:{l}", g[k:].copy())
 
-        self._early_futs[l] = self.cpu.submit(work)
+        self._early_futs[l] = self.engine.submit(
+            work, priority=IOPriority.OPTIMIZER_STATE, category="opt",
+            route="cpu->ssd", nbytes=g.nbytes)
 
     def _write_range(self, vec: TieredVector, data: np.ndarray, lo: int, hi: int):
         vec.write_seg(data, lo)
@@ -230,7 +284,9 @@ class OptimizerStepCoordinator:
             self._write_range(self.vs[l], v_, k, n)
             self._write_range(self.params[l], mast.astype(self.params[l].dtype), k, n)
 
-        self._late_futs[l] = self.cpu.submit(work)
+        self._late_futs[l] = self.engine.submit(
+            work, priority=IOPriority.OPTIMIZER_STATE, category="opt",
+            route="cpu->ssd", nbytes=g_tail.nbytes)
 
     def wait_late(self, l: int):
         f = self._late_futs.pop(l, None)

@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from concurrent.futures import ThreadPoolExecutor
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -31,12 +30,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.perfmodel import StorageRatios
+from repro.io import IOConfig, IOEngine
 from repro.models import blocks as blk
 from repro.models.common import rms_norm
 from repro.models.model import _xent_chunk, labels_and_weights
 from repro.offload.coordinators import (InterLayerTensorCoordinator,
                                         OptimizerStepCoordinator,
-                                        ParameterCoordinator)
+                                        ParameterCoordinator, _xfer)
 from repro.offload.stores import HostStore, SSDStore, TieredVector, TrafficMeter
 from repro.optim.cpu_adam import CpuAdam
 
@@ -52,6 +52,8 @@ class OffloadConfig:
     lr: float = 1e-3
     io_workers: int = 4
     param_dtype: str = "float32"        # f32 => bit-exact vs in-memory ref
+    io: Optional[IOConfig] = None       # paths/chunking/budget/bandwidth
+                                        # (None: single path = the workdir)
 
 
 def _flatten_tree(tree) -> Tuple[np.ndarray, list, list]:
@@ -85,10 +87,18 @@ class OffloadEngine:
         self.dtype = jnp.dtype(ocfg.param_dtype)
         self.meter = TrafficMeter()
         self.host = HostStore(self.meter)
-        self.ssd = SSDStore(workdir, self.meter)
-        self.io = ThreadPoolExecutor(max_workers=ocfg.io_workers)
-        self.cpu = ThreadPoolExecutor(max_workers=2)
+        # All offload traffic flows through one IOEngine. A gated param
+        # fetch may wait on an optimizer request, and two fetches can be
+        # gated at once, so the engine needs at least 3 request workers
+        # or the α-delay gate discipline can deadlock.
+        iocfg = ocfg.io if ocfg.io is not None else \
+            IOConfig(workers=ocfg.io_workers)
+        if iocfg.workers < 3:
+            iocfg = dataclasses.replace(iocfg, workers=3)
+        self.ioe = IOEngine(iocfg, meter=self.meter, default_root=workdir)
+        self.ssd = SSDStore(workdir, self.meter, engine=self.ioe)
         self.step_num = 0
+        self._closed = False
         self.phase_time: Dict[str, float] = {"fwd": 0.0, "bwd": 0.0, "opt_wait": 0.0}
 
         # ---- init params layerwise straight into tiered storage ----
@@ -130,13 +140,14 @@ class OffloadEngine:
                 "v": jnp.zeros_like(getattr(self, t), dtype=jnp.float32)}
             for t in ("embed", "unembed", "final_norm")}
 
-        # coordinators
-        self.params_c = ParameterCoordinator(self.p_vecs, self.meter, self.io)
+        # coordinators (all submit through the shared IOEngine)
+        self.params_c = ParameterCoordinator(self.p_vecs, self.meter,
+                                             self.ioe)
         self.ckpt_c = InterLayerTensorCoordinator(x.ckpt, self.host, self.ssd,
-                                                  self.meter, self.io)
+                                                  self.meter, self.ioe)
         self.opt_c = OptimizerStepCoordinator(
             self.m_master, self.m_m, self.m_v, self.p_vecs, self.host,
-            self.meter, self.cpu, CpuAdam(lr=ocfg.lr), ocfg.alpha,
+            self.meter, self.ioe, CpuAdam(lr=ocfg.lr), ocfg.alpha,
             param_dtype=np.dtype(ocfg.param_dtype))
 
         self._build_jit_fns()
@@ -270,7 +281,7 @@ class OffloadEngine:
             self.ckpt_c.put_grad(self.L, m, dx,
                                  keep_on_device=(m == order[-1]))
             self.ckpt_c.drop_ckpt(self.L, m)
-        self.params_c._futures.clear()
+        self.params_c.reset()          # fwd->bwd boundary: cancel prefetches
         self.params_c.prefetch(self.L - 1)
         d_embed = jnp.zeros_like(self.embed, dtype=jnp.float32)
         for l in range(self.L - 1, -1, -1):
@@ -351,7 +362,7 @@ class OffloadEngine:
             loss_total += float(loss)
             d_un += du
             d_nm += dn
-            self.params_c._futures.clear()
+            self.params_c.reset()      # fwd->bwd boundary: cancel prefetches
             self.params_c.prefetch(self.L - 1)
             dy_dev = dy
             for l in range(self.L - 1, -1, -1):
@@ -366,17 +377,19 @@ class OffloadEngine:
                 # and hands the sum to the optimizer => (2M-1) x 2ms total.
                 if m == 0:
                     g = np.asarray(dp)
-                    self.meter.add("grad", "gpu->cpu", g.nbytes)
+                    _xfer(self.meter, self.ioe, "grad", "gpu->cpu", g.nbytes)
                     self.host.put(f"gacc:{l}", g)
                 elif m < M - 1:
                     g_host = self.host.get(f"gacc:{l}")
-                    self.meter.add("grad", "cpu->gpu", g_host.nbytes)
+                    _xfer(self.meter, self.ioe, "grad", "cpu->gpu",
+                          g_host.nbytes)
                     g = np.asarray(dp + jnp.asarray(g_host))
-                    self.meter.add("grad", "gpu->cpu", g.nbytes)
+                    _xfer(self.meter, self.ioe, "grad", "gpu->cpu", g.nbytes)
                     self.host.put(f"gacc:{l}", g)
                 else:
                     g_host = self.host.pop(f"gacc:{l}")
-                    self.meter.add("grad", "cpu->gpu", g_host.nbytes)
+                    _xfer(self.meter, self.ioe, "grad", "cpu->gpu",
+                          g_host.nbytes)
                     g_dev = dp + jnp.asarray(g_host)
                     # optimizer overlaps only with this LAST micro-batch (§3.3)
                     self.opt_c.submit_early(l, g_dev, step)
@@ -399,15 +412,35 @@ class OffloadEngine:
 
     # ------------------------------------------------------------------
     def finish(self):
-        """Flush any α-pending optimizer work (end of training)."""
+        """Flush any α-pending optimizer work and drain outstanding
+        checkpoint spills (end of training): afterwards the meter
+        snapshot is complete and deterministic."""
         for l in range(self.L):
             self.opt_c.flush_late(l, self.step_num)
             self.opt_c.wait_late(l)
         self.opt_c.wait_all()
+        self.ckpt_c.wait_pending()
 
     def traffic(self) -> Dict[str, int]:
-        return self.meter.snapshot()
+        out = self.meter.snapshot()
+        out["host:peak_nbytes"] = self.host.peak_nbytes
+        return out
+
+    def stats(self) -> Dict[str, object]:
+        """I/O-engine counters + host residency + phase wall-times."""
+        return {"io": self.ioe.stats(),
+                "host_peak_nbytes": self.host.peak_nbytes,
+                "host_nbytes": self.host.nbytes(),
+                "phase_time": dict(self.phase_time)}
 
     def close(self):
-        self.io.shutdown(wait=True)
-        self.cpu.shutdown(wait=True)
+        """Drain outstanding I/O, delete the workdir's tensor files, and
+        shut the transfer engine down. Idempotent."""
+        if self._closed:
+            return
+        self._closed = True
+        self.params_c.reset()
+        self.ckpt_c.wait_pending()
+        self.opt_c.wait_all()
+        self.ssd.close()              # removes stripe files from the paths
+        self.ioe.shutdown(wait=True)

@@ -5,15 +5,23 @@ the filesystem — the data movement, byte counters, and thread-overlap
 structure are real; only the device arithmetic rate differs from the
 paper's A100s. All traffic is metered by category so the engine's counters
 can be validated against the closed-form model in repro.core.traffic.
+
+All SSD bytes move through :class:`repro.io.IOEngine`: chunked,
+priority-scheduled, striped across the engine's configured paths, and
+optionally bandwidth-paced. ``SSDStore`` is the tensor-naming layer on
+top (shapes/dtypes, metering, async spills via the staging pool).
 """
 from __future__ import annotations
 
-import os
 import threading
 from collections import defaultdict
+from concurrent.futures import CancelledError
 from typing import Dict, Optional, Tuple
 
 import numpy as np
+
+from repro.io import (CATEGORY_PRIORITY, IOConfig, IOEngine, IOPriority,
+                      IORequest, StripedFiles)
 
 
 class TrafficMeter:
@@ -46,29 +54,102 @@ class TrafficMeter:
             self.bytes.clear()
 
 
-class SSDStore:
-    """Flat binary files, one per tensor name."""
+def _u8(arr: np.ndarray) -> np.ndarray:
+    """Flat uint8 view of a contiguous array (no copy)."""
+    return arr.reshape(-1).view(np.uint8)
 
-    def __init__(self, root: str, meter: TrafficMeter):
+
+def _priority(category: str) -> IOPriority:
+    return CATEGORY_PRIORITY.get(category, IOPriority.CKPT_SPILL)
+
+
+class SSDStore:
+    """Named flat tensors on SSD, striped across the I/O engine's paths.
+
+    Overwrites must keep a tensor's byte size (partial updates go through
+    ``write_range``); the offload engine's tensors are all fixed-size.
+    """
+
+    def __init__(self, root: str, meter: TrafficMeter,
+                 engine: Optional[IOEngine] = None,
+                 chunk_bytes: Optional[int] = None):
         self.root = root
         self.meter = meter
-        os.makedirs(root, exist_ok=True)
+        if engine is None:
+            cfg = IOConfig(paths=[root]) if chunk_bytes is None else \
+                IOConfig(paths=[root], chunk_bytes=chunk_bytes)
+            engine = IOEngine(cfg, meter=meter)
+            self._owns_engine = True
+        else:
+            self._owns_engine = False
+        self.engine = engine
+        self.files = StripedFiles(engine)
         self._shapes: Dict[str, Tuple[tuple, np.dtype]] = {}
+        self._async_reqs: set = set()
+        self._async_lock = threading.Lock()
 
-    def _path(self, name: str) -> str:
-        return os.path.join(self.root, name.replace("/", "_") + ".bin")
+    def _meta(self, name: str) -> Tuple[tuple, np.dtype]:
+        try:
+            return self._shapes[name]
+        except KeyError:
+            raise KeyError(
+                f"SSDStore: no tensor named {name!r} is registered "
+                f"({len(self._shapes)} known names)") from None
 
-    def write(self, name: str, arr: np.ndarray, category: str):
+    def write(self, name: str, arr: np.ndarray, category: str,
+              metered: bool = True):
         arr = np.ascontiguousarray(arr)
-        arr.tofile(self._path(name))
+        self.files.write(name, _u8(arr), 0, _priority(category))
         self._shapes[name] = (arr.shape, arr.dtype)
-        self.meter.add(category, "cpu->ssd", arr.nbytes)
+        if metered:
+            self.meter.add(category, "cpu->ssd", arr.nbytes)
+
+    def write_async(self, name: str, arr: np.ndarray, category: str
+                    ) -> IORequest:
+        """Stage ``arr`` into the double-buffered host pool and schedule
+        the (chunked, striped) write; the caller's buffer is free as soon
+        as this returns. Wait on the returned request before reading."""
+        arr = np.ascontiguousarray(arr)
+        staged = self.engine.staging.acquire(arr.nbytes)
+        np.copyto(staged.view, _u8(arr))
+        self._shapes[name] = (arr.shape, arr.dtype)
+        pri = _priority(category)
+        nbytes = arr.nbytes
+
+        def work():
+            try:
+                self.files.write(name, staged.view, 0, pri)
+                self.meter.add(category, "cpu->ssd", nbytes)
+            finally:
+                staged.release()
+
+        req = self.engine.submit(work, priority=pri, category=category,
+                                 route="cpu->ssd", nbytes=nbytes)
+        with self._async_lock:
+            self._async_reqs.add(req)
+
+        def _done(f):
+            # a cancelled spill never runs `work`; don't leak the slot
+            if f.cancelled():
+                staged.release()
+            with self._async_lock:
+                self._async_reqs.discard(req)
+
+        req.future.add_done_callback(_done)
+        return req
 
     def read(self, name: str, category: str, out: Optional[np.ndarray] = None
              ) -> np.ndarray:
-        shape, dtype = self._shapes[name]
-        arr = np.fromfile(self._path(name), dtype=dtype).reshape(shape)
-        self.meter.add(category, "ssd->cpu", arr.nbytes)
+        shape, dtype = self._meta(name)
+        nbytes = int(np.prod(shape)) * dtype.itemsize
+        pri = _priority(category)
+        if out is not None and out.flags.c_contiguous and out.nbytes == nbytes:
+            self.files.readinto(name, _u8(out), 0, pri)
+            self.meter.add(category, "ssd->cpu", nbytes)
+            return out
+        arr = np.empty(shape, dtype)
+        self.files.readinto(name, _u8(arr), 0, pri)
+        self.meter.add(category, "ssd->cpu", nbytes)
         if out is not None:
             np.copyto(out, arr)
             return out
@@ -76,24 +157,34 @@ class SSDStore:
 
     def read_range(self, name: str, lo: int, hi: int, category: str
                    ) -> np.ndarray:
-        """Partial read of elements [lo, hi) via seek — only the needed
-        fraction touches the device (the paper's chunked optimizer I/O)."""
-        _, dtype = self._shapes[name]
-        with open(self._path(name), "rb") as f:
-            f.seek(lo * dtype.itemsize)
-            arr = np.fromfile(f, dtype=dtype, count=hi - lo)
+        """Partial read of elements [lo, hi) — only the needed fraction
+        touches the SSD paths (the paper's chunked optimizer I/O)."""
+        _, dtype = self._meta(name)
+        arr = np.empty(hi - lo, dtype)
+        self.files.readinto(name, _u8(arr), lo * dtype.itemsize,
+                            _priority(category))
         self.meter.add(category, "ssd->cpu", arr.nbytes)
         return arr
 
     def write_range(self, name: str, arr: np.ndarray, lo: int,
                     category: str):
-        """Partial in-place write of elements [lo, lo+len) via seek."""
-        _, dtype = self._shapes[name]
+        """Partial in-place write of elements [lo, lo+len)."""
+        _, dtype = self._meta(name)
         arr = np.ascontiguousarray(arr, dtype=dtype)
-        with open(self._path(name), "r+b") as f:
-            f.seek(lo * dtype.itemsize)
-            f.write(arr.tobytes())
+        self.files.write(name, _u8(arr), lo * dtype.itemsize,
+                         _priority(category))
         self.meter.add(category, "cpu->ssd", arr.nbytes)
+
+    def delete(self, name: str):
+        """Remove a tensor's stripe files and registration."""
+        self._meta(name)
+        self.files.delete(name)
+        del self._shapes[name]
+
+    def clear(self):
+        """Delete every registered tensor's files (workdir cleanup)."""
+        for name in list(self._shapes):
+            self.delete(name)
 
     def exists(self, name: str) -> bool:
         return name in self._shapes
@@ -102,35 +193,66 @@ class SSDStore:
         return sum(int(np.prod(s)) * d.itemsize
                    for s, d in self._shapes.values())
 
+    def close(self):
+        # Drain async spills first: a spill still queued when clear()
+        # unlinks the stripe files would recreate them via O_CREAT.
+        with self._async_lock:
+            pending = list(self._async_reqs)
+        for req in pending:
+            try:
+                req.result()
+            except CancelledError:
+                pass
+        self.clear()
+        self.files.close()
+        if self._owns_engine:
+            self.engine.shutdown(wait=True)
+
 
 class HostStore:
     """Host ("pinned") buffers. Tracks resident bytes — the CPU-memory
-    budget the LP of Algorithm 1 constrains."""
+    budget the LP of Algorithm 1 constrains — and the peak residency
+    (``peak_nbytes``), updated on every put, for validating the vertical
+    schedule's footprint against the LP solution."""
 
     def __init__(self, meter: TrafficMeter):
         self.meter = meter
         self._bufs: Dict[str, np.ndarray] = {}
+        self._lock = threading.Lock()
+        self._nbytes = 0
+        self.peak_nbytes = 0
 
     def put(self, name: str, arr: np.ndarray):
-        self._bufs[name] = arr
+        with self._lock:
+            old = self._bufs.get(name)
+            if old is not None:
+                self._nbytes -= old.nbytes
+            self._bufs[name] = arr
+            self._nbytes += arr.nbytes
+            if self._nbytes > self.peak_nbytes:
+                self.peak_nbytes = self._nbytes
 
     def get(self, name: str) -> np.ndarray:
         return self._bufs[name]
 
     def pop(self, name: str) -> np.ndarray:
-        return self._bufs.pop(name)
+        with self._lock:
+            arr = self._bufs.pop(name)
+            self._nbytes -= arr.nbytes
+        return arr
 
     def __contains__(self, name: str) -> bool:
         return name in self._bufs
 
     def nbytes(self) -> int:
-        return sum(a.nbytes for a in self._bufs.values())
+        return self._nbytes
 
 
 class TieredVector:
     """A flat 1-D tensor split between host memory and SSD by a ratio
     x in [0,1] (fraction host-resident): elements [0, k) live in host,
-    [k, n) on SSD — the paper's per-data-type storage ratio."""
+    [k, n) on SSD — the paper's per-data-type storage ratio. SSD bytes
+    move as chunked engine requests at the priority of ``category``."""
 
     def __init__(self, name: str, n: int, dtype, x_host: float,
                  host: HostStore, ssd: SSDStore, category: str):
@@ -148,9 +270,8 @@ class TieredVector:
         if self.k:
             self.host.put(self.name + ":h", arr[:self.k].copy())
         if self.k < self.n:
-            sub = arr[self.k:]
-            sub.tofile(self.ssd._path(self.name + ":s"))
-            self.ssd._shapes[self.name + ":s"] = (sub.shape, sub.dtype)
+            self.ssd.write(self.name + ":s", arr[self.k:], self.category,
+                           metered=False)
 
     def read(self, out: Optional[np.ndarray] = None) -> np.ndarray:
         """Assemble the full vector; SSD portion is metered."""
@@ -171,11 +292,9 @@ class TieredVector:
         if hi > self.k:
             lo_s = max(lo, self.k)
             if lo_s == self.k and hi == self.n:
-                sub = np.ascontiguousarray(arr[self.k:])
-                sub.tofile(self.ssd._path(self.name + ":s"))
-                self.meter_write(sub.nbytes)
+                self.ssd.write(self.name + ":s", arr[self.k:], self.category)
             else:
-                # partial SSD write: seek-based, only [lo_s, hi) touches disk
+                # partial SSD write: only [lo_s, hi) touches disk
                 self.ssd.write_range(self.name + ":s",
                                      arr[lo_s:hi], lo_s - self.k,
                                      self.category)
@@ -205,6 +324,3 @@ class TieredVector:
                                       hi - self.k, self.category)
             np.copyto(out[lo_s - lo:], seg)
         return out
-
-    def meter_write(self, n: int):
-        self.ssd.meter.add(self.category, "cpu->ssd", n)

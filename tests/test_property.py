@@ -1,4 +1,8 @@
 """Hypothesis property tests on the system's invariants (deliverable c)."""
+import pytest
+
+pytest.importorskip("hypothesis")
+
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
