@@ -40,9 +40,25 @@ class LPSolution:
         return self.t_f + self.t_b
 
 
-def solve_config(m: MachineParams, w: Workload, n: int, alpha: float
-                 ) -> Optional[LPSolution]:
-    """One LP solve for fixed (n, α). Returns None if infeasible."""
+def solve_config(m: MachineParams, w: Workload, n: int, alpha: float,
+                 num_gpus: int = 1) -> Optional[LPSolution]:
+    """One LP solve for fixed (n, α). Returns None if infeasible.
+
+    With ``num_gpus=R > 1`` the LP models the R-way data-parallel
+    vertical schedule: ``w`` is the FULL-model workload, each rank owns
+    1/R of the params / optimizer state / gradient shards and n/R of
+    the micro-batches (``n`` must divide by R), ``m.cpu_mem`` is
+    per-rank DRAM, and two constant interconnect rows join the stage
+    lower bounds (per-layer-boundary all-gathers, f32 reduce-scatter)
+    paced by ``m.interconnect_bw``."""
+    R = int(num_gpus)
+    ms_full, grad_full = w.ms, w.grad_bytes
+    if R > 1:
+        if n % R:
+            return None
+        w = dataclasses.replace(w, ms=w.ms / R, os_bytes=w.os_bytes / R,
+                                grad_bytes=w.grad_bytes / R)
+        n = n // R
     t_f1, t_b1 = compute_times(w, m)
     rd, wr = m.ssd_read_bw, m.ssd_write_bw
     A_ub: List[List[float]] = []
@@ -93,6 +109,13 @@ def solve_config(m: MachineParams, w: Workload, n: int, alpha: float
     add_time_lb(4, (1 - alpha) * adam_t)
     add_time_lb(4, max(0.0, pc.total - pcie_fwd) / m.pcie_bw)
 
+    # --- data-parallel interconnect lower bounds (constant rows) ---
+    if R > 1:
+        frac = (R - 1) / R
+        add_time_lb(3, frac * ms_full / m.interconnect_bw)  # fwd all-gather
+        add_time_lb(4, frac * (ms_full + grad_full)         # bwd all-gather
+                    / m.interconnect_bw)                    # + reduce-scatter
+
     bounds = [(0, 1), (0, 1), (0, 1), (0, None), (0, None)]
     res = linprog(c, A_ub=np.array(A_ub), b_ub=np.array(b_ub), bounds=bounds,
                   method="highs")
@@ -114,16 +137,20 @@ class SearchResult:
 
 def find_optimal_config(m: MachineParams, w: Workload,
                         alphas=None, max_n: int = 256,
-                        improve_thresh: float = 1.01) -> Optional[SearchResult]:
+                        improve_thresh: float = 1.01,
+                        num_gpus: int = 1) -> Optional[SearchResult]:
     """Algorithm 1: increase n until throughput saturates; per n pick the
-    best α by grid argmax; per (n, α) solve the storage-ratio LP."""
+    best α by grid argmax; per (n, α) solve the storage-ratio LP. With
+    ``num_gpus=R`` the search steps n by R (global micro-batch counts
+    that shard evenly) and solves the data-parallel LP."""
     alphas = alphas if alphas is not None else [i / 100 for i in range(0, 51)]
     best = None
     max_tp = 0.0
     n = 0
     while n < max_n:
-        n += 1
-        sols = [(a, solve_config(m, w, n, a)) for a in alphas]
+        n += max(1, int(num_gpus))
+        sols = [(a, solve_config(m, w, n, a, num_gpus=num_gpus))
+                for a in alphas]
         sols = [(a, s) for a, s in sols if s is not None]
         if not sols:
             continue

@@ -27,9 +27,11 @@ class MachineParams:
     ssd_read_bw: float = 6.0e9
     ssd_write_bw: float = 3.0e9
     cpu_adam_bw: float = 8.0e9         # optimizer-state bytes processed /s
-    cpu_mem: float = 400e9             # usable DRAM for offload
+    cpu_mem: float = 400e9             # usable DRAM for offload (per rank)
     gpu_mem: float = 40e9
     num_gpus: int = 1
+    interconnect_bw: float = 16e9      # DP fabric, bytes/s per rank
+                                       # (ring all-gather/reduce-scatter)
 
 
 def machine_from_bandwidth(bandwidth, base: Optional[MachineParams] = None
@@ -161,6 +163,60 @@ def iteration_time_vertical(w: Workload, m: MachineParams, M: int,
     t_fwd = max(M * t_f1, pcie_fwd / m.pcie_bw, fwd_ssd, alpha * adam_t)
     t_bwd = max(M * t_b1, pcie_bwd / m.pcie_bw, bwd_ssd, (1 - alpha) * adam_t)
     return t_fwd + t_bwd
+
+
+def iteration_time_vertical_dp(w: Workload, m: MachineParams, M: int,
+                               alpha: float, x: StorageRatios,
+                               R: Optional[int] = None) -> float:
+    """R-GPU data-parallel vertical schedule (the Fig. 10 scaling
+    model). ``w`` is the FULL-model workload; each rank owns 1/R of
+    every storage shard (ZeRO-style) and M/R of the micro-batches, and
+    drives its OWN SSD path set — so per-rank storage time shrinks R×
+    (R× aggregate bandwidth) while two collective terms appear on the
+    critical path: the per-layer-boundary param all-gather
+    (fwd and bwd: ``ms·(R-1)/R`` per rank each) and the gradient
+    reduce-scatter (bwd: ``grad_bytes·(R-1)/R`` per rank), paced by
+    ``m.interconnect_bw``. ``m.cpu_mem`` is per rank."""
+    R = int(R or m.num_gpus)
+    if R <= 1:
+        return iteration_time_vertical(w, m, M, alpha, x)
+    if M % R:
+        return float("inf")
+    Mr = M // R
+    wr = dataclasses.replace(w, ms=w.ms / R, os_bytes=w.os_bytes / R,
+                             grad_bytes=w.grad_bytes / R)
+    t_f1, t_b1 = compute_times(w, m)
+    # per-rank PCIe: own shard + this rank's micro-batches' ckpt traffic
+    pcie = tr.vertical_traffic(wr.ms, w.cs, Mr)
+    pcie_fwd = wr.ms + Mr * w.cs + (Mr - 1) * w.cs
+    pcie_bwd = pcie.total - pcie_fwd
+    fwd_ssd = _ssd_time(
+        wr.ms * (1 - x.param) + alpha * wr.os_bytes * (1 - x.opt),
+        Mr * w.cs * (1 - x.ckpt) + alpha * wr.os_bytes * (1 - x.opt), m)
+    bwd_ssd = _ssd_time(
+        wr.ms * (1 - x.param) + Mr * w.cs * (1 - x.ckpt)
+        + (1 - alpha) * wr.os_bytes * (1 - x.opt),
+        (1 - alpha) * wr.os_bytes * (1 - x.opt), m)
+    adam_t = (wr.os_bytes + wr.grad_bytes) / m.cpu_adam_bw
+    frac = (R - 1) / R
+    ic_fwd = frac * w.ms / m.interconnect_bw                  # all-gather
+    ic_bwd = frac * (w.ms + w.grad_bytes) / m.interconnect_bw  # + red-scat
+    t_fwd = max(Mr * t_f1, pcie_fwd / m.pcie_bw, fwd_ssd, ic_fwd,
+                alpha * adam_t)
+    t_bwd = max(Mr * t_b1, pcie_bwd / m.pcie_bw, bwd_ssd, ic_bwd,
+                (1 - alpha) * adam_t)
+    return t_fwd + t_bwd
+
+
+def rooflines_dp(w: Workload, m: MachineParams, x: StorageRatios, R: int):
+    """R-rank extension of :func:`rooflines` (Fig. 3 / Fig. 10): the
+    optimizer-state I/O bound shrinks R× (each rank's path set carries
+    only its shard), compute scales R×, and the interconnect adds a
+    third ceiling from the per-iteration collective bytes."""
+    opt_io, comp = rooflines(w, m, x)
+    frac = (R - 1) / R if R > 1 else 0.0
+    ic = frac * (2 * w.ms + w.grad_bytes) / m.interconnect_bw
+    return opt_io / R, comp * R, ic
 
 
 def iteration_time_horizontal(w: Workload, m: MachineParams, M: int,

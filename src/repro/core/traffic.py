@@ -11,6 +11,7 @@ offload engine's measured byte counters are validated against them.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 
 BYTES_LOW = 2   # bf16/fp16 parameters and checkpoints
@@ -83,6 +84,119 @@ def vertical_traffic(ms: float, cs: float, M: int) -> TrafficBreakdown:
         ckpt_write=M * cs,
         ckpt_read=2 * M * cs - 2 * keep,
         inter_grad=2 * M * cs - 2 * keep,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class CkptTraffic:
+    """EXACT engine-level checkpoint / inter-layer-gradient counters for
+    the vertical schedule (unlike :func:`vertical_traffic`'s smooth
+    approximation, these count the L+1 actual layer boundaries the
+    engine materialises — embedding output plus each layer output).
+
+    Unit: ``u = cs / L`` — one micro-batch's single-boundary tensor.
+    The §4.2 alternating micro-batch order keeps exactly one micro-batch
+    per boundary on device, saving its forward re-read and both
+    directions of its inter-layer gradient transfer; backward recompute
+    re-reads every micro-batch.
+    """
+    write: float        # ckpt gpu->cpu: every boundary, every micro-batch
+    read_fwd: float     # next-layer forward inputs: boundary mb on device
+    read_bwd: float     # backward recompute inputs: no device saving
+    inter_grad: float   # activation-grad round trips through CPU
+    ssd_spill: float    # async tail spills at x_ckpt=0 (== write)
+    ssd_reread: float   # bwd tail re-reads at x_ckpt=0: the boundary
+                        # micro-batch's tail stays CPU-cached, so only
+                        # M-1 per interior boundary touch the SSD
+
+    @property
+    def read(self) -> float:
+        return self.read_fwd + self.read_bwd
+
+
+def vertical_ckpt_traffic(cs: float, M: int, L: int) -> CkptTraffic:
+    """Exact per-iteration checkpoint byte counters of the vertical
+    engine: "read twice minus the on-device boundary micro-batch"
+    (§4.2), per boundary. Perturbing the alternating order costs
+    ``(L)·u`` extra checkpoint reads and ``2·L·u`` extra inter-layer
+    gradient bytes (only the embedding-side boundary stays aligned).
+    ``ssd_*`` fields are the fully-offloaded (x_ckpt=0) values."""
+    u = cs / max(L, 1)
+    nb = L + 1                       # boundaries 0..L
+    return CkptTraffic(
+        write=nb * M * u,
+        read_fwd=nb * (M - 1) * u,
+        read_bwd=L * M * u,
+        inter_grad=2 * nb * (M - 1) * u,
+        ssd_spill=nb * M * u,
+        ssd_reread=L * (M - 1) * u,
+    )
+
+
+@dataclasses.dataclass(frozen=True)
+class DPRankTraffic:
+    """Per-rank, per-iteration bytes for the R-way data-parallel
+    vertical schedule (ZeRO-style partitioned state, ring collectives).
+    All quantities are for ONE rank; ``ssd_*`` properties give the
+    fully-offloaded (x = 0) storage traffic each rank's own SSD path
+    set carries — aggregate storage traffic is R× those, which is the
+    multi-path bandwidth lever of the Fig. 10 scaling."""
+    param_fetch: float         # own shard, fwd+bwd (cpu->gpu): 2·ms/R
+    param_allgather: float     # ring recv (net->gpu): 2·ms·(R-1)/R
+    param_writeback: float     # updated low-precision shard: ms/R
+    grad_offload: float        # reduce-scattered f32 shard (gpu->cpu)
+    grad_reducescatter: float  # ring send == recv: grad_bytes·(R-1)/R
+    opt_read: float            # master+m+v shard reads: os_bytes/R
+    opt_write: float           # master+m+v shard writes: os_bytes/R
+    ckpt: Optional[CkptTraffic]  # boundary traffic over M/R micro-batches
+
+    @property
+    def interconnect(self) -> float:
+        """Bytes received per rank per iteration over the DP fabric
+        (all-gather + reduce-scatter; the head all-reduce is excluded
+        like the paper excludes the head from the pipeline, §4.5)."""
+        return self.param_allgather + self.grad_reducescatter
+
+    @property
+    def ssd_read(self) -> float:
+        r = self.param_fetch + self.opt_read
+        return r + (self.ckpt.ssd_reread if self.ckpt else 0.0)
+
+    @property
+    def ssd_write(self) -> float:
+        w = self.param_writeback + self.opt_write
+        return w + (self.ckpt.ssd_spill if self.ckpt else 0.0)
+
+
+def dp_vertical_traffic(ms: float, cs: float, M: int, R: int, *,
+                        grad_bytes: Optional[float] = None,
+                        os_bytes: Optional[float] = None,
+                        n_layers: Optional[int] = None) -> DPRankTraffic:
+    """Closed-form per-rank traffic for R data-parallel ranks running
+    the vertical schedule over M global micro-batches.
+
+    Defaults follow the paper's conventions (f32 grads = ``2·ms``,
+    optimizer state = ``6·ms``); pass explicit byte counts to match an
+    engine running at a different precision (the f32 test engine passes
+    ``grad_bytes=ms`` and ``os_bytes=3·ms``). With ``n_layers`` the
+    checkpoint terms are the exact per-boundary counters
+    (:func:`vertical_ckpt_traffic` over the rank's ``M/R``
+    micro-batches); without it they are omitted."""
+    if M % R:
+        raise ValueError(f"M={M} must divide across R={R} ranks")
+    grad_bytes = 2.0 * ms if grad_bytes is None else grad_bytes
+    os_bytes = 6.0 * ms if os_bytes is None else os_bytes
+    shard = ms / R
+    return DPRankTraffic(
+        param_fetch=2 * shard,
+        param_allgather=2 * (ms - shard),
+        param_writeback=shard,
+        grad_offload=grad_bytes / R,
+        grad_reducescatter=grad_bytes * (R - 1) / R,
+        opt_read=os_bytes / R,
+        opt_write=os_bytes / R,
+        ckpt=(vertical_ckpt_traffic(cs, M // R, n_layers)
+              if n_layers else None),
     )
 
 

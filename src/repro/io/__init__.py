@@ -52,8 +52,42 @@ bodies may wait only on channel ops and on α-delay *gates* (a param
 fetch waiting on an optimizer flush), which is why the engine keeps at
 least two request workers.
 
-Follow-ons this unlocks are tracked in ROADMAP.md (multi-GPU striping,
-an io_uring backend, NVMe-oF paths, serving-time KV-cache reuse).
+Per-rank engine layering (data parallelism)
+===========================================
+
+The data-parallel offload engine (``repro.offload.dp``) instantiates
+the WHOLE stack above once per rank: rank r gets its own ``IOEngine``
+over its own path subset (:meth:`~repro.io.config.IOConfig.
+shard_for_rank`: paths ``r, r+R, ...``), its own meter/host/staging
+state, and shard-length tiered vectors. Nothing above this package is
+shared between ranks, so R rank engines drive R disjoint path sets
+concurrently — that is the N-GPUs-×-N-SSD-paths aggregate-bandwidth
+lever (``benchmarks/bench_dp.py``).
+
+Rank-sharding invariants the test battery pins down
+(``tests/test_dp_offload.py``, ``tests/test_property.py``):
+
+* every tiered vector is split into CONTIGUOUS element ranges covering
+  [0, P) (``repro.offload.dp.shard_bounds``) — elementwise ops (Adam,
+  gradient accumulation) commute bitwise with the split;
+* collectives fold contributions in GLOBAL micro-batch order, so an
+  R-rank run is bit-identical (f32) to the single-rank engine;
+* per-rank byte counters equal the ``dp_vertical_traffic`` closed
+  forms exactly (shard storage I/O ``∝ 1/R``, ring collective traffic
+  ``∝ (R-1)/R``);
+* a rank's chunk ops never leave its own path set (stripe files land
+  only under the owning rank's directories).
+
+Fault discipline: a failed chunk op propagates through the request
+future (``IORequest.result``), releases the in-flight byte budget and
+its staging buffer, and never kills a worker thread — the
+fault-injection suite (``tests/test_io_faults.py``) drives these paths
+through an on-demand-failing backend (``StripedFiles._pread/_pwrite``
+are the designated override points).
+
+Follow-ons this unlocks are tracked in ROADMAP.md (NCCL-backed
+collectives, uneven-rank sharding, an io_uring backend, NVMe-oF paths,
+serving-time KV-cache reuse).
 """
 from repro.io.backend import StripedFiles  # noqa: F401
 from repro.io.bandwidth import BandwidthSimulator, TokenBucket  # noqa: F401

@@ -48,6 +48,17 @@ class StripedFiles:
                 self._fds[key] = fd
             return fd
 
+    # ---------------- raw chunk ops ----------------
+    # The single choke point every chunk's bytes pass through. Kept as
+    # overridable methods so a harness can inject faults (short reads,
+    # EIO, stalls) under the full engine stack — the fault-injection
+    # test battery subclasses StripedFiles and flips these.
+    def _pwrite(self, fd: int, mv: memoryview, off: int) -> None:
+        os.pwritev(fd, [mv], off)
+
+    def _pread(self, fd: int, mv: memoryview, off: int) -> int:
+        return os.preadv(fd, [mv], off)
+
     def _chunk_spans(self, byte_lo: int, byte_hi: int):
         """Yield (path, file_offset, lo, hi) per chunk overlapping
         [byte_lo, byte_hi) — lo/hi are tensor-relative byte offsets."""
@@ -79,9 +90,9 @@ class StripedFiles:
                 fd = self._fd(name, p)
                 eng.throttle(route, n)
                 if write:
-                    os.pwritev(fd, [mv], off)
+                    self._pwrite(fd, mv, off)
                 else:
-                    got = os.preadv(fd, [mv], off)
+                    got = self._pread(fd, mv, off)
                     if got != n:
                         raise IOError(
                             f"short read on {name!r} path {p}: "

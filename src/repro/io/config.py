@@ -8,6 +8,7 @@ optional simulated bandwidth caps.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Mapping, Optional, Sequence
 
 
@@ -46,3 +47,22 @@ class IOConfig:
     def resolved_paths(self, default_root: str) -> Sequence[str]:
         """The stripe directories, falling back to a single default."""
         return list(self.paths) if self.paths else [default_root]
+
+    def shard_for_rank(self, rank: int, world: int) -> "IOConfig":
+        """Per-rank view of a data-parallel path set (N ranks x N SSD
+        paths): rank ``r`` drives paths ``r, r+world, ...`` with its own
+        engine, so the ranks' channel threads saturate disjoint devices.
+        With fewer paths than ranks, ranks share a device through
+        per-rank subdirectories (disjoint stripe namespaces — correct,
+        but those ranks contend for the device's bandwidth). With no
+        paths configured the caller's per-rank ``default_root`` applies.
+        """
+        if not (0 <= rank < world):
+            raise ValueError(f"rank {rank} outside world of {world}")
+        if not self.paths:
+            return self
+        mine = list(self.paths)[rank::world]
+        if not mine:
+            base = list(self.paths)[rank % len(self.paths)]
+            mine = [os.path.join(base, f"rank{rank}")]
+        return dataclasses.replace(self, paths=mine)

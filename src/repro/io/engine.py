@@ -152,8 +152,15 @@ class IOEngine:
     """Priority-scheduled, budgeted, optionally bandwidth-paced transfers
     across one or more SSD paths. See the module docstring."""
 
-    def __init__(self, config: IOConfig = IOConfig(), meter=None,
+    def __init__(self, config: Optional[IOConfig] = None, meter=None,
                  default_root: Optional[str] = None):
+        # The default is built HERE, not in the signature: a default
+        # argument is evaluated once at class-definition time, so
+        # `config: IOConfig = IOConfig()` would hand every
+        # default-constructed engine the same IOConfig instance (and the
+        # same `bandwidth` dict from its default_factory).
+        if config is None:
+            config = IOConfig()
         paths = config.resolved_paths(default_root) if (
             config.paths or default_root) else None
         if not paths:

@@ -1,4 +1,6 @@
 from repro.io import IOConfig, IOEngine, IOPriority  # noqa: F401
+from repro.offload.dp import (DataParallelOffloadEngine,  # noqa: F401
+                              shard_bounds)
 from repro.offload.engine import OffloadConfig, OffloadEngine  # noqa: F401
 from repro.offload.stores import (HostStore, SSDStore, TieredVector,  # noqa: F401
                                   TrafficMeter)

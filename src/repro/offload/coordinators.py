@@ -138,6 +138,14 @@ class InterLayerTensorCoordinator:
         Drops the CPU tail afterwards (reclaimed, §4.4)."""
         if (l, m) in self._device_kept:
             return self._device_kept.pop((l, m))
+        # §4.2 device-slot discipline: a kept boundary checkpoint is only
+        # useful if it is the boundary's FIRST consumer (alternating
+        # micro-batch order). A consumer for a different micro-batch means
+        # the order was perturbed — the device cannot hold the slot across
+        # the whole layer pass, so the kept copy is evicted (its CPU cache
+        # already exists) and is re-read like any other micro-batch.
+        for k in [k for k in self._device_kept if k[0] == l]:
+            del self._device_kept[k]
         name = self._key("c", l, m)
         head = self.host.get(name + ":h")
         tail = self.host.pop(name + ":tail")   # consume CPU cache
@@ -179,6 +187,7 @@ class InterLayerTensorCoordinator:
         # A ckpt consumed only via get_ckpt_fwd (the head layer) still has
         # its SSD spill in flight: drain it so no orphan write can race a
         # next-step spill of the same name and counters stay deterministic.
+        self._device_kept.pop((l, m), None)
         req = self._pending.pop(("c", l, m), None)
         if req is not None:
             req.result()
@@ -201,6 +210,17 @@ class InterLayerTensorCoordinator:
     def get_grad(self, l: int, m: int) -> jax.Array:
         if (-l - 1, m) in self._device_kept:
             return self._device_kept.pop((-l - 1, m))
+        # Out-of-order consumer: a kept inter-layer gradient was never
+        # written to CPU (that is the whole saving), so losing the device
+        # slot forces the spill the alternating order §4.2 avoids — pay
+        # the gpu->cpu transfer now, and the cpu->gpu read later.
+        for k in [k for k in self._device_kept if k[0] == -l - 1]:
+            dx = self._device_kept.pop(k)
+            arr = np.asarray(dx)
+            _xfer(self.meter, self.engine, "inter_grad", "gpu->cpu",
+                  arr.nbytes)
+            self._shapes[("g", l, k[1])] = dx.shape
+            self.host.put(self._key("g", l, k[1]), arr)
         arr = self.host.pop(self._key("g", l, m))
         _xfer(self.meter, self.engine, "inter_grad", "cpu->gpu", arr.nbytes)
         return jnp.asarray(arr).reshape(self._shapes[("g", l, m)])

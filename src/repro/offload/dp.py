@@ -1,0 +1,419 @@
+"""Data-parallel sharded offload: R rank workers × R SSD path sets.
+
+ZeRO-style partitioned offload (the layout GreedySnake's multi-GPU
+baseline uses, and the one its 4-GPU result beats by scheduling): every
+tiered vector — low-precision params, master, momentum, variance — is
+split into R contiguous element ranges. Rank ``r`` owns range
+``[lo_r, hi_r)`` of every layer's vectors, keeps it on its OWN
+``IOEngine`` + SSD path set (``IOConfig.shard_for_rank``), and runs the
+α-delayed partial Adam on only that shard, so R ranks drive R× the
+aggregate storage bandwidth. Per iteration the ranks:
+
+* split the global batch: rank ``r`` runs micro-batches
+  ``[r·M/R, (r+1)·M/R)`` through the same vertical schedule (its local
+  micro-batch order is the global §4.2 alternating order restricted to
+  its block, which preserves the boundary-micro-batch device slot);
+* **all-gather** the low-precision param shards at each layer boundary
+  (each rank reads ``1/R`` of the layer from its own SSD paths — the
+  per-rank reads are submitted to all R engines before any is awaited,
+  which is where the aggregate-bandwidth win comes from);
+* **reduce-scatter** each fully-accumulated f32 layer gradient so every
+  rank updates only its optimizer-state shard.
+
+Determinism (§6.5, extended across the data-parallel axis): the
+simulated collectives fold contributions in GLOBAL micro-batch order —
+the exact fold the single-rank engine performs — and element-range
+slicing commutes bitwise with every elementwise op involved (gradient
+accumulation, Adam). An R-rank run is therefore **bit-identical (f32)**
+to the single-rank ``OffloadEngine``; a real deployment gets the same
+property from deterministic (rank-ordered ring) NCCL reductions.
+
+Metering: each rank has its own ``TrafficMeter``. Collective traffic
+uses routes ``"gpu->net"`` / ``"net->gpu"`` with ring costs — per rank
+and direction, ``(R-1)/R`` of the buffer (categories ``"param"`` for
+the all-gather, ``"grad"`` for the reduce-scatter, ``"head_grad"`` for
+the replicated embedding/head all-reduce, which the paper's per-layer
+pipeline excludes, §4.5). Closed forms:
+:func:`repro.core.traffic.dp_vertical_traffic`; the per-rank counters
+are validated against them exactly in the DP test battery.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.io import IOConfig, IOEngine
+from repro.models import blocks as blk
+from repro.offload.coordinators import (InterLayerTensorCoordinator,
+                                        OptimizerStepCoordinator,
+                                        ParameterCoordinator)
+from repro.offload.engine import (OffloadConfig, _flatten_tree,
+                                  _make_unflatten, bind_block_fns,
+                                  build_block_fns, mb_order, shifted_labels,
+                                  split_microbatches)
+from repro.offload.stores import (HostStore, SSDStore, TieredVector,
+                                  TrafficMeter)
+from repro.optim.cpu_adam import CpuAdam
+
+
+def shard_bounds(n: int, world: int) -> List[Tuple[int, int]]:
+    """Contiguous 1/R element ranges covering [0, n) (sizes differ by at
+    most one when R does not divide n)."""
+    cuts = [(n * r) // world for r in range(world + 1)]
+    return [(cuts[r], cuts[r + 1]) for r in range(world)]
+
+
+class _Rank:
+    """One data-parallel rank: its own meter/host/engine/SSD stack, its
+    contiguous shard of every tiered vector, and the three coordinators
+    rebound to that shard-local storage."""
+
+    def __init__(self, index: int, world: int, root: str,
+                 iocfg: IOConfig, ocfg: OffloadConfig):
+        self.index = index
+        self.world = world
+        self.root = root
+        self.meter = TrafficMeter()
+        self.host = HostStore(self.meter)
+        # same worker floor as the single-rank engine: a gated param
+        # fetch may wait on an optimizer request (α-delay ordering)
+        if iocfg.workers < 3:
+            iocfg = dataclasses.replace(iocfg, workers=3)
+        self.ioe = IOEngine(iocfg, meter=self.meter, default_root=root)
+        self.ssd = SSDStore(root, self.meter, engine=self.ioe)
+        self.p_vecs: List[TieredVector] = []
+        self.m_master: List[TieredVector] = []
+        self.m_m: List[TieredVector] = []
+        self.m_v: List[TieredVector] = []
+        # coordinators are attached by the engine once shards exist
+        self.params_c: Optional[ParameterCoordinator] = None
+        self.ckpt_c: Optional[InterLayerTensorCoordinator] = None
+        self.opt_c: Optional[OptimizerStepCoordinator] = None
+
+    def close(self):
+        self.params_c.reset()
+        self.ckpt_c.wait_pending()
+        self.opt_c.wait_all()
+        self.ssd.close()
+        self.ioe.shutdown(wait=True)
+
+
+class DataParallelOffloadEngine:
+    """R-rank data-parallel version of :class:`OffloadEngine` (vertical
+    schedule only). Same constructor contract plus ``ranks``; per-rank
+    SSD paths come from ``ocfg.io`` partitioned by
+    ``IOConfig.shard_for_rank`` (default: ``<workdir>/rank<r>``)."""
+
+    def __init__(self, cfg, ocfg: OffloadConfig, key, workdir: str,
+                 ranks: int = 2):
+        assert cfg.family in ("dense",), "engine drives homogeneous GPT stacks"
+        assert ocfg.schedule == "vertical", \
+            "data-parallel offload implements the vertical schedule"
+        plan = blk.build_plan(cfg)
+        assert len(plan.period) == 1 and not plan.prefix and not plan.suffix
+        M = ocfg.num_microbatches
+        if M % ranks:
+            raise ValueError(
+                f"num_microbatches={M} must divide evenly across "
+                f"{ranks} ranks (uneven sharding is a ROADMAP follow-on)")
+        self.cfg = cfg
+        self.ocfg = ocfg
+        self.kind = plan.period[0]
+        self.L = cfg.num_layers
+        self.R = ranks
+        self.Mr = M // ranks
+        self.dtype = jnp.dtype(ocfg.param_dtype)
+        self.step_num = 0
+        self._closed = False
+
+        base_io = ocfg.io if ocfg.io is not None else \
+            IOConfig(workers=ocfg.io_workers)
+        self.ranks: List[_Rank] = [
+            _Rank(r, ranks, os.path.join(workdir, f"rank{r}"),
+                  base_io.shard_for_rank(r, ranks), ocfg)
+            for r in range(ranks)]
+
+        # ---- init params layerwise, identical key-split to the
+        # single-rank engine, each rank persisting only its shard ----
+        keys = jax.random.split(key, self.L + 1)
+        x = ocfg.ratios
+        tmpl = None
+        for l in range(self.L):
+            lp = blk.block_init(keys[l], cfg, self.kind, dtype=self.dtype)
+            flat, treedef, shapes = _flatten_tree(lp)
+            flat = flat.astype(ocfg.param_dtype)
+            if tmpl is None:
+                tmpl = (treedef, shapes)
+                self.P = flat.size
+                self.bounds = shard_bounds(self.P, ranks)
+            f32 = flat.astype(np.float32)
+            for rk, (lo, hi) in zip(self.ranks, self.bounds):
+                n_r = hi - lo
+                pv = TieredVector(f"param:{l}", n_r, ocfg.param_dtype,
+                                  x.param, rk.host, rk.ssd, "param")
+                pv.write_full(flat[lo:hi])
+                rk.p_vecs.append(pv)
+                for name, lst, init in (
+                        ("master", rk.m_master, f32[lo:hi]),
+                        ("m", rk.m_m, np.zeros(n_r, np.float32)),
+                        ("v", rk.m_v, np.zeros(n_r, np.float32))):
+                    tv = TieredVector(f"{name}:{l}", n_r, np.float32,
+                                      x.opt, rk.host, rk.ssd, "opt")
+                    tv.write_full(init)
+                    lst.append(tv)
+        self._unflatten = _make_unflatten(tmpl[0], tmpl[1], self.dtype)
+
+        # embedding / head replicated on every (simulated) device; one
+        # copy suffices because all ranks apply identical reduced grads
+        from repro.models.common import embed_init, init_rms_scale
+        ek = jax.random.split(keys[self.L], 2)
+        self.embed = embed_init(ek[0], cfg.padded_vocab, cfg.d_model,
+                                self.dtype)
+        self.unembed = embed_init(ek[1], cfg.padded_vocab, cfg.d_model,
+                                  self.dtype).T
+        self.final_norm = init_rms_scale(cfg.d_model)
+        self.head_state = {
+            t: {"m": jnp.zeros_like(getattr(self, t), dtype=jnp.float32),
+                "v": jnp.zeros_like(getattr(self, t), dtype=jnp.float32)}
+            for t in ("embed", "unembed", "final_norm")}
+
+        for rk in self.ranks:
+            rk.params_c = ParameterCoordinator(rk.p_vecs, rk.meter, rk.ioe)
+            rk.ckpt_c = InterLayerTensorCoordinator(
+                x.ckpt, rk.host, rk.ssd, rk.meter, rk.ioe)
+            rk.opt_c = OptimizerStepCoordinator(
+                rk.m_master, rk.m_m, rk.m_v, rk.p_vecs, rk.host, rk.meter,
+                rk.ioe, CpuAdam(lr=ocfg.lr), ocfg.alpha,
+                param_dtype=np.dtype(ocfg.param_dtype))
+
+        bind_block_fns(self, build_block_fns(cfg, self.kind,
+                                             self._unflatten))
+
+    # ------------------------------------------------------------------
+    # micro-batch ownership and ordering
+    # ------------------------------------------------------------------
+    def _mb_order(self, l: int) -> List[int]:
+        """Global §4.2 alternating order — THE single-rank engine's
+        ``mb_order``; sharing it is part of the bit-parity guarantee."""
+        return mb_order(self.ocfg.num_microbatches, l)
+
+    def _rank_mbs(self, r: int) -> range:
+        return range(r * self.Mr, (r + 1) * self.Mr)
+
+    def _rank_order(self, r: int, l: int) -> List[int]:
+        """Rank r's local order = the global order restricted to its
+        contiguous micro-batch block (keeps the per-rank alternation, so
+        every rank's boundary micro-batch stays on device)."""
+        own = set(self._rank_mbs(r))
+        return [m for m in self._mb_order(l) if m in own]
+
+    # ------------------------------------------------------------------
+    # simulated deterministic collectives
+    # ------------------------------------------------------------------
+    def _collective(self, category: str, send: int, recv: int):
+        """Charge one collective's ring cost to every rank's meter (and
+        pace it when a ``net`` route cap is configured)."""
+        for rk in self.ranks:
+            rk.meter.add(category, "gpu->net", send)
+            rk.meter.add(category, "net->gpu", recv)
+            rk.ioe.throttle("gpu->net", send)
+            rk.ioe.throttle("net->gpu", recv)
+
+    def _allgather_params(self, l: int) -> jax.Array:
+        """Each rank's shard fetch (already prefetched on its own engine)
+        concatenated into the full layer vector. Ring all-gather cost:
+        each rank sends its shard R-1 times and receives the R-1 other
+        shards."""
+        shards = [rk.params_c.get(l) for rk in self.ranks]
+        full = jnp.concatenate(shards)
+        item = self.dtype.itemsize
+        for rk, sh in zip(self.ranks, shards):
+            mine = sh.size * item
+            rk.meter.add("param", "gpu->net", (self.R - 1) * mine)
+            rk.meter.add("param", "net->gpu", self.P * item - mine)
+            rk.ioe.throttle("gpu->net", (self.R - 1) * mine)
+            rk.ioe.throttle("net->gpu", self.P * item - mine)
+        return full
+
+    def _reduce_scatter_update(self, l: int, per_mb: Dict[int, jax.Array],
+                               step: int):
+        """Deterministic reduce-scatter + per-rank partial Adam: fold the
+        per-micro-batch layer grads in GLOBAL micro-batch order (the
+        single-rank engine's exact accumulation), slice each rank's
+        element range, and hand it to that rank's optimizer coordinator.
+        Ring cost: (R-1)/R of the f32 buffer per rank, each direction."""
+        gacc = self._allreduce_fold(jnp.zeros((self.P,), jnp.float32),
+                                    per_mb, self._mb_order(l))
+        ring = (self.R - 1) * gacc.nbytes // self.R
+        self._collective("grad", ring, ring)
+        for rk, (lo, hi) in zip(self.ranks, self.bounds):
+            rk.opt_c.submit_early(l, gacc[lo:hi], step)
+
+    def _allreduce_fold(self, zeros: jax.Array, per_mb: Dict[int, jax.Array],
+                        order: Sequence[int]) -> jax.Array:
+        out = zeros
+        for m in order:
+            out = out + per_mb[m]
+        return out
+
+    # ------------------------------------------------------------------
+    def _split_tokens(self, tokens):
+        return split_microbatches(tokens, self.ocfg.num_microbatches,
+                                  self.ocfg.micro_batch)
+
+    def _labels(self, tok_mb):
+        return shifted_labels(tok_mb)
+
+    def train_step(self, tokens: np.ndarray) -> float:
+        ocfg = self.ocfg
+        mbs = self._split_tokens(tokens)
+        self.step_num += 1
+        step = self.step_num
+        denom = jnp.asarray(float(np.prod(tokens.shape) - tokens.shape[0]),
+                            jnp.float32)
+
+        # ---------- forward ----------
+        if ocfg.alpha > 0 and step > 1:
+            for rk in self.ranks:
+                for l in range(self.L):
+                    rk.opt_c.flush_late(l, step - 1)
+                    rk.params_c.set_gate(
+                        l, (lambda c, ll: lambda: c.wait_late(ll))(
+                            rk.opt_c, l))
+        for rk in self.ranks:
+            order0 = self._rank_order(rk.index, 0)
+            for m in reversed(order0):
+                x = self.j_embed(self.embed, jnp.asarray(mbs[m]))
+                rk.ckpt_c.put_ckpt(0, m, x, keep_on_device=(m == order0[0]))
+        # submit ALL ranks' shard fetches before any is awaited — this is
+        # the aggregate-bandwidth lever (R engines × R path sets busy)
+        for rk in self.ranks:
+            rk.params_c.prefetch(0)
+        for l in range(self.L):
+            p_dev = self._allgather_params(l)
+            for rk in self.ranks:
+                rk.params_c.prefetch(l + 1)
+            for rk in self.ranks:
+                order = self._rank_order(rk.index, l)
+                for m in order:
+                    x = rk.ckpt_c.get_ckpt_fwd(l, m)
+                    y = self.j_layer_fwd(p_dev, x)
+                    rk.ckpt_c.put_ckpt(l + 1, m, y,
+                                       keep_on_device=(m == order[-1]))
+            del p_dev
+        jax.effects_barrier()
+
+        # ---------- backward (+ overlapped sharded optimizer) ----------
+        loss_total = 0.0
+        per_mb_head: Dict[int, tuple] = {}
+        for rk in self.ranks:
+            order = self._rank_order(rk.index, self.L)
+            for m in order:
+                x = rk.ckpt_c.get_ckpt_fwd(self.L, m)
+                lab, w = self._labels(mbs[m])
+                loss, du, dn, dx = self.j_head_bwd(
+                    self.unembed, self.final_norm, x, lab, w, denom)
+                per_mb_head[m] = (loss, du, dn)
+                rk.ckpt_c.put_grad(self.L, m, dx,
+                                   keep_on_device=(m == order[-1]))
+                rk.ckpt_c.drop_ckpt(self.L, m)
+        # fold losses and head grads in the single-rank engine's order
+        d_un = jnp.zeros_like(self.unembed, dtype=jnp.float32)
+        d_nm = jnp.zeros_like(self.final_norm, dtype=jnp.float32)
+        for m in self._mb_order(self.L):
+            loss, du, dn = per_mb_head[m]
+            loss_total += float(loss)
+            d_un = d_un + du
+            d_nm = d_nm + dn
+
+        for rk in self.ranks:
+            rk.params_c.reset()        # fwd->bwd boundary
+            rk.params_c.prefetch(self.L - 1)
+        for l in range(self.L - 1, -1, -1):
+            p_dev = self._allgather_params(l)
+            for rk in self.ranks:
+                rk.params_c.prefetch(l - 1)
+            per_mb_dp: Dict[int, jax.Array] = {}
+            for rk in self.ranks:
+                order = self._rank_order(rk.index, l)
+                for m in order:
+                    x = rk.ckpt_c.get_ckpt_bwd(l, m)
+                    dy = rk.ckpt_c.get_grad(l + 1, m)
+                    dx, dp, _ = self.j_layer_bwd(p_dev, x, dy)
+                    per_mb_dp[m] = dp
+                    rk.ckpt_c.put_grad(l, m, dx,
+                                       keep_on_device=(m == order[-1]))
+                    rk.ckpt_c.drop_ckpt(l, m)
+            self._reduce_scatter_update(l, per_mb_dp, step)
+            del p_dev
+
+        # embedding backward (replicated): per-rank compute, ordered fold
+        per_mb_de: Dict[int, jax.Array] = {}
+        for rk in self.ranks:
+            for m in reversed(self._rank_order(rk.index, 0)):
+                dx0 = rk.ckpt_c.get_grad(0, m)
+                per_mb_de[m] = self.j_embed_bwd(self.embed,
+                                                jnp.asarray(mbs[m]), dx0)
+        d_embed = self._allreduce_fold(
+            jnp.zeros_like(self.embed, dtype=jnp.float32), per_mb_de,
+            list(reversed(self._mb_order(0))))
+
+        # replicated head params: all-reduce the grads (ring: 2·(R-1)/R
+        # each way per rank) and apply the identical update everywhere
+        head_bytes = int(d_embed.nbytes + d_un.nbytes + d_nm.nbytes)
+        ring = 2 * (self.R - 1) * head_bytes // self.R
+        self._collective("head_grad", ring, ring)
+        for name, g in (("embed", d_embed), ("unembed", d_un),
+                        ("final_norm", d_nm)):
+            st = self.head_state[name]
+            p2, st["m"], st["v"] = self.j_adam_dev(
+                getattr(self, name), st["m"], st["v"], g,
+                jnp.asarray(step, jnp.int32), jnp.asarray(self.ocfg.lr))
+            setattr(self, name, p2)
+        if ocfg.alpha == 0:
+            for rk in self.ranks:
+                rk.opt_c.wait_all()
+        return loss_total
+
+    # ------------------------------------------------------------------
+    def finish(self):
+        """Flush α-pending optimizer shards and drain spills on every
+        rank; afterwards all meters are complete and deterministic."""
+        for rk in self.ranks:
+            for l in range(self.L):
+                rk.opt_c.flush_late(l, self.step_num)
+                rk.opt_c.wait_late(l)
+            rk.opt_c.wait_all()
+            rk.ckpt_c.wait_pending()
+
+    def read_params(self, l: int) -> np.ndarray:
+        """The full low-precision param vector of layer l, assembled from
+        the rank shards (validation/checkpointing)."""
+        out = np.empty(self.P, np.dtype(self.ocfg.param_dtype))
+        for rk, (lo, hi) in zip(self.ranks, self.bounds):
+            out[lo:hi] = rk.p_vecs[l].read()
+        return out
+
+    def traffic(self) -> List[Dict[str, int]]:
+        """Per-rank meter snapshots (index = rank)."""
+        return [rk.meter.snapshot() for rk in self.ranks]
+
+    def stats(self) -> Dict[str, object]:
+        return {
+            "ranks": self.R,
+            "bounds": list(self.bounds),
+            "io": [rk.ioe.stats() for rk in self.ranks],
+            "host_peak_nbytes": [rk.host.peak_nbytes for rk in self.ranks],
+        }
+
+    def close(self):
+        if self._closed:
+            return
+        self._closed = True
+        for rk in self.ranks:
+            rk.close()

@@ -75,6 +75,98 @@ def _make_unflatten(treedef, shapes, dtype):
     return unflatten
 
 
+def _adam_device(p, m, v, g, step, lr):
+    """Plain Adam for the device-resident embedding/head params."""
+    b1, b2, eps = 0.9, 0.95, 1e-8
+    g = g.astype(jnp.float32)
+    m2 = b1 * m + (1 - b1) * g
+    v2 = b2 * v + (1 - b2) * g * g
+    t = step.astype(jnp.float32)
+    up = (m2 / (1 - b1 ** t)) / (jnp.sqrt(v2 / (1 - b2 ** t)) + eps)
+    return (p.astype(jnp.float32) - lr * up).astype(p.dtype), m2, v2
+
+
+def build_block_fns(cfg, kind, unflatten) -> Dict[str, object]:
+    """Jitted per-layer / embedding / head functions, shared by the
+    single-rank and data-parallel engines. Both engines driving the SAME
+    compiled computations is what makes an R-rank run bit-identical
+    (f32) to a single-rank run — any per-engine recompilation could
+    legally re-fuse and break that."""
+
+    def layer_fwd(p_flat, x):
+        lp = unflatten(p_flat)
+        y, _, _ = blk.block_apply(lp, x, cfg, kind, mode="train")
+        return y
+
+    def layer_bwd(p_flat, x, dy):
+        y, vjp = jax.vjp(lambda p, xx: layer_fwd(p, xx), p_flat, x)
+        dp, dx = vjp(dy)
+        return dx, dp.astype(jnp.float32), y
+
+    def embed_fwd(embed, tokens):
+        return embed[tokens]
+
+    def head_loss(unembed, norm, x, labels, weights, denom):
+        h = rms_norm(x, norm, cfg.norm_eps)
+        tot, _ = _xent_chunk(h, unembed, labels, weights)
+        return tot / denom
+
+    def head_bwd(unembed, norm, x, labels, weights, denom):
+        (loss), vjp = jax.vjp(
+            lambda u, nm, xx: head_loss(u, nm, xx, labels, weights, denom),
+            unembed, norm, x)
+        du, dn, dx = vjp(jnp.ones((), jnp.float32))
+        return loss, du, dn, dx
+
+    def embed_bwd(embed, tokens, dx):
+        f = lambda e: e[tokens]
+        _, vjp = jax.vjp(f, embed)
+        return vjp(dx)[0]
+
+    return {
+        "layer_fwd": jax.jit(layer_fwd),
+        "layer_bwd": jax.jit(layer_bwd),
+        "embed": jax.jit(embed_fwd),
+        "head_bwd": jax.jit(head_bwd),
+        "embed_bwd": jax.jit(embed_bwd),
+        "adam_dev": jax.jit(_adam_device),
+    }
+
+
+def bind_block_fns(obj, fns: Dict[str, object]) -> None:
+    """Attach :func:`build_block_fns` results as the ``j_*`` attributes
+    both engines use."""
+    obj.j_layer_fwd = fns["layer_fwd"]
+    obj.j_layer_bwd = fns["layer_bwd"]
+    obj.j_embed = fns["embed"]
+    obj.j_head_bwd = fns["head_bwd"]
+    obj.j_embed_bwd = fns["embed_bwd"]
+    obj.j_adam_dev = fns["adam_dev"]
+
+
+def mb_order(M: int, l: int) -> List[int]:
+    """The §4.2 alternating micro-batch order for layer ``l`` — shared
+    by the single-rank and data-parallel engines; the R-rank
+    bit-parity guarantee depends on both using THIS function."""
+    return list(range(M)) if l % 2 == 0 else list(range(M - 1, -1, -1))
+
+
+def split_microbatches(tokens: np.ndarray, M: int, micro_batch: int
+                       ) -> np.ndarray:
+    assert tokens.shape[0] == M * micro_batch
+    return tokens.reshape(M, micro_batch, -1)
+
+
+def shifted_labels(tok_mb: np.ndarray):
+    """Next-token labels/weights for one micro-batch (last position
+    masked), identical across engines."""
+    lab = np.concatenate([tok_mb[:, 1:], np.zeros((tok_mb.shape[0], 1),
+                                                  tok_mb.dtype)], 1)
+    w = np.ones(tok_mb.shape, np.float32)
+    w[:, -1] = 0.0
+    return jnp.asarray(lab), jnp.asarray(w)
+
+
 class OffloadEngine:
     def __init__(self, cfg, ocfg: OffloadConfig, key, workdir: str):
         assert cfg.family in ("dense",), "engine drives homogeneous GPT stacks"
@@ -154,60 +246,23 @@ class OffloadEngine:
 
     # ------------------------------------------------------------------
     def _build_jit_fns(self):
-        cfg, kind = self.cfg, self.kind
-
-        def layer_fwd(p_flat, x):
-            lp = self._unflatten(p_flat)
-            y, _, _ = blk.block_apply(lp, x, cfg, kind, mode="train")
-            return y
-
-        def layer_bwd(p_flat, x, dy):
-            y, vjp = jax.vjp(lambda p, xx: layer_fwd(p, xx), p_flat, x)
-            dp, dx = vjp(dy)
-            return dx, dp.astype(jnp.float32), y
-
-        def embed_fwd(embed, tokens):
-            return embed[tokens]
-
-        def head_loss(unembed, norm, x, labels, weights, denom):
-            h = rms_norm(x, norm, cfg.norm_eps)
-            tot, _ = _xent_chunk(h, unembed, labels, weights)
-            return tot / denom
-
-        def head_bwd(unembed, norm, x, labels, weights, denom):
-            (loss), vjp = jax.vjp(
-                lambda u, nm, xx: head_loss(u, nm, xx, labels, weights, denom),
-                unembed, norm, x)
-            du, dn, dx = vjp(jnp.ones((), jnp.float32))
-            return loss, du, dn, dx
-
-        def embed_bwd(embed, tokens, dx):
-            f = lambda e: e[tokens]
-            _, vjp = jax.vjp(f, embed)
-            return vjp(dx)[0]
-
-        self.j_layer_fwd = jax.jit(layer_fwd)
-        self.j_layer_bwd = jax.jit(layer_bwd)
-        self.j_embed = jax.jit(embed_fwd)
-        self.j_head_bwd = jax.jit(head_bwd)
-        self.j_embed_bwd = jax.jit(embed_bwd)
-        self.j_adam_dev = jax.jit(self._adam_device)
-
-    def _adam_device(self, p, m, v, g, step, lr):
-        b1, b2, eps = 0.9, 0.95, 1e-8
-        g = g.astype(jnp.float32)
-        m2 = b1 * m + (1 - b1) * g
-        v2 = b2 * v + (1 - b2) * g * g
-        t = step.astype(jnp.float32)
-        up = (m2 / (1 - b1 ** t)) / (jnp.sqrt(v2 / (1 - b2 ** t)) + eps)
-        return (p.astype(jnp.float32) - lr * up).astype(p.dtype), m2, v2
+        bind_block_fns(self, build_block_fns(self.cfg, self.kind,
+                                             self._unflatten))
 
     # ------------------------------------------------------------------
     def _mb_order(self, l: int) -> List[int]:
         """Alternating micro-batch order between consecutive layers (§4.2)
-        so the boundary micro-batch's activations stay on device."""
-        M = self.ocfg.num_microbatches
-        return list(range(M)) if l % 2 == 0 else list(range(M - 1, -1, -1))
+        so the boundary micro-batch's activations stay on device.
+
+        Discipline (validated by the boundary-micro-batch test): every
+        producer emits a boundary's tensors in the REVERSE of its
+        consumer's order and keeps the last-produced one on device, so
+        the consumer's FIRST access hits the device slot and frees it
+        immediately. The coordinators enforce this strictly — a kept
+        tensor consumed out of order is evicted (checkpoint) or spilled
+        (inter-layer gradient), exactly what a memory-bound GPU would do.
+        """
+        return mb_order(self.ocfg.num_microbatches, l)
 
     def train_step(self, tokens: np.ndarray) -> float:
         if self.ocfg.schedule == "vertical":
@@ -216,16 +271,11 @@ class OffloadEngine:
 
     # ------------------------------------------------------------------
     def _split_tokens(self, tokens):
-        M, mb = self.ocfg.num_microbatches, self.ocfg.micro_batch
-        assert tokens.shape[0] == M * mb
-        return tokens.reshape(M, mb, -1)
+        return split_microbatches(tokens, self.ocfg.num_microbatches,
+                                  self.ocfg.micro_batch)
 
     def _labels(self, tok_mb):
-        lab = np.concatenate([tok_mb[:, 1:], np.zeros((tok_mb.shape[0], 1),
-                                                      tok_mb.dtype)], 1)
-        w = np.ones(tok_mb.shape, np.float32)
-        w[:, -1] = 0.0
-        return jnp.asarray(lab), jnp.asarray(w)
+        return shifted_labels(tok_mb)
 
     def _step_vertical(self, tokens: np.ndarray) -> float:
         ocfg = self.ocfg
@@ -245,10 +295,13 @@ class OffloadEngine:
                 self.opt_c.flush_late(l, step - 1)
                 self.params_c.set_gate(
                     l, (lambda ll: lambda: self.opt_c.wait_late(ll))(l))
-        for m in self._mb_order(0):
+        # Embedding produces boundary 0 in the REVERSE of layer 0's
+        # consumption order so the kept micro-batch is the first one layer
+        # 0 consumes (§4.2 alternating-order discipline, see _mb_order).
+        order0 = self._mb_order(0)
+        for m in reversed(order0):
             x = self.j_embed(self.embed, jnp.asarray(mbs[m]))
-            self.ckpt_c.put_ckpt(0, m, x,
-                                 keep_on_device=(m == self._mb_order(0)[-1]))
+            self.ckpt_c.put_ckpt(0, m, x, keep_on_device=(m == order0[0]))
         self.params_c.prefetch(0)
         for l in range(self.L):
             p_dev = self.params_c.get(l)
@@ -288,7 +341,11 @@ class OffloadEngine:
             p_dev = self.params_c.get(l)
             self.params_c.prefetch(l - 1)
             gacc = jnp.zeros((self.P,), jnp.float32)
-            order = self._mb_order(l + 1)  # consume grads in producer order
+            # Alternate between consecutive backward layers too: layer l+1
+            # produced grad(l+1) in _mb_order(l+1); consuming in
+            # _mb_order(l) (its reverse) makes the device-kept gradient
+            # this layer's FIRST input, so the slot frees immediately.
+            order = self._mb_order(l)
             for m in order:
                 x = self.ckpt_c.get_ckpt_bwd(l, m)
                 dy = self.ckpt_c.get_grad(l + 1, m)
@@ -300,8 +357,9 @@ class OffloadEngine:
             # fully-accumulated layer grads -> CPU, optimizer overlapped
             self.opt_c.submit_early(l, gacc, step)
             del p_dev
-        # embedding backward
-        for m in self._mb_order(0):
+        # embedding backward: layer 0 produced grad(0) in _mb_order(0),
+        # so consume in reverse — the kept micro-batch comes first.
+        for m in reversed(self._mb_order(0)):
             dx0 = self.ckpt_c.get_grad(0, m)
             d_embed += self.j_embed_bwd(self.embed, jnp.asarray(mbs[m]), dx0)
         self.phase_time["bwd"] += time.perf_counter() - t0

@@ -155,15 +155,26 @@ class SSDStore:
             return out
         return arr
 
-    def read_range(self, name: str, lo: int, hi: int, category: str
-                   ) -> np.ndarray:
+    def read_range(self, name: str, lo: int, hi: int, category: str,
+                   out: Optional[np.ndarray] = None) -> np.ndarray:
         """Partial read of elements [lo, hi) — only the needed fraction
-        touches the SSD paths (the paper's chunked optimizer I/O)."""
+        touches the SSD paths (the paper's chunked optimizer I/O; the
+        data-parallel engine's rank-shard fetches). With a contiguous
+        ``out`` of the right size the chunk ops land directly in the
+        caller's buffer (no intermediate allocation)."""
         _, dtype = self._meta(name)
-        arr = np.empty(hi - lo, dtype)
+        n = hi - lo
+        if out is not None and out.flags.c_contiguous \
+                and out.size == n and out.dtype == dtype:
+            arr = out
+        else:
+            arr = np.empty(n, dtype)
         self.files.readinto(name, _u8(arr), lo * dtype.itemsize,
                             _priority(category))
         self.meter.add(category, "ssd->cpu", arr.nbytes)
+        if out is not None and arr is not out:
+            np.copyto(out, arr)
+            return out
         return arr
 
     def write_range(self, name: str, arr: np.ndarray, lo: int,
@@ -320,7 +331,7 @@ class TieredVector:
             np.copyto(out[:h - lo], self.host.get(self.name + ":h")[lo:h])
         if hi > self.k:
             lo_s = max(lo, self.k)
-            seg = self.ssd.read_range(self.name + ":s", lo_s - self.k,
-                                      hi - self.k, self.category)
-            np.copyto(out[lo_s - lo:], seg)
+            self.ssd.read_range(self.name + ":s", lo_s - self.k,
+                                hi - self.k, self.category,
+                                out=out[lo_s - lo:])
         return out

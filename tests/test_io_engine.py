@@ -128,6 +128,29 @@ def test_backpressure_budget():
         assert eng.stats()["max_inflight_bytes"] <= 1000
 
 
+def test_default_config_not_shared_between_engines():
+    """Regression: the default IOConfig used to be created once at
+    class-definition time, so every default-constructed engine aliased
+    the same config object (and the same mutable ``bandwidth`` dict)."""
+    with tempfile.TemporaryDirectory() as d:
+        e1 = IOEngine(default_root=os.path.join(d, "a"))
+        e2 = IOEngine(default_root=os.path.join(d, "b"))
+        try:
+            assert e1.config is not e2.config
+            assert e1.config.bandwidth is not e2.config.bandwidth
+            # mutating one engine's bandwidth map must not leak into the
+            # other engine's config or pacing
+            e1.config.bandwidth["cpu->ssd"] = 1.0
+            assert "cpu->ssd" not in e2.config.bandwidth
+            assert e2.simulator.cap("cpu->ssd") is None
+            # and per-engine state is per-engine
+            assert e1.staging is not e2.staging
+            assert e1.simulator is not e2.simulator
+        finally:
+            e1.shutdown()
+            e2.shutdown()
+
+
 # ---------------------------------------------------------------------------
 # chunked striped storage
 # ---------------------------------------------------------------------------
@@ -225,6 +248,10 @@ def test_tiered_vector_through_engine():
         np.testing.assert_array_equal(tv.read(), full)
         np.testing.assert_array_equal(tv.read_range(1900, 2600),
                                       full[1900:2600])
+        # out= lands the SSD chunks straight in the caller's buffer
+        out = np.empty(700, np.float32)
+        assert tv.read_range(1900, 2600, out=out) is out
+        np.testing.assert_array_equal(out, full[1900:2600])
         ssd.close()
 
 

@@ -1,0 +1,234 @@
+"""Fault-injection battery for `repro.io`: chunk ops that fail on demand
+must propagate errors to `IORequest.result()`, release the in-flight
+byte budget (no backpressure leak), leave worker/channel threads alive,
+and honour the `IORequest.cancel` contract for queued vs in-flight
+requests — all without deadlocking (every wait below is bounded).
+"""
+import errno
+import os
+import tempfile
+import threading
+from concurrent.futures import CancelledError
+
+import numpy as np
+import pytest
+
+from repro.io import IOConfig, IOEngine, IOPriority, StripedFiles
+from repro.offload.stores import SSDStore, TrafficMeter
+
+T = 5.0  # every blocking call in this file is bounded by this
+
+
+class FaultyFiles(StripedFiles):
+    """StripedFiles whose raw chunk ops fail on demand.
+
+    ``fail_writes`` / ``fail_reads`` are countdown fuses: each faulting
+    op decrements its fuse and raises until it reaches zero.
+    ``short_reads`` instead makes reads return half the requested bytes
+    (exercises the short-read detection path).
+    """
+
+    def __init__(self, engine):
+        super().__init__(engine)
+        self.fail_writes = 0
+        self.fail_reads = 0
+        self.short_reads = 0
+        self.ops = 0
+
+    def _pwrite(self, fd, mv, off):
+        self.ops += 1
+        if self.fail_writes > 0:
+            self.fail_writes -= 1
+            raise OSError(errno.EIO, "injected write fault")
+        super()._pwrite(fd, mv, off)
+
+    def _pread(self, fd, mv, off):
+        self.ops += 1
+        if self.fail_reads > 0:
+            self.fail_reads -= 1
+            raise OSError(errno.EIO, "injected read fault")
+        if self.short_reads > 0:
+            self.short_reads -= 1
+            return max(0, super()._pread(fd, mv, off) // 2)
+        return super()._pread(fd, mv, off)
+
+
+def _faulty_store(root, **cfg_kw):
+    cfg_kw.setdefault("chunk_bytes", 1 << 10)
+    eng = IOEngine(IOConfig(paths=[os.path.join(root, "nvme0")], **cfg_kw))
+    ssd = SSDStore(eng.paths[0], TrafficMeter(), engine=eng)
+    ssd.files.close()
+    ssd.files = FaultyFiles(eng)          # swap in the faulting backend
+    return eng, ssd
+
+
+# ---------------------------------------------------------------------------
+# error propagation + budget release
+# ---------------------------------------------------------------------------
+
+def test_async_write_fault_propagates_to_result():
+    with tempfile.TemporaryDirectory() as d:
+        eng, ssd = _faulty_store(d)
+        ssd.files.fail_writes = 1
+        req = ssd.write_async("t", np.arange(256, dtype=np.float32), "ckpt")
+        with pytest.raises(OSError, match="injected write fault"):
+            req.result(timeout=T)
+        assert req.done() and not req.cancelled()
+        ssd.close()
+
+
+def test_sync_read_write_faults_propagate():
+    with tempfile.TemporaryDirectory() as d:
+        eng, ssd = _faulty_store(d)
+        arr = np.arange(4096, dtype=np.float32)
+        ssd.write("t", arr, "opt")                      # clean write
+        ssd.files.fail_reads = 1
+        with pytest.raises(OSError, match="injected read fault"):
+            ssd.read("t", "opt")
+        # clean read: drains the failed read's leftover chunk ops (the
+        # single channel thread is FIFO) and proves the data is intact
+        np.testing.assert_array_equal(ssd.read("t", "opt"), arr)
+        ssd.files.short_reads = 1
+        with pytest.raises(IOError, match="short read"):
+            ssd.read("t", "opt")
+        ssd.files.short_reads = 0
+        np.testing.assert_array_equal(ssd.read("t", "opt"), arr)
+        ssd.close()
+
+
+def test_failed_request_releases_inflight_budget():
+    """A failed request must not leak its bytes from the backpressure
+    budget: a follow-up request that needs the whole budget is admitted
+    promptly instead of blocking forever."""
+    with tempfile.TemporaryDirectory() as d:
+        eng, ssd = _faulty_store(d, inflight_bytes=4096)
+        ssd.files.fail_writes = 1
+        big = np.zeros(1024, np.uint8)                  # budget / 4
+        req = ssd.write_async("t", big, "ckpt")
+        with pytest.raises(OSError):
+            req.result(timeout=T)
+        s = eng.stats()
+        assert s["inflight_bytes"] == 0, "failed request leaked its bytes"
+        assert s["completed"] == s["submitted"]
+        # a request that needs the ENTIRE budget must get through
+        admitted = threading.Event()
+
+        def whole_budget():
+            eng.submit(lambda: None, priority=IOPriority.CKPT_SPILL,
+                       nbytes=4096).result(timeout=T)
+            admitted.set()
+
+        t = threading.Thread(target=whole_budget, daemon=True)
+        t.start()
+        assert admitted.wait(T), "budget was leaked by the failed request"
+        t.join(T)
+        ssd.close()
+
+
+def test_failed_async_spill_releases_staging_buffer():
+    """write_async stages through the double-buffered pool; a failing
+    write must still release its staging slot (checked by acquiring the
+    full pool afterwards without blocking)."""
+    with tempfile.TemporaryDirectory() as d:
+        eng, ssd = _faulty_store(d, staging_buffers=2)
+        ssd.files.fail_writes = 2
+        for i in range(2):
+            with pytest.raises(OSError):
+                ssd.write_async(f"t{i}", np.zeros(64, np.uint8),
+                                "ckpt").result(timeout=T)
+        got = threading.Event()
+
+        def drain_pool():
+            a = eng.staging.acquire(64)
+            b = eng.staging.acquire(64)
+            got.set()
+            a.release()
+            b.release()
+
+        t = threading.Thread(target=drain_pool, daemon=True)
+        t.start()
+        assert got.wait(T), "failed spill leaked a staging buffer"
+        t.join(T)
+        ssd.close()
+
+
+# ---------------------------------------------------------------------------
+# worker survival
+# ---------------------------------------------------------------------------
+
+def test_worker_threads_survive_fault_storm():
+    """20 consecutive failing requests must not kill the request workers
+    or the path channel threads: a clean write afterwards round-trips."""
+    with tempfile.TemporaryDirectory() as d:
+        eng, ssd = _faulty_store(d, workers=2)
+        ssd.files.fail_writes = 20
+        reqs = [ssd.write_async(f"t{i}", np.zeros(32, np.uint8), "ckpt")
+                for i in range(20)]
+        for r in reqs:
+            with pytest.raises(OSError):
+                r.result(timeout=T)
+        arr = np.arange(2048, dtype=np.float32)
+        ssd.write("ok", arr, "opt")
+        np.testing.assert_array_equal(ssd.read("ok", "opt"), arr)
+        s = eng.stats()
+        assert s["completed"] == s["submitted"]
+        assert s["inflight_bytes"] == 0
+        ssd.close()
+
+
+# ---------------------------------------------------------------------------
+# cancellation contract (queued vs in-flight), bounded waits throughout
+# ---------------------------------------------------------------------------
+
+def test_cancel_queued_request_contract():
+    with tempfile.TemporaryDirectory() as d:
+        eng = IOEngine(IOConfig(paths=[os.path.join(d, "p")], workers=1))
+        gate, started = threading.Event(), threading.Event()
+
+        def block():
+            started.set()
+            gate.wait(T)
+
+        blocker = eng.submit(block, priority=IOPriority.PARAM_FETCH,
+                             nbytes=10)
+        assert started.wait(T)
+        victim = eng.submit(lambda: None, priority=IOPriority.CKPT_SPILL,
+                            nbytes=77)
+        assert victim.cancel() is True        # queued: cancel succeeds
+        assert victim.cancel() is True        # idempotent per Future
+        assert victim.cancelled() and victim.done()
+        with pytest.raises(CancelledError):
+            victim.result(timeout=T)
+        gate.set()
+        blocker.result(timeout=T)
+        s = eng.stats()
+        assert s["cancelled"] == 1            # settled exactly once
+        assert s["inflight_bytes"] == 0       # victim's 77 bytes released
+        eng.shutdown()
+
+
+def test_cancel_inflight_request_contract():
+    """A running request cannot be cancelled; cancel() returns False and
+    the request is drained to completion (or failure) normally."""
+    with tempfile.TemporaryDirectory() as d:
+        eng, ssd = _faulty_store(d, workers=1)
+        gate, started = threading.Event(), threading.Event()
+
+        def block():
+            started.set()
+            gate.wait(T)
+            raise OSError(errno.EIO, "late fault")
+
+        req = eng.submit(block, priority=IOPriority.OPTIMIZER_STATE,
+                         nbytes=123)
+        assert started.wait(T)
+        assert req.cancel() is False          # in-flight: best-effort only
+        assert not req.cancelled()
+        gate.set()
+        with pytest.raises(OSError, match="late fault"):
+            req.result(timeout=T)
+        assert req.cancel() is False          # done: still not cancellable
+        s = eng.stats()
+        assert s["cancelled"] == 0
+        assert s["inflight_bytes"] == 0       # failure released the bytes
+        ssd.close()

@@ -83,6 +83,40 @@ def test_vertical_param_traffic_independent_of_M():
     assert p8 == routes[("param", "cpu->gpu")] == 2 * eng2.L * eng2.P * 4
 
 
+def test_boundary_microbatch_ckpt_stays_on_device(monkeypatch):
+    """§4.2: the alternating micro-batch order keeps each boundary's
+    last-produced checkpoint (and inter-layer gradient) on device, so the
+    measured ckpt bytes equal the exact closed form "read twice minus the
+    on-device boundary micro-batch" — and perturbing the order evicts
+    exactly one micro-batch per interior boundary."""
+    from repro.core.traffic import vertical_ckpt_traffic
+    from repro.offload import OffloadEngine
+
+    _, routes, eng = _run("vertical", steps=1)
+    u = MB * S * CFG.d_model * 4          # one boundary tensor, f32
+    ct = vertical_ckpt_traffic(eng.L * u, M, eng.L)
+    assert routes[("ckpt", "gpu->cpu")] == ct.write
+    assert routes[("ckpt", "cpu->gpu")] == ct.read
+    ig = routes[("inter_grad", "gpu->cpu")] \
+        + routes[("inter_grad", "cpu->gpu")]
+    assert ig == ct.inter_grad
+
+    # Perturb the order (always ascending): every interior boundary's
+    # kept micro-batch is now consumed LAST, so the device slot is lost
+    # and the engine pays the re-read / spill the §4.2 order avoids.
+    monkeypatch.setattr(OffloadEngine, "_mb_order",
+                        lambda self, l: list(range(M)))
+    _, bad, _ = _run("vertical", steps=1)
+    extra_read = bad[("ckpt", "cpu->gpu")] - ct.read
+    extra_ig = (bad[("inter_grad", "gpu->cpu")]
+                + bad[("inter_grad", "cpu->gpu")]) - ct.inter_grad
+    assert (extra_read, extra_ig) == (eng.L * u, 2 * eng.L * u), (
+        f"perturbed _mb_order: expected exactly {eng.L} evicted boundary "
+        f"checkpoints (+{eng.L * u} read bytes) and {eng.L} spilled "
+        f"inter-layer gradients (+{2 * eng.L * u} bytes); measured "
+        f"+{extra_read} ckpt-read and +{extra_ig} inter-grad bytes")
+
+
 def test_ssd_files_actually_used():
     """With x=0 everything lives on SSD: files must be read and written."""
     _, routes, _ = _run("vertical", ratios=StorageRatios(0.0, 0.0, 0.0),
