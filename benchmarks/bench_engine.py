@@ -1,20 +1,32 @@
-"""Measured wall-clock of the REAL offload engine on this container:
-vertical vs horizontal schedule, same model / batch / storage split.
+"""Measured wall-clock + traffic of the REAL offload engine on this
+container: vertical vs horizontal schedule, plus the wave hybrid's
+ckpt-traffic / param-reuse interpolation.
 
 This is the system-level counterpart of Fig. 10 that actually runs here
 (file-backed SSD tier, threaded prefetch + CPU-Adam overlap). Absolute
 numbers reflect this container's CPU; the vertical/horizontal ratio is
-the paper's effect, reproduced with real I/O.
+the paper's effect, reproduced with real I/O. All three schedules are
+compiled ``repro.core.plan`` plans walked by the one executor.
+
+    PYTHONPATH=src python benchmarks/bench_engine.py
+        [--schedule all|vertical|horizontal|wave] [--smoke]
 """
 from __future__ import annotations
 
+import argparse
+import os
+import sys
 import tempfile
 import time
 from typing import Optional
 
 import jax
 
-from benchmarks.common import Reporter
+try:
+    from benchmarks.common import Reporter
+except ImportError:     # run directly as a script: benchmarks/ not a pkg
+    sys.path.insert(0, os.path.dirname(__file__))
+    from common import Reporter
 from repro.configs import get_config
 from repro.core.perfmodel import StorageRatios
 from repro.data import SyntheticLM
@@ -22,11 +34,13 @@ from repro.offload import OffloadConfig, OffloadEngine
 
 
 def _measure(cfg, sched: str, M: int, mb: int, s: int, alpha: float,
-             ratios: StorageRatios, iters: int = 3) -> dict:
+             ratios: StorageRatios, iters: int = 3,
+             wave_size: int = 0) -> dict:
     with tempfile.TemporaryDirectory() as d:
         eng = OffloadEngine(cfg, OffloadConfig(
             schedule=sched, num_microbatches=M, micro_batch=mb, seq_len=s,
-            alpha=alpha, ratios=ratios), jax.random.PRNGKey(0), d)
+            alpha=alpha, ratios=ratios, wave_size=wave_size),
+            jax.random.PRNGKey(0), d)
         data = SyntheticLM(cfg.vocab_size, seed=0)
         eng.train_step(data.batch(M * mb, s))  # compile warm-up
         eng.meter.reset()
@@ -35,9 +49,54 @@ def _measure(cfg, sched: str, M: int, mb: int, s: int, alpha: float,
             eng.train_step(data.batch(M * mb, s))
         eng.finish()
         dt = (time.perf_counter() - t0) / iters
-        traffic = sum(eng.meter.snapshot().values())
+        routes = dict(eng.meter.bytes)
+        traffic = sum(routes.values())
         eng.close()
-    return {"s_per_iter": dt, "traffic_bytes_per_iter": traffic / iters}
+
+    def per_iter(cat):
+        return sum(v for (c, r), v in routes.items() if c == cat) / iters
+
+    return {"s_per_iter": dt, "traffic_bytes_per_iter": traffic / iters,
+            "param_bytes_per_iter": per_iter("param"),
+            "ckpt_bytes_per_iter": per_iter("ckpt"),
+            "inter_grad_bytes_per_iter": per_iter("inter_grad"),
+            "grad_bytes_per_iter": per_iter("grad")}
+
+
+def run_wave(rep: Optional[Reporter] = None, smoke: bool = False) -> dict:
+    """The wave-schedule interpolation datapoint: sweeping W from 1
+    (horizontal) to M (vertical) trades checkpoint + inter-layer
+    gradient traffic against parameter reloads — measured on the real
+    engine, one compiled plan per W. Returns {W: measurement}."""
+    rep = rep or Reporter()
+    if smoke:
+        cfg, M, mb, s, iters = get_config("gpt-tiny"), 4, 1, 64, 1
+    else:
+        cfg, M, mb, s, iters = get_config("gpt-100m"), 8, 1, 128, 2
+    ratios = StorageRatios(0.0, 0.0, 0.0)
+    rep.section(f"engine: wave schedule sweep ({cfg.name}, M={M}, "
+                "x=(0,0,0))")
+    out = {}
+    for W in sorted({1, 2, M}):
+        r = _measure(cfg, "wave", M, mb, s, alpha=0.0, ratios=ratios,
+                     iters=iters, wave_size=W)
+        out[W] = r
+        name = {1: "horizontal", M: "vertical"}.get(W, "wave")
+        rep.add(f"engine/wave_W{W}_s_per_iter", f"{r['s_per_iter']:.3f}",
+                f"{name}; param {r['param_bytes_per_iter'] / 1e6:.1f} MB, "
+                f"ckpt+ig {(r['ckpt_bytes_per_iter'] + r['inter_grad_bytes_per_iter']) / 1e6:.1f} MB/iter")
+    ws = sorted(out)
+    param = [out[w]["param_bytes_per_iter"] for w in ws]
+    reread = [out[w]["ckpt_bytes_per_iter"]
+              + out[w]["inter_grad_bytes_per_iter"] for w in ws]
+    assert param == sorted(param, reverse=True), \
+        f"param bytes must fall with W: {dict(zip(ws, param))}"
+    assert reread == sorted(reread), \
+        f"ckpt+inter-grad bytes must rise with W: {dict(zip(ws, reread))}"
+    rep.add("engine/wave_interpolates", "yes",
+            f"param {param[0] / param[-1]:.1f}x down, "
+            f"ckpt+ig {reread[-1] / max(reread[0], 1):.1f}x up across W")
+    return out
 
 
 def run(rep: Optional[Reporter] = None) -> None:
@@ -68,5 +127,19 @@ def run(rep: Optional[Reporter] = None) -> None:
             f"{rv['s_per_iter']:.3f}", "with delayed optimizer step")
 
 
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--schedule", default="all",
+                    choices=["all", "vertical", "horizontal", "wave"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny config, 1 iteration (CI)")
+    args = ap.parse_args(argv)
+    rep = Reporter()
+    if args.schedule in ("all", "vertical", "horizontal"):
+        run(rep)
+    if args.schedule in ("all", "wave"):
+        run_wave(rep, smoke=args.smoke)
+
+
 if __name__ == "__main__":
-    run()
+    main()

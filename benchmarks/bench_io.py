@@ -68,6 +68,9 @@ def main() -> None:
     ap.add_argument("--chunk-kb", type=int, default=1024)
     ap.add_argument("--cap-mbs", type=float, default=150.0)
     ap.add_argument("--csv", default="")
+    ap.add_argument("--json", default="", help="dump measured link rates "
+                    "(bytes/s) for perfmodel.machine_from_bench, so "
+                    "Algorithm 1 solves against THIS container's speeds")
     args = ap.parse_args()
 
     rep = Reporter()
@@ -126,6 +129,19 @@ def main() -> None:
     rep.add("bytes_benchmarked", gb(nbytes), "GB per striping config")
     if args.csv:
         rep.dump_csv(args.csv)
+    if args.json:
+        import json
+        results = {
+            "size_bytes": nbytes,
+            "chunk_bytes": chunk,
+            "paths": {str(P): {"write_bps": nbytes / t_write[P],
+                               "read_bps": nbytes / t_read[P]}
+                      for P in args.paths},
+        }
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2)
+        rep.add("json", args.json,
+                "feed to repro.core.perfmodel.machine_from_bench")
 
 
 if __name__ == "__main__":

@@ -41,7 +41,8 @@ class LPSolution:
 
 
 def solve_config(m: MachineParams, w: Workload, n: int, alpha: float,
-                 num_gpus: int = 1) -> Optional[LPSolution]:
+                 num_gpus: int = 1,
+                 wave: Optional[int] = None) -> Optional[LPSolution]:
     """One LP solve for fixed (n, α). Returns None if infeasible.
 
     With ``num_gpus=R > 1`` the LP models the R-way data-parallel
@@ -50,15 +51,29 @@ def solve_config(m: MachineParams, w: Workload, n: int, alpha: float,
     the micro-batches (``n`` must divide by R), ``m.cpu_mem`` is
     per-rank DRAM, and two constant interconnect rows join the stage
     lower bounds (per-layer-boundary all-gathers, f32 reduce-scatter)
-    paced by ``m.interconnect_bw``."""
+    paced by ``m.interconnect_bw``.
+
+    With ``wave=W`` (single-GPU only) the LP models the wave hybrid of
+    ``repro.core.plan.compile_wave``: the parameter-load terms scale by
+    ``nw = n/W``, the cross-wave f32 grad-buffer swap joins the PCIe
+    rows, and — unlike vertical's ~3-layer transient — the FULL f32
+    accumulation buffer stays CPU-resident across waves, tightening the
+    memory row. ``wave=None`` (or ``wave == n``) is vertical."""
     R = int(num_gpus)
     ms_full, grad_full = w.ms, w.grad_bytes
     if R > 1:
         if n % R:
             return None
+        if wave not in (None, n):
+            return None          # DP plans are vertical (W == n)
+        wave = None              # normalize before n is divided by R
         w = dataclasses.replace(w, ms=w.ms / R, os_bytes=w.os_bytes / R,
                                 grad_bytes=w.grad_bytes / R)
         n = n // R
+    W = n if wave is None else int(wave)
+    if W < 1 or n % W:
+        return None
+    nw = n // W
     t_f1, t_b1 = compute_times(w, m)
     rd, wr = m.ssd_read_bw, m.ssd_write_bw
     A_ub: List[List[float]] = []
@@ -78,33 +93,36 @@ def solve_config(m: MachineParams, w: Workload, n: int, alpha: float,
     c = np.array([-REG * 2 * n * w.cs, -REG * 2 * w.ms,
                   -REG * 2 * w.os_bytes, 1.0, 1.0])
 
-    # CPU memory: n*cs*x_c + ms*x_p + os*x_o + transient layer grads <= DRAM.
-    # Vertical keeps only ~3 layers of gradients in flight (§4.3); the
-    # α-delayed fraction reuses reclaimed param/ckpt memory (§4.4), so it
-    # adds no net footprint but must FIT in that reclaimed memory:
-    #   α·grad_bytes <= ms·x_p + n·cs·x_c
+    # CPU memory: n*cs*x_c + ms*x_p + os*x_o + resident grads <= DRAM.
+    # Vertical (nw=1) keeps only ~3 layers of gradients in flight (§4.3);
+    # a multi-wave schedule parks the FULL f32 accumulation buffer in CPU
+    # between waves. The α-delayed fraction reuses reclaimed param/ckpt
+    # memory (§4.4), so it adds no net footprint but must FIT in that
+    # reclaimed memory:  α·grad_bytes <= ms·x_p + n·cs·x_c
+    grad_resident = w.grad_transient if nw == 1 else w.grad_bytes
     add([n * w.cs, w.ms, w.os_bytes, 0, 0],
-        m.cpu_mem * 0.95 - w.grad_transient)
+        m.cpu_mem * 0.95 - grad_resident)
     add([-n * w.cs, -w.ms, 0, 0, 0], -alpha * w.grad_bytes)
 
     # --- forward stage lower bounds ---
     add_time_lb(3, n * t_f1)                                   # GPU compute
-    #   SSD: reads  ms(1-x_p)/rd + α·os(1-x_o)/rd
+    #   SSD: reads  nw·ms(1-x_p)/rd + α·os(1-x_o)/rd
     #        writes n·cs(1-x_c)/wr + α·os(1-x_o)/wr
-    const_f = w.ms / rd + n * w.cs / wr + alpha * w.os_bytes * (1 / rd + 1 / wr)
-    add_time_lb(3, const_f, (n * w.cs / wr, w.ms / rd,
+    const_f = nw * w.ms / rd + n * w.cs / wr \
+        + alpha * w.os_bytes * (1 / rd + 1 / wr)
+    add_time_lb(3, const_f, (n * w.cs / wr, nw * w.ms / rd,
                              alpha * w.os_bytes * (1 / rd + 1 / wr)))
     adam_t = (w.os_bytes + w.grad_bytes) / m.cpu_adam_bw
     add_time_lb(3, alpha * adam_t)                             # CPU Adam (α part)
-    pc = tr.vertical_traffic(w.ms, w.cs, n)
-    pcie_fwd = w.ms + (2 * n - 1) * w.cs
+    pc = tr.wave_traffic(w.ms, w.cs, n, W)
+    pcie_fwd = nw * w.ms + (2 * n - nw) * w.cs
     add_time_lb(3, pcie_fwd / m.pcie_bw)                       # PCIe
 
     # --- backward stage lower bounds ---
     add_time_lb(4, n * t_b1)
-    const_b = w.ms / rd + n * w.cs / rd \
+    const_b = nw * w.ms / rd + n * w.cs / rd \
         + (1 - alpha) * w.os_bytes * (1 / rd + 1 / wr)
-    add_time_lb(4, const_b, (n * w.cs / rd, w.ms / rd,
+    add_time_lb(4, const_b, (n * w.cs / rd, nw * w.ms / rd,
                              (1 - alpha) * w.os_bytes * (1 / rd + 1 / wr)))
     add_time_lb(4, (1 - alpha) * adam_t)
     add_time_lb(4, max(0.0, pc.total - pcie_fwd) / m.pcie_bw)

@@ -54,11 +54,58 @@ def machine_from_bandwidth(bandwidth, base: Optional[MachineParams] = None
         ssd_write_bw=float(bandwidth.get("cpu->ssd", base.ssd_write_bw)))
 
 
+def machine_from_bench(source, base: Optional[MachineParams] = None
+                       ) -> MachineParams:
+    """MachineParams whose SSD link rates come from a MEASURED
+    ``benchmarks/bench_io.py --json`` run on this container (the ROADMAP
+    item: Algorithm 1 solving against real link speeds rather than
+    datasheet A100-node numbers).
+
+    ``source`` is the path to the dumped JSON (or an already-parsed
+    dict). Recognised keys: explicit ``ssd_read_bw`` / ``ssd_write_bw``
+    / ``pcie_bw`` (bytes/s), else the best rate across the per-path-count
+    measurements under ``"paths": {"<P>": {"read_bps", "write_bps"}}``
+    (multi-path striping IS the device's aggregate rate here)."""
+    if isinstance(source, (str, bytes)):
+        import json
+        with open(source) as f:
+            data = json.load(f)
+    else:
+        data = dict(source)
+    base = base or MachineParams()
+    paths = data.get("paths", {})
+    best_rd = max((float(v["read_bps"]) for v in paths.values()),
+                  default=base.ssd_read_bw)
+    best_wr = max((float(v["write_bps"]) for v in paths.values()),
+                  default=base.ssd_write_bw)
+    return dataclasses.replace(
+        base, name=f"{base.name}-bench",
+        ssd_read_bw=float(data.get("ssd_read_bw", best_rd)),
+        ssd_write_bw=float(data.get("ssd_write_bw", best_wr)),
+        pcie_bw=float(data.get("pcie_bw", base.pcie_bw)))
+
+
 def transfer_seconds(m: MachineParams, route: str, nbytes: float) -> float:
     """Predicted wall-clock for moving ``nbytes`` over one route."""
     bw = {"cpu->gpu": m.pcie_bw, "gpu->cpu": m.pcie_bw,
           "ssd->cpu": m.ssd_read_bw, "cpu->ssd": m.ssd_write_bw}[route]
     return nbytes / bw
+
+
+def route_seconds(m: MachineParams, routes) -> dict:
+    """Per-route predicted seconds for a ``(category, route) -> bytes``
+    counter map — the shape :func:`repro.core.plan.plan_traffic` emits
+    and the engines' ``TrafficMeter`` measures. This is the bridge from
+    the schedule IR's static byte prediction to this time model: each
+    link's lower bound is the sum of its categories' bytes over its
+    bandwidth (``net`` routes use the DP interconnect)."""
+    bw = {"cpu->gpu": m.pcie_bw, "gpu->cpu": m.pcie_bw,
+          "ssd->cpu": m.ssd_read_bw, "cpu->ssd": m.ssd_write_bw,
+          "gpu->net": m.interconnect_bw, "net->gpu": m.interconnect_bw}
+    out: dict = {}
+    for (_, route), nbytes in routes.items():
+        out[route] = out.get(route, 0.0) + nbytes / bw[route]
+    return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,6 +209,37 @@ def iteration_time_vertical(w: Workload, m: MachineParams, M: int,
     adam_t = (w.os_bytes + w.grad_bytes) / m.cpu_adam_bw
     t_fwd = max(M * t_f1, pcie_fwd / m.pcie_bw, fwd_ssd, alpha * adam_t)
     t_bwd = max(M * t_b1, pcie_bwd / m.pcie_bw, bwd_ssd, (1 - alpha) * adam_t)
+    return t_fwd + t_bwd
+
+
+def iteration_time_wave(w: Workload, m: MachineParams, M: int, W: int,
+                        alpha: float, x: StorageRatios) -> float:
+    """The wave hybrid (``repro.core.plan.compile_wave``): ``nw = M/W``
+    waves, each stage bounded like the vertical model but with the
+    parameter (re)loads scaled by ``nw`` and the cross-wave f32
+    grad-buffer swap riding the PCIe terms (it is CPU-resident, like
+    the horizontal engine's accumulation buffer). ``W=M`` reduces to
+    :func:`iteration_time_vertical` exactly."""
+    if W < 1 or M % W:
+        return float("inf")
+    if W == M:
+        return iteration_time_vertical(w, m, M, alpha, x)
+    nw = M // W
+    t_f1, t_b1 = compute_times(w, m)
+    pcie = tr.wave_traffic(w.ms, w.cs, M, W)
+    pcie_fwd = nw * w.ms + M * w.cs + (M - nw) * w.cs
+    pcie_bwd = pcie.total - pcie_fwd
+    fwd_ssd = _ssd_time(
+        nw * w.ms * (1 - x.param) + alpha * w.os_bytes * (1 - x.opt),
+        M * w.cs * (1 - x.ckpt) + alpha * w.os_bytes * (1 - x.opt), m)
+    bwd_ssd = _ssd_time(
+        nw * w.ms * (1 - x.param) + M * w.cs * (1 - x.ckpt)
+        + (1 - alpha) * w.os_bytes * (1 - x.opt),
+        (1 - alpha) * w.os_bytes * (1 - x.opt), m)
+    adam_t = (w.os_bytes + w.grad_bytes) / m.cpu_adam_bw
+    t_fwd = max(M * t_f1, pcie_fwd / m.pcie_bw, fwd_ssd, alpha * adam_t)
+    t_bwd = max(M * t_b1, pcie_bwd / m.pcie_bw, bwd_ssd,
+                (1 - alpha) * adam_t)
     return t_fwd + t_bwd
 
 

@@ -68,6 +68,34 @@ def horizontal_traffic(ms: float, cs: float, M: int) -> TrafficBreakdown:
     )
 
 
+def wave_traffic(ms: float, cs: float, M: int, W: int) -> TrafficBreakdown:
+    """The wave hybrid schedule (``repro.core.plan.compile_wave``):
+    ``nw = M/W`` waves of W micro-batches, each run vertically, with the
+    f32 grad-accumulation buffer swapped through CPU between waves.
+
+    Params are (re)loaded twice per wave (2·nw·ms) and the grad buffer
+    moves (2·nw-1)·2·ms — the two horizontal taxes, each scaled down by
+    W. Each wave's kept micro-batch saves its FORWARD re-read and its
+    inter-layer-gradient round trip; backward recompute always re-reads
+    every micro-batch (M·cs), so ckpt_read = (2M - nw)·cs. The
+    endpoints are the two paper schedules: W=M returns
+    :func:`vertical_traffic` (its §3.4 keep convention) and W=1 equals
+    :func:`horizontal_traffic` exactly; the exact per-boundary
+    engine-level counters are :func:`wave_ckpt_traffic`."""
+    if W < 1 or M % W:
+        raise ValueError(f"wave size W={W} must divide M={M}")
+    if W == M:
+        return vertical_traffic(ms, cs, M)
+    nw = M // W
+    return TrafficBreakdown(
+        param_load=2 * nw * ms,
+        grad_swap=(2 * nw - 1) * 2 * ms,
+        ckpt_write=M * cs,
+        ckpt_read=(2 * M - nw) * cs,
+        inter_grad=2 * (M - nw) * cs,
+    )
+
+
 def vertical_traffic(ms: float, cs: float, M: int) -> TrafficBreakdown:
     """GreedySnake vertical schedule (§3.4):
     params loaded once for fwd and once for bwd-recompute = 2·ms;
@@ -114,23 +142,47 @@ class CkptTraffic:
         return self.read_fwd + self.read_bwd
 
 
-def vertical_ckpt_traffic(cs: float, M: int, L: int) -> CkptTraffic:
-    """Exact per-iteration checkpoint byte counters of the vertical
-    engine: "read twice minus the on-device boundary micro-batch"
-    (§4.2), per boundary. Perturbing the alternating order costs
-    ``(L)·u`` extra checkpoint reads and ``2·L·u`` extra inter-layer
-    gradient bytes (only the embedding-side boundary stays aligned).
-    ``ssd_*`` fields are the fully-offloaded (x_ckpt=0) values."""
+def wave_ckpt_traffic(cs: float, M: int, W: int, L: int) -> CkptTraffic:
+    """Exact per-iteration checkpoint / inter-layer-gradient counters of
+    the plan-driven engine for the W-wave schedule (``nw = M/W`` waves,
+    each behaving vertically over its W micro-batches): every boundary
+    is written for every micro-batch, and each wave keeps ONE
+    micro-batch per boundary on device — saving its forward re-read and
+    both directions of its inter-layer gradient, ``nw`` times per
+    boundary per iteration. Backward recompute re-reads every
+    micro-batch; the kept micro-batches' tails stay CPU-cached, so only
+    ``M - nw`` per interior boundary touch the SSD.
+
+    ``W=M`` is the vertical engine (:func:`vertical_ckpt_traffic`);
+    ``W=1`` is the horizontal engine, whose forward re-reads,
+    inter-layer gradients, and SSD tail re-reads all collapse to zero
+    (the single in-flight micro-batch never leaves the device) — the
+    interpolation the wave knob trades against its ``2·nw·ms``
+    parameter reloads."""
+    if W < 1 or M % W:
+        raise ValueError(f"wave size W={W} must divide M={M}")
+    nw = M // W
     u = cs / max(L, 1)
     nb = L + 1                       # boundaries 0..L
     return CkptTraffic(
         write=nb * M * u,
-        read_fwd=nb * (M - 1) * u,
+        read_fwd=nb * (M - nw) * u,
         read_bwd=L * M * u,
-        inter_grad=2 * nb * (M - 1) * u,
+        inter_grad=2 * nb * (M - nw) * u,
         ssd_spill=nb * M * u,
-        ssd_reread=L * (M - 1) * u,
+        ssd_reread=L * (M - nw) * u,
     )
+
+
+def vertical_ckpt_traffic(cs: float, M: int, L: int) -> CkptTraffic:
+    """Exact per-iteration checkpoint byte counters of the vertical
+    engine: "read twice minus the on-device boundary micro-batch"
+    (§4.2), per boundary — the single-wave (W=M) case of
+    :func:`wave_ckpt_traffic`. Perturbing the alternating order costs
+    ``(L)·u`` extra checkpoint reads and ``2·L·u`` extra inter-layer
+    gradient bytes (only the embedding-side boundary stays aligned).
+    ``ssd_*`` fields are the fully-offloaded (x_ckpt=0) values."""
+    return wave_ckpt_traffic(cs, M, M, L)
 
 
 @dataclasses.dataclass(frozen=True)

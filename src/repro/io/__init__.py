@@ -13,8 +13,16 @@ deferrable checkpoint spill, no chunking, one hard-coded SSD path, and
 no way to model bandwidth. This package replaces that with a real
 subsystem; everything in ``repro.offload`` now moves bytes through it.
 
-Layering (arrows = "submits to"):
+Layering (arrows = "submits to"). Above the coordinators sits the
+schedule IR: ``repro.core.plan`` compiles the vertical / horizontal /
+wave schedule into a linear op stream ONCE, and the one plan executor
+(``repro.offload.executor``) walks it — every op below the compute ops
+is a coordinator call, and every coordinator call becomes engine
+requests here:
 
+    repro.core.plan (compile_* -> Plan)   repro.core.plan.plan_traffic
+              |                                 (static byte prediction,
+              v  repro.offload.executor          == the meters below)
     ParameterCoordinator / InterLayerTensorCoordinator /
     OptimizerStepCoordinator          SSDStore / TieredVector
               |                                |
@@ -22,6 +30,23 @@ Layering (arrows = "submits to"):
         [priority heap -> worker pool]   [per-path channel threads]
               |                                ^
               +---- request bodies ------------+
+
+How plan ops map to request priorities
+(:data:`~repro.io.engine.CATEGORY_PRIORITY`):
+
+* ``PREFETCH(l)`` hints — derived by the plan compiler's lookahead
+  pass, one per ``FETCH_PARAM``/``ALLGATHER``, placed right after the
+  previous fetch and never across a ``RESET_PARAMS`` — submit at
+  ``PARAM_FETCH`` (top) priority: the GPU will block on them next.
+* ``SPILL_GRAD``/``FETCH_GRAD`` traffic is ``INTER_LAYER_GRAD``; the
+  wave schedule's cross-wave ``GRAD_SPILL``/``GRAD_FETCH_ACC`` buffer
+  swaps pace at the same level (category ``grad``).
+* ``OPT_LATE`` / ``WRITEBACK_GRAD`` optimizer segments run as
+  ``OPTIMIZER_STATE`` requests whose tiered-vector chunk ops yield to
+  parameter fetches on the same paths (the α-delay gate makes a fetch
+  WAIT on a flush, which is why the engine keeps >= 3 workers).
+* ``SPILL_CKPT`` tails are ``CKPT_SPILL`` (bottom): deferrable until a
+  ``FETCH_CKPT_BWD`` actually needs them.
 
 * :class:`~repro.io.engine.IOEngine` — request-level scheduler. Each
   request carries a category/route (shared vocabulary with the

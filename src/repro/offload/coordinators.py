@@ -183,6 +183,30 @@ class InterLayerTensorCoordinator:
                 pass
         self._pending.clear()
 
+    def clear(self):
+        """Abandon every checkpoint / inter-layer gradient this
+        coordinator tracks: release device-kept boundary tensors, cancel
+        or drain in-flight spills (swallowing their errors — the caller
+        is already unwinding), and drop the CPU-resident pieces. Used by
+        the plan executor's mid-step failure path so a failed micro-batch
+        cannot leak device slots into the next step."""
+        self._device_kept.clear()
+        for req in list(self._pending.values()):
+            if not req.cancel():
+                try:
+                    req.result()
+                except Exception:
+                    pass
+        self._pending.clear()
+        for kind, l, m in list(self._shapes):
+            name = self._key(kind, l, m)
+            keys = ([name + ":h", name + ":tail"] if kind == "c"
+                    else [name])
+            for key in keys:
+                if key in self.host:
+                    self.host.pop(key)
+        self._shapes.clear()
+
     def drop_ckpt(self, l: int, m: int):
         # A ckpt consumed only via get_ckpt_fwd (the head layer) still has
         # its SSD spill in flight: drain it so no orphan write can race a

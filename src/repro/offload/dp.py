@@ -7,18 +7,26 @@ split into R contiguous element ranges. Rank ``r`` owns range
 ``[lo_r, hi_r)`` of every layer's vectors, keeps it on its OWN
 ``IOEngine`` + SSD path set (``IOConfig.shard_for_rank``), and runs the
 α-delayed partial Adam on only that shard, so R ranks drive R× the
-aggregate storage bandwidth. Per iteration the ranks:
+aggregate storage bandwidth.
 
-* split the global batch: rank ``r`` runs micro-batches
-  ``[r·M/R, (r+1)·M/R)`` through the same vertical schedule (its local
-  micro-batch order is the global §4.2 alternating order restricted to
-  its block, which preserves the boundary-micro-batch device slot);
-* **all-gather** the low-precision param shards at each layer boundary
-  (each rank reads ``1/R`` of the layer from its own SSD paths — the
-  per-rank reads are submitted to all R engines before any is awaited,
-  which is where the aggregate-bandwidth win comes from);
-* **reduce-scatter** each fully-accumulated f32 layer gradient so every
-  rank updates only its optimizer-state shard.
+The schedule itself is not re-derived here: ``repro.core.plan``
+compiles ONE data-parallel vertical plan (``ALLGATHER`` /
+``REDUCE_SCATTER`` ops in place of the single-rank ``FETCH_PARAM`` /
+``WRITEBACK_GRAD``; per-micro-batch ops emitted rank-major, each rank's
+block consuming the global §4.2 alternating order restricted to it, so
+every rank's boundary micro-batch keeps its device slot), and the same
+``repro.offload.executor`` that drives the single-rank engine walks it
+against this engine's per-rank coordinator stacks. Per iteration:
+
+* rank ``r`` runs micro-batches ``[r·M/R, (r+1)·M/R)``;
+* **ALLGATHER(l)**: the low-precision param shards at each layer
+  boundary (each rank reads ``1/R`` of the layer from its own SSD
+  paths — the per-rank reads are prefetched on all R engines before
+  any is awaited, which is where the aggregate-bandwidth win comes
+  from);
+* **REDUCE_SCATTER(l)**: each fully-accumulated f32 layer gradient is
+  folded in GLOBAL micro-batch order and every rank updates only its
+  optimizer-state shard.
 
 Determinism (§6.5, extended across the data-parallel axis): the
 simulated collectives fold contributions in GLOBAL micro-batch order —
@@ -41,12 +49,14 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.plan import (PlanSpec, compile_vertical, insert_prefetch,
+                             mb_order, shard_bounds)
 from repro.io import IOConfig, IOEngine
 from repro.models import blocks as blk
 from repro.offload.coordinators import (InterLayerTensorCoordinator,
@@ -54,18 +64,14 @@ from repro.offload.coordinators import (InterLayerTensorCoordinator,
                                         ParameterCoordinator)
 from repro.offload.engine import (OffloadConfig, _flatten_tree,
                                   _make_unflatten, bind_block_fns,
-                                  build_block_fns, mb_order, shifted_labels,
+                                  build_block_fns, shifted_labels,
                                   split_microbatches)
+from repro.offload.executor import execute_plan
 from repro.offload.stores import (HostStore, SSDStore, TieredVector,
                                   TrafficMeter)
 from repro.optim.cpu_adam import CpuAdam
 
-
-def shard_bounds(n: int, world: int) -> List[Tuple[int, int]]:
-    """Contiguous 1/R element ranges covering [0, n) (sizes differ by at
-    most one when R does not divide n)."""
-    cuts = [(n * r) // world for r in range(world + 1)]
-    return [(cuts[r], cuts[r + 1]) for r in range(world)]
+__all__ = ["DataParallelOffloadEngine", "shard_bounds"]
 
 
 class _Rank:
@@ -130,6 +136,8 @@ class DataParallelOffloadEngine:
         self.dtype = jnp.dtype(ocfg.param_dtype)
         self.step_num = 0
         self._closed = False
+        self.phase_time: Dict[str, float] = {"fwd": 0.0, "bwd": 0.0,
+                                             "opt_wait": 0.0}
 
         base_io = ocfg.io if ocfg.io is not None else \
             IOConfig(workers=ocfg.io_workers)
@@ -193,24 +201,24 @@ class DataParallelOffloadEngine:
 
         bind_block_fns(self, build_block_fns(cfg, self.kind,
                                              self._unflatten))
+        self._plan = self._compile_plan()
 
     # ------------------------------------------------------------------
     # micro-batch ownership and ordering
     # ------------------------------------------------------------------
     def _mb_order(self, l: int) -> List[int]:
-        """Global §4.2 alternating order — THE single-rank engine's
-        ``mb_order``; sharing it is part of the bit-parity guarantee."""
+        """Global §4.2 alternating order — THE canonical
+        ``repro.core.plan.mb_order``; sharing it with the single-rank
+        engine is part of the bit-parity guarantee."""
         return mb_order(self.ocfg.num_microbatches, l)
 
-    def _rank_mbs(self, r: int) -> range:
-        return range(r * self.Mr, (r + 1) * self.Mr)
-
-    def _rank_order(self, r: int, l: int) -> List[int]:
-        """Rank r's local order = the global order restricted to its
-        contiguous micro-batch block (keeps the per-rank alternation, so
-        every rank's boundary micro-batch stays on device)."""
-        own = set(self._rank_mbs(r))
-        return [m for m in self._mb_order(l) if m in own]
+    def _compile_plan(self):
+        """Compile the R-rank vertical plan once (ALLGATHER /
+        REDUCE_SCATTER ops; rank-major micro-batch blocks); every
+        train_step interprets it with the shared executor."""
+        spec = PlanSpec(L=self.L, M=self.ocfg.num_microbatches,
+                        alpha=self.ocfg.alpha, ranks=self.R)
+        return insert_prefetch(compile_vertical(spec, order=self._mb_order))
 
     # ------------------------------------------------------------------
     # simulated deterministic collectives
@@ -270,115 +278,7 @@ class DataParallelOffloadEngine:
         return shifted_labels(tok_mb)
 
     def train_step(self, tokens: np.ndarray) -> float:
-        ocfg = self.ocfg
-        mbs = self._split_tokens(tokens)
-        self.step_num += 1
-        step = self.step_num
-        denom = jnp.asarray(float(np.prod(tokens.shape) - tokens.shape[0]),
-                            jnp.float32)
-
-        # ---------- forward ----------
-        if ocfg.alpha > 0 and step > 1:
-            for rk in self.ranks:
-                for l in range(self.L):
-                    rk.opt_c.flush_late(l, step - 1)
-                    rk.params_c.set_gate(
-                        l, (lambda c, ll: lambda: c.wait_late(ll))(
-                            rk.opt_c, l))
-        for rk in self.ranks:
-            order0 = self._rank_order(rk.index, 0)
-            for m in reversed(order0):
-                x = self.j_embed(self.embed, jnp.asarray(mbs[m]))
-                rk.ckpt_c.put_ckpt(0, m, x, keep_on_device=(m == order0[0]))
-        # submit ALL ranks' shard fetches before any is awaited — this is
-        # the aggregate-bandwidth lever (R engines × R path sets busy)
-        for rk in self.ranks:
-            rk.params_c.prefetch(0)
-        for l in range(self.L):
-            p_dev = self._allgather_params(l)
-            for rk in self.ranks:
-                rk.params_c.prefetch(l + 1)
-            for rk in self.ranks:
-                order = self._rank_order(rk.index, l)
-                for m in order:
-                    x = rk.ckpt_c.get_ckpt_fwd(l, m)
-                    y = self.j_layer_fwd(p_dev, x)
-                    rk.ckpt_c.put_ckpt(l + 1, m, y,
-                                       keep_on_device=(m == order[-1]))
-            del p_dev
-        jax.effects_barrier()
-
-        # ---------- backward (+ overlapped sharded optimizer) ----------
-        loss_total = 0.0
-        per_mb_head: Dict[int, tuple] = {}
-        for rk in self.ranks:
-            order = self._rank_order(rk.index, self.L)
-            for m in order:
-                x = rk.ckpt_c.get_ckpt_fwd(self.L, m)
-                lab, w = self._labels(mbs[m])
-                loss, du, dn, dx = self.j_head_bwd(
-                    self.unembed, self.final_norm, x, lab, w, denom)
-                per_mb_head[m] = (loss, du, dn)
-                rk.ckpt_c.put_grad(self.L, m, dx,
-                                   keep_on_device=(m == order[-1]))
-                rk.ckpt_c.drop_ckpt(self.L, m)
-        # fold losses and head grads in the single-rank engine's order
-        d_un = jnp.zeros_like(self.unembed, dtype=jnp.float32)
-        d_nm = jnp.zeros_like(self.final_norm, dtype=jnp.float32)
-        for m in self._mb_order(self.L):
-            loss, du, dn = per_mb_head[m]
-            loss_total += float(loss)
-            d_un = d_un + du
-            d_nm = d_nm + dn
-
-        for rk in self.ranks:
-            rk.params_c.reset()        # fwd->bwd boundary
-            rk.params_c.prefetch(self.L - 1)
-        for l in range(self.L - 1, -1, -1):
-            p_dev = self._allgather_params(l)
-            for rk in self.ranks:
-                rk.params_c.prefetch(l - 1)
-            per_mb_dp: Dict[int, jax.Array] = {}
-            for rk in self.ranks:
-                order = self._rank_order(rk.index, l)
-                for m in order:
-                    x = rk.ckpt_c.get_ckpt_bwd(l, m)
-                    dy = rk.ckpt_c.get_grad(l + 1, m)
-                    dx, dp, _ = self.j_layer_bwd(p_dev, x, dy)
-                    per_mb_dp[m] = dp
-                    rk.ckpt_c.put_grad(l, m, dx,
-                                       keep_on_device=(m == order[-1]))
-                    rk.ckpt_c.drop_ckpt(l, m)
-            self._reduce_scatter_update(l, per_mb_dp, step)
-            del p_dev
-
-        # embedding backward (replicated): per-rank compute, ordered fold
-        per_mb_de: Dict[int, jax.Array] = {}
-        for rk in self.ranks:
-            for m in reversed(self._rank_order(rk.index, 0)):
-                dx0 = rk.ckpt_c.get_grad(0, m)
-                per_mb_de[m] = self.j_embed_bwd(self.embed,
-                                                jnp.asarray(mbs[m]), dx0)
-        d_embed = self._allreduce_fold(
-            jnp.zeros_like(self.embed, dtype=jnp.float32), per_mb_de,
-            list(reversed(self._mb_order(0))))
-
-        # replicated head params: all-reduce the grads (ring: 2·(R-1)/R
-        # each way per rank) and apply the identical update everywhere
-        head_bytes = int(d_embed.nbytes + d_un.nbytes + d_nm.nbytes)
-        ring = 2 * (self.R - 1) * head_bytes // self.R
-        self._collective("head_grad", ring, ring)
-        for name, g in (("embed", d_embed), ("unembed", d_un),
-                        ("final_norm", d_nm)):
-            st = self.head_state[name]
-            p2, st["m"], st["v"] = self.j_adam_dev(
-                getattr(self, name), st["m"], st["v"], g,
-                jnp.asarray(step, jnp.int32), jnp.asarray(self.ocfg.lr))
-            setattr(self, name, p2)
-        if ocfg.alpha == 0:
-            for rk in self.ranks:
-                rk.opt_c.wait_all()
-        return loss_total
+        return execute_plan(self, self._plan, tokens)
 
     # ------------------------------------------------------------------
     def finish(self):

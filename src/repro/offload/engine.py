@@ -1,20 +1,41 @@
-"""OffloadEngine: GreedySnake's pipelined vertical (and baseline
-horizontal) schedule executed against REAL three-tier storage.
+"""OffloadEngine: GreedySnake's schedules executed against REAL
+three-tier storage, by compiling a schedule plan once and interpreting
+it every step.
 
-This is the runnable counterpart of the paper's system on this container:
-* "GPU"  = the jax device (compute + per-layer working set),
-* "CPU"  = numpy host buffers,
-* "SSD"  = binary files under a work directory.
+Design note (the schedule IR)
+=============================
 
-Per iteration, the engine moves exactly the bytes the paper's §1/§3.4
-analysis predicts (validated in tests against repro.core.traffic):
+This engine no longer hard-codes any schedule as control flow. Instead:
 
-  vertical:    params 2·ms, grads 2·ms (f32 once), ckpt M·cs written,
-               read twice minus the on-device boundary micro-batch
-  horizontal:  params 2·M·ms, grad buffer (2M-1)·2·ms, ckpt 2·M·cs
+* ``repro.core.plan`` compiles the schedule — vertical, horizontal, or
+  the wave hybrid — into a linear op stream (``FETCH_PARAM``, ``FWD``,
+  ``SPILL_CKPT``/``FETCH_CKPT``, ``BWD``, ``WRITEBACK_GRAD``,
+  ``OPT_LATE``, ... — see the op table in that module), with
+  ``PREFETCH`` hints derived by a lookahead pass;
+* ``repro.offload.executor.execute_plan`` — the ONE executor, shared
+  with the data-parallel engine — walks the plan against the three
+  coordinators and the ``repro.io`` engine;
+* ``repro.core.plan.plan_traffic`` predicts every byte counter of a
+  run statically from the same IR, cross-checked exactly against the
+  closed forms in ``repro.core.traffic`` AND the engine's measured
+  meters (``tests/test_plan_executor.py``).
 
-and overlaps the (1-α) optimizer fraction with backward and the α
-fraction with the next forward via worker threads.
+Schedules (per-iteration traffic, validated in tests; ms = low-precision
+model bytes, cs = per-micro-batch aggregated ckpt bytes, M micro-batches,
+W = wave size, nw = M/W waves):
+
+  vertical   (W=M): params 2·ms, grads 2·ms (f32 once), ckpt M·cs
+             written, read twice minus the on-device boundary
+             micro-batch (§3.4 + §4.2)
+  horizontal (W=1): params 2·M·ms, grad buffer (2M-1)·2·ms, one
+             micro-batch resident on device at a time
+  wave       (1<W<M): params 2·nw·ms, grad buffer (2·nw-1)·2·ms, and
+             the wave interior behaves vertically — the knob trades
+             checkpoint traffic against parameter reuse
+             (``repro.core.traffic.wave_ckpt_traffic``)
+
+and the (1-α) optimizer fraction overlaps backward, the α fraction the
+next forward, via ``OPT_LATE`` gates (§4.4).
 
 The embedding and LM head stay device-resident (the paper excludes them
 from the per-layer pipeline and adds their time separately, §4.5).
@@ -22,7 +43,6 @@ from the per-layer pipeline and adds their time separately, §4.5).
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -30,30 +50,56 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.perfmodel import StorageRatios
+from repro.core.plan import (PlanSpec, compile_wave, insert_prefetch,
+                             mb_order)
 from repro.io import IOConfig, IOEngine
 from repro.models import blocks as blk
 from repro.models.common import rms_norm
-from repro.models.model import _xent_chunk, labels_and_weights
+from repro.models.model import _xent_chunk
 from repro.offload.coordinators import (InterLayerTensorCoordinator,
                                         OptimizerStepCoordinator,
-                                        ParameterCoordinator, _xfer)
+                                        ParameterCoordinator)
+from repro.offload.executor import execute_plan
 from repro.offload.stores import HostStore, SSDStore, TieredVector, TrafficMeter
 from repro.optim.cpu_adam import CpuAdam
+
+__all__ = ["OffloadConfig", "OffloadEngine", "build_block_fns",
+           "bind_block_fns", "mb_order", "split_microbatches",
+           "shifted_labels"]
 
 
 @dataclasses.dataclass
 class OffloadConfig:
-    schedule: str = "vertical"          # "vertical" | "horizontal"
+    schedule: str = "vertical"          # "vertical" | "horizontal" | "wave"
     num_microbatches: int = 4
     micro_batch: int = 2
     seq_len: int = 128
     alpha: float = 0.0                  # delayed optimizer ratio (§4.4)
+    wave_size: int = 0                  # W for schedule="wave" (must
+                                        # divide num_microbatches;
+                                        # W=M <=> vertical, W=1 <=> horizontal)
     ratios: StorageRatios = dataclasses.field(default_factory=StorageRatios)
     lr: float = 1e-3
     io_workers: int = 4
     param_dtype: str = "float32"        # f32 => bit-exact vs in-memory ref
     io: Optional[IOConfig] = None       # paths/chunking/budget/bandwidth
                                         # (None: single path = the workdir)
+
+    def resolved_wave_size(self) -> int:
+        """The W this config's schedule compiles to."""
+        M = self.num_microbatches
+        if self.schedule == "vertical":
+            return M
+        if self.schedule == "horizontal":
+            return 1
+        if self.schedule == "wave":
+            W = self.wave_size
+            if W < 1 or M % W:
+                raise ValueError(
+                    f"wave_size={W} must be in [1, M] and divide "
+                    f"num_microbatches={M}")
+            return W
+        raise ValueError(f"unknown schedule {self.schedule!r}")
 
 
 def _flatten_tree(tree) -> Tuple[np.ndarray, list, list]:
@@ -142,13 +188,6 @@ def bind_block_fns(obj, fns: Dict[str, object]) -> None:
     obj.j_head_bwd = fns["head_bwd"]
     obj.j_embed_bwd = fns["embed_bwd"]
     obj.j_adam_dev = fns["adam_dev"]
-
-
-def mb_order(M: int, l: int) -> List[int]:
-    """The §4.2 alternating micro-batch order for layer ``l`` — shared
-    by the single-rank and data-parallel engines; the R-rank
-    bit-parity guarantee depends on both using THIS function."""
-    return list(range(M)) if l % 2 == 0 else list(range(M - 1, -1, -1))
 
 
 def split_microbatches(tokens: np.ndarray, M: int, micro_batch: int
@@ -243,6 +282,7 @@ class OffloadEngine:
             param_dtype=np.dtype(ocfg.param_dtype))
 
         self._build_jit_fns()
+        self._plan = self._compile_plan()
 
     # ------------------------------------------------------------------
     def _build_jit_fns(self):
@@ -251,23 +291,23 @@ class OffloadEngine:
 
     # ------------------------------------------------------------------
     def _mb_order(self, l: int) -> List[int]:
-        """Alternating micro-batch order between consecutive layers (§4.2)
-        so the boundary micro-batch's activations stay on device.
-
-        Discipline (validated by the boundary-micro-batch test): every
-        producer emits a boundary's tensors in the REVERSE of its
-        consumer's order and keeps the last-produced one on device, so
-        the consumer's FIRST access hits the device slot and frees it
-        immediately. The coordinators enforce this strictly — a kept
-        tensor consumed out of order is evicted (checkpoint) or spilled
-        (inter-layer gradient), exactly what a memory-bound GPU would do.
-        """
+        """The canonical §4.2 alternating micro-batch order
+        (:func:`repro.core.plan.mb_order`) for this config's M. The plan
+        compiler consults THIS method, so tests can perturb the order
+        and watch the executor pay the eviction penalty."""
         return mb_order(self.ocfg.num_microbatches, l)
 
+    def _compile_plan(self):
+        """Compile the configured schedule once; every train_step
+        interprets the same plan."""
+        spec = PlanSpec(L=self.L, M=self.ocfg.num_microbatches,
+                        alpha=self.ocfg.alpha, ranks=1)
+        plan = compile_wave(spec, self.ocfg.resolved_wave_size(),
+                            order=self._mb_order)
+        return insert_prefetch(plan)
+
     def train_step(self, tokens: np.ndarray) -> float:
-        if self.ocfg.schedule == "vertical":
-            return self._step_vertical(tokens)
-        return self._step_horizontal(tokens)
+        return execute_plan(self, self._plan, tokens)
 
     # ------------------------------------------------------------------
     def _split_tokens(self, tokens):
@@ -276,197 +316,6 @@ class OffloadEngine:
 
     def _labels(self, tok_mb):
         return shifted_labels(tok_mb)
-
-    def _step_vertical(self, tokens: np.ndarray) -> float:
-        ocfg = self.ocfg
-        M = ocfg.num_microbatches
-        mbs = self._split_tokens(tokens)
-        self.step_num += 1
-        step = self.step_num
-        denom = jnp.asarray(float(np.prod(tokens.shape) - tokens.shape[0]),
-                            jnp.float32)
-
-        # ---------- forward ----------
-        t0 = time.perf_counter()
-        # α-delayed flush must complete before each layer's params are read:
-        # submit the late-fraction updates and gate the prefetches on them.
-        if ocfg.alpha > 0 and step > 1:
-            for l in range(self.L):
-                self.opt_c.flush_late(l, step - 1)
-                self.params_c.set_gate(
-                    l, (lambda ll: lambda: self.opt_c.wait_late(ll))(l))
-        # Embedding produces boundary 0 in the REVERSE of layer 0's
-        # consumption order so the kept micro-batch is the first one layer
-        # 0 consumes (§4.2 alternating-order discipline, see _mb_order).
-        order0 = self._mb_order(0)
-        for m in reversed(order0):
-            x = self.j_embed(self.embed, jnp.asarray(mbs[m]))
-            self.ckpt_c.put_ckpt(0, m, x, keep_on_device=(m == order0[0]))
-        self.params_c.prefetch(0)
-        for l in range(self.L):
-            p_dev = self.params_c.get(l)
-            self.params_c.prefetch(l + 1)
-            order = self._mb_order(l)
-            for m in order:
-                x = self.ckpt_c.get_ckpt_fwd(l, m)
-                y = self.j_layer_fwd(p_dev, x)
-                self.ckpt_c.put_ckpt(l + 1, m, y,
-                                     keep_on_device=(m == order[-1]))
-            del p_dev
-        jax.effects_barrier()
-        self.phase_time["fwd"] += time.perf_counter() - t0
-
-        # ---------- backward (+ overlapped optimizer) ----------
-        t0 = time.perf_counter()
-        loss_total = 0.0
-        # head: produce inter-layer grads dL/dx_L per micro-batch
-        order = self._mb_order(self.L)
-        d_un = jnp.zeros_like(self.unembed, dtype=jnp.float32)
-        d_nm = jnp.zeros_like(self.final_norm, dtype=jnp.float32)
-        for m in order:
-            x = self.ckpt_c.get_ckpt_fwd(self.L, m)   # head input
-            lab, w = self._labels(mbs[m])
-            loss, du, dn, dx = self.j_head_bwd(self.unembed, self.final_norm,
-                                               x, lab, w, denom)
-            loss_total += float(loss)
-            d_un += du
-            d_nm += dn
-            self.ckpt_c.put_grad(self.L, m, dx,
-                                 keep_on_device=(m == order[-1]))
-            self.ckpt_c.drop_ckpt(self.L, m)
-        self.params_c.reset()          # fwd->bwd boundary: cancel prefetches
-        self.params_c.prefetch(self.L - 1)
-        d_embed = jnp.zeros_like(self.embed, dtype=jnp.float32)
-        for l in range(self.L - 1, -1, -1):
-            p_dev = self.params_c.get(l)
-            self.params_c.prefetch(l - 1)
-            gacc = jnp.zeros((self.P,), jnp.float32)
-            # Alternate between consecutive backward layers too: layer l+1
-            # produced grad(l+1) in _mb_order(l+1); consuming in
-            # _mb_order(l) (its reverse) makes the device-kept gradient
-            # this layer's FIRST input, so the slot frees immediately.
-            order = self._mb_order(l)
-            for m in order:
-                x = self.ckpt_c.get_ckpt_bwd(l, m)
-                dy = self.ckpt_c.get_grad(l + 1, m)
-                dx, dp, _ = self.j_layer_bwd(p_dev, x, dy)
-                gacc = gacc + dp
-                self.ckpt_c.put_grad(l, m, dx,
-                                     keep_on_device=(m == order[-1]))
-                self.ckpt_c.drop_ckpt(l, m)
-            # fully-accumulated layer grads -> CPU, optimizer overlapped
-            self.opt_c.submit_early(l, gacc, step)
-            del p_dev
-        # embedding backward: layer 0 produced grad(0) in _mb_order(0),
-        # so consume in reverse — the kept micro-batch comes first.
-        for m in reversed(self._mb_order(0)):
-            dx0 = self.ckpt_c.get_grad(0, m)
-            d_embed += self.j_embed_bwd(self.embed, jnp.asarray(mbs[m]), dx0)
-        self.phase_time["bwd"] += time.perf_counter() - t0
-
-        # head params update (device adam)
-        t0 = time.perf_counter()
-        for name, g in (("embed", d_embed), ("unembed", d_un),
-                        ("final_norm", d_nm)):
-            st = self.head_state[name]
-            p2, st["m"], st["v"] = self.j_adam_dev(
-                getattr(self, name), st["m"], st["v"], g,
-                jnp.asarray(step, jnp.int32), jnp.asarray(self.ocfg.lr))
-            setattr(self, name, p2)
-        if ocfg.alpha == 0:
-            self.opt_c.wait_all()
-        self.phase_time["opt_wait"] += time.perf_counter() - t0
-        return loss_total
-
-    # ------------------------------------------------------------------
-    def _step_horizontal(self, tokens: np.ndarray) -> float:
-        """ZeRO-Infinity-style baseline: per micro-batch full fwd+bwd with
-        the f32 accumulation buffer swapped through device memory."""
-        ocfg = self.ocfg
-        M = ocfg.num_microbatches
-        mbs = self._split_tokens(tokens)
-        self.step_num += 1
-        step = self.step_num
-        denom = jnp.asarray(float(np.prod(tokens.shape) - tokens.shape[0]),
-                            jnp.float32)
-        loss_total = 0.0
-        d_un = jnp.zeros_like(self.unembed, dtype=jnp.float32)
-        d_nm = jnp.zeros_like(self.final_norm, dtype=jnp.float32)
-        d_embed = jnp.zeros_like(self.embed, dtype=jnp.float32)
-
-        for m in range(M):
-            # -------- forward (activations stay on device within the mb) ----
-            t0 = time.perf_counter()
-            if ocfg.alpha > 0 and step > 1 and m == 0:
-                for l in range(self.L):
-                    self.opt_c.flush_late(l, step - 1)
-                    self.params_c.set_gate(
-                        l, (lambda ll: lambda: self.opt_c.wait_late(ll))(l))
-            x = self.j_embed(self.embed, jnp.asarray(mbs[m]))
-            self.params_c.prefetch(0)
-            for l in range(self.L):
-                p_dev = self.params_c.get(l)
-                self.params_c.prefetch(l + 1)
-                self.ckpt_c.put_ckpt(l, m, x)   # save layer INPUT for bwd
-                x = self.j_layer_fwd(p_dev, x)
-                del p_dev
-            self.phase_time["fwd"] += time.perf_counter() - t0
-
-            # -------- backward --------
-            t0 = time.perf_counter()
-            lab, w = self._labels(mbs[m])
-            loss, du, dn, dy = self.j_head_bwd(self.unembed, self.final_norm,
-                                               x, lab, w, denom)
-            loss_total += float(loss)
-            d_un += du
-            d_nm += dn
-            self.params_c.reset()      # fwd->bwd boundary: cancel prefetches
-            self.params_c.prefetch(self.L - 1)
-            dy_dev = dy
-            for l in range(self.L - 1, -1, -1):
-                p_dev = self.params_c.get(l)
-                self.params_c.prefetch(l - 1)
-                xin = self.ckpt_c.get_ckpt_bwd(l, m)
-                dx, dp, _ = self.j_layer_bwd(p_dev, xin, dy_dev)
-                self.ckpt_c.drop_ckpt(l, m)
-                dy_dev = dx
-                # f32 grad-accum buffer swapped via CPU (the horizontal tax):
-                # mb 0 offloads; mb 1..M-2 fetch+offload; the last mb fetches
-                # and hands the sum to the optimizer => (2M-1) x 2ms total.
-                if m == 0:
-                    g = np.asarray(dp)
-                    _xfer(self.meter, self.ioe, "grad", "gpu->cpu", g.nbytes)
-                    self.host.put(f"gacc:{l}", g)
-                elif m < M - 1:
-                    g_host = self.host.get(f"gacc:{l}")
-                    _xfer(self.meter, self.ioe, "grad", "cpu->gpu",
-                          g_host.nbytes)
-                    g = np.asarray(dp + jnp.asarray(g_host))
-                    _xfer(self.meter, self.ioe, "grad", "gpu->cpu", g.nbytes)
-                    self.host.put(f"gacc:{l}", g)
-                else:
-                    g_host = self.host.pop(f"gacc:{l}")
-                    _xfer(self.meter, self.ioe, "grad", "cpu->gpu",
-                          g_host.nbytes)
-                    g_dev = dp + jnp.asarray(g_host)
-                    # optimizer overlaps only with this LAST micro-batch (§3.3)
-                    self.opt_c.submit_early(l, g_dev, step)
-                del p_dev
-            d_embed += self.j_embed_bwd(self.embed, jnp.asarray(mbs[m]), dy_dev)
-            self.phase_time["bwd"] += time.perf_counter() - t0
-
-        t0 = time.perf_counter()
-        for name, g in (("embed", d_embed), ("unembed", d_un),
-                        ("final_norm", d_nm)):
-            st = self.head_state[name]
-            p2, st["m"], st["v"] = self.j_adam_dev(
-                getattr(self, name), st["m"], st["v"], g,
-                jnp.asarray(step, jnp.int32), jnp.asarray(self.ocfg.lr))
-            setattr(self, name, p2)
-        if ocfg.alpha == 0:
-            self.opt_c.wait_all()
-        self.phase_time["opt_wait"] += time.perf_counter() - t0
-        return loss_total
 
     # ------------------------------------------------------------------
     def finish(self):

@@ -1,0 +1,230 @@
+"""The ONE plan executor: walks a compiled :class:`repro.core.plan.Plan`
+against the coordinators / IOEngine stack.
+
+Both engines drive their training steps through :func:`execute_plan` —
+``OffloadEngine`` (single rank, any wave size) and
+``DataParallelOffloadEngine`` (per-rank coordinator stacks, vertical
+plans with ``ALLGATHER`` / ``REDUCE_SCATTER`` ops). The executor owns
+only transient per-step state (a register file of device tensors keyed
+by micro-batch, the layer-gradient accumulator, the head-gradient
+folds); all persistent state — tiered vectors, coordinators, the jitted
+block functions — belongs to the engine it is handed.
+
+Determinism: the executor performs the SAME coordinator calls and
+floating-point folds, in the SAME order, as the imperative step bodies
+it replaced, so losses and parameters are bit-identical (f32) across
+the schedule/α/storage-ratio/DP axes (pinned by the schedule-parity
+battery in ``tests/test_property.py`` / ``tests/test_plan_executor.py``).
+
+Fault discipline: a mid-plan exception (a failed chunk op surfacing
+through a coordinator) must not leak device slots or host buffers into
+the next step — the executor releases its registers, cancels
+outstanding parameter prefetches, clears the checkpoint coordinator's
+device-kept/CPU state (``InterLayerTensorCoordinator.clear``) and
+drains optimizer requests before re-raising. The fault-injection
+battery (``tests/test_plan_executor.py``) drives these paths with the
+``tests/test_io_faults.py`` failing backend.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.plan import Op, Plan
+from repro.offload.coordinators import _xfer
+
+
+def _ranks(eng):
+    """The engine's rank stacks: the DP engine's ``ranks`` list, or the
+    single-rank engine itself (it exposes the same coordinator attrs)."""
+    rks = getattr(eng, "ranks", None)
+    return rks if rks is not None else (eng,)
+
+
+def execute_plan(eng, plan: Plan, tokens: np.ndarray) -> float:
+    """Run one training step of ``eng`` by interpreting ``plan``.
+    Returns the summed micro-batch loss (same fold order as the
+    imperative engines)."""
+    ocfg = eng.ocfg
+    mbs = eng._split_tokens(tokens)
+    eng.step_num += 1
+    step = eng.step_num
+    denom = jnp.asarray(float(np.prod(tokens.shape) - tokens.shape[0]),
+                        jnp.float32)
+    ranks = _ranks(eng)
+    multi = len(ranks) > 1
+    Mr = eng.Mr if multi else plan.spec.M
+
+    def rank_of(m: int):
+        return ranks[m // Mr] if multi else ranks[0]
+
+    regs = {}                       # transient device tensors
+    p_dev = None                    # current layer's params
+    gacc = None                     # f32 layer-gradient accumulator
+    per_mb_dp = {}                  # DP: stashed per-micro-batch dW
+    head_stash = {}                 # DP: stashed (loss, d_unembed, d_norm)
+    embed_stash = {}                # DP: stashed d_embed contributions
+    loss_total = 0.0
+    d_un = jnp.zeros_like(eng.unembed, dtype=jnp.float32)
+    d_nm = jnp.zeros_like(eng.final_norm, dtype=jnp.float32)
+    d_embed = jnp.zeros_like(eng.embed, dtype=jnp.float32)
+
+    phase = None
+    t0 = time.perf_counter()
+
+    def flip(tag):
+        nonlocal phase, t0
+        now = time.perf_counter()
+        if phase is not None:
+            eng.phase_time[phase] = eng.phase_time.get(phase, 0.0) \
+                + (now - t0)
+        phase, t0 = tag, now
+
+    try:
+        for op in plan.ops:
+            k = op.op
+            if k is Op.FETCH_CKPT:
+                regs[("x", op.m)] = \
+                    rank_of(op.m).ckpt_c.get_ckpt_fwd(op.l, op.m)
+            elif k is Op.FWD:
+                regs[("y", op.m)] = eng.j_layer_fwd(p_dev,
+                                                    regs.pop(("x", op.m)))
+            elif k is Op.SPILL_CKPT:
+                rank_of(op.m).ckpt_c.put_ckpt(op.l, op.m,
+                                              regs.pop(("y", op.m)),
+                                              keep_on_device=op.keep)
+            elif k is Op.FETCH_CKPT_BWD:
+                regs[("x", op.m)] = \
+                    rank_of(op.m).ckpt_c.get_ckpt_bwd(op.l, op.m)
+            elif k is Op.FETCH_GRAD:
+                regs[("dy", op.m)] = \
+                    rank_of(op.m).ckpt_c.get_grad(op.l, op.m)
+            elif k is Op.BWD:
+                dx, dp, _ = eng.j_layer_bwd(p_dev, regs.pop(("x", op.m)),
+                                            regs.pop(("dy", op.m)))
+                if op.acc:
+                    gacc = gacc + dp
+                else:
+                    per_mb_dp[op.m] = dp
+                regs[("dx", op.m)] = dx
+            elif k is Op.SPILL_GRAD:
+                rank_of(op.m).ckpt_c.put_grad(op.l, op.m,
+                                              regs.pop(("dx", op.m)),
+                                              keep_on_device=op.keep)
+            elif k is Op.DROP_CKPT:
+                rank_of(op.m).ckpt_c.drop_ckpt(op.l, op.m)
+            elif k is Op.PREFETCH:
+                for rk in ranks:
+                    rk.params_c.prefetch(op.l)
+            elif k is Op.FETCH_PARAM:
+                p_dev = ranks[0].params_c.get(op.l)
+            elif k is Op.ALLGATHER:
+                p_dev = eng._allgather_params(op.l)
+            elif k is Op.RELEASE_PARAM:
+                p_dev = None
+            elif k is Op.RESET_PARAMS:
+                for rk in ranks:
+                    rk.params_c.reset()
+            elif k is Op.EMBED_FWD:
+                regs[("y", op.m)] = eng.j_embed(eng.embed,
+                                                jnp.asarray(mbs[op.m]))
+            elif k is Op.HEAD_BWD:
+                lab, w = eng._labels(mbs[op.m])
+                loss, du, dn, dx = eng.j_head_bwd(
+                    eng.unembed, eng.final_norm, regs.pop(("x", op.m)),
+                    lab, w, denom)
+                if op.acc:
+                    loss_total += float(loss)
+                    d_un = d_un + du
+                    d_nm = d_nm + dn
+                else:
+                    head_stash[op.m] = (loss, du, dn)
+                regs[("dx", op.m)] = dx
+            elif k is Op.EMBED_BWD:
+                d = eng.j_embed_bwd(eng.embed, jnp.asarray(mbs[op.m]),
+                                    regs.pop(("dy", op.m)))
+                if op.acc:
+                    d_embed = d_embed + d
+                else:
+                    embed_stash[op.m] = d
+            elif k is Op.GRAD_INIT:
+                gacc = jnp.zeros((eng.P,), jnp.float32)
+            elif k is Op.GRAD_SPILL:
+                rk = ranks[0]
+                g = np.asarray(gacc)
+                _xfer(rk.meter, rk.ioe, "grad", "gpu->cpu", g.nbytes)
+                rk.host.put(f"gacc:{op.l}", g)
+                gacc = None
+            elif k is Op.GRAD_FETCH_ACC:
+                rk = ranks[0]
+                g_host = rk.host.pop(f"gacc:{op.l}")
+                _xfer(rk.meter, rk.ioe, "grad", "cpu->gpu", g_host.nbytes)
+                gacc = gacc + jnp.asarray(g_host)
+            elif k is Op.WRITEBACK_GRAD:
+                ranks[0].opt_c.submit_early(op.l, gacc, step)
+                gacc = None
+            elif k is Op.REDUCE_SCATTER:
+                eng._reduce_scatter_update(op.l, per_mb_dp, step)
+                per_mb_dp = {}
+            elif k is Op.OPT_LATE:
+                if ocfg.alpha > 0 and step > 1:
+                    for rk in ranks:
+                        rk.opt_c.flush_late(op.l, step - 1)
+                        rk.params_c.set_gate(
+                            op.l,
+                            (lambda c, ll: lambda: c.wait_late(ll))(
+                                rk.opt_c, op.l))
+            elif k is Op.FOLD_HEAD:
+                for m in op.ms:
+                    loss, du, dn = head_stash[m]
+                    loss_total += float(loss)
+                    d_un = d_un + du
+                    d_nm = d_nm + dn
+                head_stash = {}
+            elif k is Op.FOLD_EMBED:
+                for m in op.ms:
+                    d_embed = d_embed + embed_stash[m]
+                embed_stash = {}
+            elif k is Op.ALLREDUCE_HEAD:
+                head_bytes = int(d_embed.nbytes + d_un.nbytes
+                                 + d_nm.nbytes)
+                ring = 2 * (eng.R - 1) * head_bytes // eng.R
+                eng._collective("head_grad", ring, ring)
+            elif k is Op.HEAD_ADAM:
+                for name, g in (("embed", d_embed), ("unembed", d_un),
+                                ("final_norm", d_nm)):
+                    st = eng.head_state[name]
+                    p2, st["m"], st["v"] = eng.j_adam_dev(
+                        getattr(eng, name), st["m"], st["v"], g,
+                        jnp.asarray(step, jnp.int32),
+                        jnp.asarray(ocfg.lr))
+                    setattr(eng, name, p2)
+            elif k is Op.WAIT_OPT:
+                for rk in ranks:
+                    rk.opt_c.wait_all()
+            elif k is Op.BARRIER:
+                jax.effects_barrier()
+            elif k is Op.PHASE:
+                flip(op.tag)
+            else:                    # pragma: no cover - compiler bug
+                raise ValueError(f"unknown plan op {op!r}")
+        flip(None)
+    except BaseException:
+        # Mid-plan failure: free the device slots and cancel in-flight
+        # work so the engine can be reused or torn down cleanly instead
+        # of leaking kept boundary tensors / gated prefetches.
+        regs.clear()
+        per_mb_dp = head_stash = embed_stash = {}
+        gacc = p_dev = None
+        for rk in ranks:
+            for fn in (rk.params_c.reset, rk.ckpt_c.clear,
+                       rk.opt_c.wait_all):
+                try:
+                    fn()
+                except Exception:
+                    pass                 # the original error propagates
+        raise
+    return loss_total
