@@ -1,15 +1,21 @@
 """Measured wall-clock + traffic of the REAL offload engine on this
-container: vertical vs horizontal schedule, plus the wave hybrid's
-ckpt-traffic / param-reuse interpolation.
+container: vertical vs horizontal schedule, the wave hybrid's
+ckpt-traffic / param-reuse interpolation, and the activation-policy
+(recompute vs SSDTrain-style spill) axis.
 
 This is the system-level counterpart of Fig. 10 that actually runs here
 (file-backed SSD tier, threaded prefetch + CPU-Adam overlap). Absolute
 numbers reflect this container's CPU; the vertical/horizontal ratio is
-the paper's effect, reproduced with real I/O. All three schedules are
+the paper's effect, reproduced with real I/O. All schedules are
 compiled ``repro.core.plan`` plans walked by the one executor.
 
     PYTHONPATH=src python benchmarks/bench_engine.py
-        [--schedule all|vertical|horizontal|wave] [--smoke]
+        [--schedule all|vertical|horizontal|wave] [--smoke] [--json OUT]
+
+``--smoke --json OUT`` runs the CI bench-smoke battery — all three
+schedules x activation policy on the tiny config — and dumps per-cell
+throughput for ``check_smoke.py`` to gate against the checked-in
+``baseline_smoke.json``.
 """
 from __future__ import annotations
 
@@ -35,11 +41,12 @@ from repro.offload import OffloadConfig, OffloadEngine
 
 def _measure(cfg, sched: str, M: int, mb: int, s: int, alpha: float,
              ratios: StorageRatios, iters: int = 3,
-             wave_size: int = 0) -> dict:
+             wave_size: int = 0, act_policy: str = "recompute") -> dict:
     with tempfile.TemporaryDirectory() as d:
         eng = OffloadEngine(cfg, OffloadConfig(
             schedule=sched, num_microbatches=M, micro_batch=mb, seq_len=s,
-            alpha=alpha, ratios=ratios, wave_size=wave_size),
+            alpha=alpha, ratios=ratios, wave_size=wave_size,
+            activation_policy=act_policy),
             jax.random.PRNGKey(0), d)
         data = SyntheticLM(cfg.vocab_size, seed=0)
         eng.train_step(data.batch(M * mb, s))  # compile warm-up
@@ -57,10 +64,49 @@ def _measure(cfg, sched: str, M: int, mb: int, s: int, alpha: float,
         return sum(v for (c, r), v in routes.items() if c == cat) / iters
 
     return {"s_per_iter": dt, "traffic_bytes_per_iter": traffic / iters,
+            "tokens_per_s": M * mb * s / dt,
             "param_bytes_per_iter": per_iter("param"),
             "ckpt_bytes_per_iter": per_iter("ckpt"),
             "inter_grad_bytes_per_iter": per_iter("inter_grad"),
+            "act_bytes_per_iter": per_iter("act"),
             "grad_bytes_per_iter": per_iter("grad")}
+
+
+def run_smoke(rep: Optional[Reporter] = None, json_path: str = "") -> dict:
+    """The CI bench-smoke battery: every schedule x activation policy
+    on the tiny config, one measured iteration each. The JSON is the
+    artifact ``check_smoke.py`` gates (>20% throughput drop vs the
+    checked-in baseline fails the push) and MLP-Offload-style per-route
+    traffic numbers ride along for the archaeology."""
+    rep = rep or Reporter()
+    cfg, M, mb, s = get_config("gpt-tiny"), 4, 1, 64
+    ratios = StorageRatios(0.0, 0.0, 0.0)
+    rep.section(f"bench-smoke: schedules x activation policy "
+                f"({cfg.name}, M={M})")
+    cells = {}
+    for sched, W in (("vertical", 0), ("horizontal", 0), ("wave", 2)):
+        for pol in ("recompute", "spill"):
+            key = f"{sched}_{pol}"
+            r = _measure(cfg, sched, M, mb, s, alpha=0.0, ratios=ratios,
+                         iters=1, wave_size=W, act_policy=pol)
+            cells[key] = r
+            rep.add(f"smoke/{key}_tokens_per_s", f"{r['tokens_per_s']:.0f}",
+                    f"{r['traffic_bytes_per_iter'] / 1e6:.1f} MB/iter, "
+                    f"act {r['act_bytes_per_iter'] / 1e6:.2f} MB/iter")
+    # structural sanity, cheap enough for every push: the spill cells
+    # carry the act stream, the recompute cells none
+    for sched in ("vertical", "horizontal", "wave"):
+        assert cells[f"{sched}_spill"]["act_bytes_per_iter"] > 0
+        assert cells[f"{sched}_recompute"]["act_bytes_per_iter"] == 0
+    if json_path:
+        import json
+        out = {"config": {"model": cfg.name, "M": M, "micro_batch": mb,
+                          "seq_len": s},
+               "cells": cells}
+        with open(json_path, "w") as f:
+            json.dump(out, f, indent=2)
+        rep.add("smoke/json", json_path, "feed to benchmarks/check_smoke.py")
+    return cells
 
 
 def run_wave(rep: Optional[Reporter] = None, smoke: bool = False) -> dict:
@@ -133,8 +179,14 @@ def main(argv=None) -> None:
                     choices=["all", "vertical", "horizontal", "wave"])
     ap.add_argument("--smoke", action="store_true",
                     help="tiny config, 1 iteration (CI)")
+    ap.add_argument("--json", default="", help="with --smoke: run the "
+                    "schedules-x-policy battery and dump per-cell "
+                    "throughput for check_smoke.py")
     args = ap.parse_args(argv)
     rep = Reporter()
+    if args.smoke and args.json:
+        run_smoke(rep, json_path=args.json)
+        return
     if args.schedule in ("all", "vertical", "horizontal"):
         run(rep)
     if args.schedule in ("all", "wave"):

@@ -1,0 +1,81 @@
+"""Gate a ``bench_engine.py --smoke --json`` run against the checked-in
+baseline: any cell whose smoke throughput drops more than ``tolerance``
+(default 20%) below its baseline fails the build — offload systems
+regress silently unless per-route traffic and throughput numbers are
+checked on every push (MLP-Offload's lesson). Cells present in only one
+file are reported but do not fail (a new schedule/policy lands before
+its baseline).
+
+    python benchmarks/check_smoke.py bench_smoke.json \
+        --baseline benchmarks/baseline_smoke.json [--tolerance 0.2]
+
+Exit status: 0 pass, 1 regression.
+
+Refresh the baseline by re-running the smoke on the reference runner
+and committing the JSON:
+
+    python benchmarks/bench_engine.py --smoke --json \
+        benchmarks/baseline_smoke.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def compare(measured: dict, baseline: dict, tolerance: float) -> list:
+    """Return a list of (cell, measured_tps, baseline_tps, verdict)
+    rows; verdict is "ok", "REGRESSION", or "no-baseline"/"missing"."""
+    rows = []
+    m_cells = measured.get("cells", {})
+    b_cells = baseline.get("cells", {})
+    for cell in sorted(set(m_cells) | set(b_cells)):
+        m = m_cells.get(cell, {}).get("tokens_per_s")
+        b = b_cells.get(cell, {}).get("tokens_per_s")
+        if m is None:
+            rows.append((cell, None, b, "missing"))
+        elif b is None:
+            rows.append((cell, m, None, "no-baseline"))
+        elif m < (1.0 - tolerance) * b:
+            rows.append((cell, m, b, "REGRESSION"))
+        else:
+            rows.append((cell, m, b, "ok"))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("measured", help="bench_engine --smoke --json output")
+    ap.add_argument("--baseline", required=True)
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed fractional throughput drop (0.2 = 20%%)")
+    args = ap.parse_args(argv)
+    with open(args.measured) as f:
+        measured = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    rows = compare(measured, baseline, args.tolerance)
+    width = max(len(r[0]) for r in rows) if rows else 10
+    bad = 0
+    for cell, m, b, verdict in rows:
+        ms = f"{m:10.0f}" if m is not None else "         -"
+        bs = f"{b:10.0f}" if b is not None else "         -"
+        print(f"  {cell:<{width}}  measured {ms} tok/s   "
+              f"baseline {bs} tok/s   {verdict}")
+        if verdict == "REGRESSION":
+            bad += 1
+        elif verdict == "missing":
+            print(f"    note: baseline cell {cell!r} missing from the "
+                  "measured run — did a schedule disappear?")
+            bad += 1
+    if bad:
+        print(f"FAIL: {bad} cell(s) regressed more than "
+              f"{args.tolerance:.0%} vs {args.baseline}")
+        return 1
+    print(f"PASS: all cells within {args.tolerance:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -16,9 +16,8 @@ from __future__ import annotations
 
 import csv
 import io
-import sys
 import time
-from typing import Callable, Dict, List, Sequence
+from typing import Callable, Dict, List
 
 from repro.core.perfmodel import MachineParams
 

@@ -22,7 +22,6 @@ printed for transparency.
 """
 from __future__ import annotations
 
-import math
 from typing import Optional, Tuple
 
 from benchmarks.common import A100_CLOUD, A5000, Reporter, per_gpu_machine

@@ -9,7 +9,6 @@ import tempfile
 from typing import Optional
 
 import jax
-import numpy as np
 
 from benchmarks.common import Reporter, gb
 from repro.configs import get_config

@@ -21,7 +21,6 @@ import tempfile
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_config
 from repro.core.perfmodel import StorageRatios

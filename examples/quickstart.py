@@ -1,8 +1,9 @@
 """Quickstart: train a small GPT with GreedySnake's vertical schedule.
 
     PYTHONPATH=src python examples/quickstart.py [--wave W]
+        [--activation-policy recompute|spill|auto]
 
-Shows the four core public APIs:
+Shows the core public APIs:
   1. configs      — pick an architecture (any of the 10 assigned archs
                     works via get_smoke)
   2. ScheduleConfig / Trainer — vertical vs horizontal schedules
@@ -10,6 +11,10 @@ Shows the four core public APIs:
   4. the offload engine's wave-schedule knob — one compiled
      repro.core.plan per W, interpolating between horizontal (W=1) and
      vertical (W=M) storage traffic
+  5. the activation-policy knob — "spill" streams each layer's vjp
+     residuals through the SSD tier (SPILL_ACT/FETCH_ACT at the
+     opportunistic IOPriority.ACT) instead of recomputing backward,
+     with BITWISE-identical losses; "auto" asks the perf model
 """
 import argparse
 import sys
@@ -31,6 +36,11 @@ def main() -> None:
     ap.add_argument("--wave", type=int, default=2, choices=[1, 2, 4],
                     help="wave size W for the offload-engine demo's M=4 "
                          "(W=1 horizontal ... W=4 vertical)")
+    ap.add_argument("--activation-policy", default="recompute",
+                    choices=["recompute", "spill", "auto"],
+                    help="backward from recomputed activations (paper) "
+                         "or from SSD-streamed vjp residuals (SSDTrain); "
+                         "auto prices both with the perf model")
     args = ap.parse_args()
     cfg = get_config("gpt-tiny")
     print(f"model: {cfg.name}  layers={cfg.num_layers} d={cfg.d_model} "
@@ -64,26 +74,55 @@ def main() -> None:
     from repro.core.perfmodel import StorageRatios
     from repro.offload import OffloadConfig, OffloadEngine
     M = 4
-    print(f"\nwave knob (M={M}; --wave {args.wave}):")
-    for W in sorted({1, args.wave, M}):
+
+    def engine_step(W, policy):
         with tempfile.TemporaryDirectory() as d:
             eng = OffloadEngine(cfg, OffloadConfig(
                 schedule="wave", wave_size=W, num_microbatches=M,
                 micro_batch=1, seq_len=64,
-                ratios=StorageRatios(0.0, 0.0, 0.0)),
+                ratios=StorageRatios(0.0, 0.0, 0.0),
+                activation_policy=policy),
                 jax.random.PRNGKey(0), d)
             tok = make_batch(cfg, M, 64, seed=2)["tokens"]
             loss = eng.train_step(np.asarray(tok))
             eng.finish()
-            b = eng.meter.bytes
-            param = b.get(("param", "cpu->gpu"), 0)
-            reread = b.get(("ckpt", "cpu->gpu"), 0) \
-                + b.get(("inter_grad", "cpu->gpu"), 0)
+            b, pol = eng.meter.bytes, eng.act_policy
             eng.close()
+        return loss, b, pol
+
+    print(f"\nwave knob (M={M}; --wave {args.wave}):")
+    vertical_cell = None
+    for W in sorted({1, args.wave, M}):
+        loss, b, _ = engine_step(W, "recompute")
+        if W == M:
+            vertical_cell = (loss, b)    # reused by the policy demo
+        param = b.get(("param", "cpu->gpu"), 0)
+        reread = b.get(("ckpt", "cpu->gpu"), 0) \
+            + b.get(("inter_grad", "cpu->gpu"), 0)
         name = {1: "horizontal", M: "vertical"}.get(W, "wave")
         print(f"  W={W} ({name:10s}): loss {loss:.3f}  "
               f"param {param / 1e6:6.1f} MB  ckpt+grad reads "
               f"{reread / 1e6:6.1f} MB")
+
+    # --- 4. the activation-policy knob on the same engine -------------
+    # "spill" trades backward recompute for an opportunistic SSD stream
+    # of each layer's vjp residuals; the losses stay bitwise-identical
+    # because both policies apply the same saved-residual backward.
+    # The W=M recompute cell above IS the reference — no second run.
+    print(f"\nactivation policy (vertical, M={M}; "
+          f"--activation-policy {args.activation_policy}):")
+    l_re, b_re = vertical_cell
+    ckpt_rd_re = b_re.get(("ckpt", "ssd->cpu"), 0)
+    print(f"  recompute           : loss {l_re:.6f}  act 0.0 MB  "
+          f"ckpt ssd re-reads {ckpt_rd_re / 1e6:5.1f} MB")
+    if args.activation_policy != "recompute":
+        l_pol, b_pol, resolved = engine_step(M, args.activation_policy)
+        act = sum(v for (c, _), v in b_pol.items() if c == "act")
+        ckpt_rd = b_pol.get(("ckpt", "ssd->cpu"), 0)
+        print(f"  {args.activation_policy:8s}->{resolved:9s}: "
+              f"loss {l_pol:.6f}  act {act / 1e6:.1f} MB  "
+              f"ckpt ssd re-reads {ckpt_rd / 1e6:5.1f} MB")
+        assert l_pol == l_re, "policies must agree bitwise"
     print("OK")
 
 

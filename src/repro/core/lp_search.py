@@ -34,6 +34,7 @@ class LPSolution:
     x: StorageRatios
     t_f: float
     t_b: float
+    act_policy: str = "recompute"
 
     @property
     def iteration_time(self) -> float:
@@ -42,7 +43,8 @@ class LPSolution:
 
 def solve_config(m: MachineParams, w: Workload, n: int, alpha: float,
                  num_gpus: int = 1,
-                 wave: Optional[int] = None) -> Optional[LPSolution]:
+                 wave: Optional[int] = None,
+                 act_policy: str = "recompute") -> Optional[LPSolution]:
     """One LP solve for fixed (n, α). Returns None if infeasible.
 
     With ``num_gpus=R > 1`` the LP models the R-way data-parallel
@@ -58,7 +60,26 @@ def solve_config(m: MachineParams, w: Workload, n: int, alpha: float,
     ``nw = n/W``, the cross-wave f32 grad-buffer swap joins the PCIe
     rows, and — unlike vertical's ~3-layer transient — the FULL f32
     accumulation buffer stays CPU-resident across waves, tightening the
-    memory row. ``wave=None`` (or ``wave == n``) is vertical."""
+    memory row. ``wave=None`` (or ``wave == n``) is vertical.
+
+    ``act_policy`` adds the activation-policy row: "spill" prices the
+    SSDTrain-style residual stream — the backward compute bound drops
+    its recompute third (``t_b1 = 2·t_f1``), the checkpoint backward
+    re-read rows vanish, and the ``n·as`` residual bytes join the SSD
+    write (forward) and read (backward) constants and both PCIe rows
+    (the stream is fully offloaded in the LP: its priority class is the
+    lowest, so it only soaks spare bandwidth — letting it compete for
+    the LP's CPU budget would understate checkpoint residency).
+    "auto" solves both rows and returns the faster solution, tagged in
+    ``LPSolution.act_policy``."""
+    if act_policy == "auto":
+        sols = [solve_config(m, w, n, alpha, num_gpus=num_gpus, wave=wave,
+                             act_policy=p) for p in ("recompute", "spill")]
+        sols = [s for s in sols if s is not None]
+        return min(sols, key=lambda s: s.iteration_time, default=None)
+    if act_policy not in ("recompute", "spill"):
+        raise ValueError(f"unknown act_policy {act_policy!r}")
+    spill = act_policy == "spill"
     R = int(num_gpus)
     ms_full, grad_full = w.ms, w.grad_bytes
     if R > 1:
@@ -75,6 +96,9 @@ def solve_config(m: MachineParams, w: Workload, n: int, alpha: float,
         return None
     nw = n // W
     t_f1, t_b1 = compute_times(w, m)
+    if spill:
+        t_b1 = 2.0 * t_f1           # vjp only — no recompute pass
+    act_b = n * w.as_bytes if spill else 0.0
     rd, wr = m.ssd_read_bw, m.ssd_write_bw
     A_ub: List[List[float]] = []
     b_ub: List[float] = []
@@ -107,25 +131,31 @@ def solve_config(m: MachineParams, w: Workload, n: int, alpha: float,
     # --- forward stage lower bounds ---
     add_time_lb(3, n * t_f1)                                   # GPU compute
     #   SSD: reads  nw·ms(1-x_p)/rd + α·os(1-x_o)/rd
-    #        writes n·cs(1-x_c)/wr + α·os(1-x_o)/wr
-    const_f = nw * w.ms / rd + n * w.cs / wr \
+    #        writes n·cs(1-x_c)/wr + n·as/wr (spill) + α·os(1-x_o)/wr
+    const_f = nw * w.ms / rd + n * w.cs / wr + act_b / wr \
         + alpha * w.os_bytes * (1 / rd + 1 / wr)
     add_time_lb(3, const_f, (n * w.cs / wr, nw * w.ms / rd,
                              alpha * w.os_bytes * (1 / rd + 1 / wr)))
     adam_t = (w.os_bytes + w.grad_bytes) / m.cpu_adam_bw
     add_time_lb(3, alpha * adam_t)                             # CPU Adam (α part)
     pc = tr.wave_traffic(w.ms, w.cs, n, W)
-    pcie_fwd = nw * w.ms + (2 * n - nw) * w.cs
+    pcie_fwd = nw * w.ms + (2 * n - nw) * w.cs + act_b
     add_time_lb(3, pcie_fwd / m.pcie_bw)                       # PCIe
 
     # --- backward stage lower bounds ---
     add_time_lb(4, n * t_b1)
-    const_b = nw * w.ms / rd + n * w.cs / rd \
+    #   spill: the n·cs checkpoint re-read row is replaced by the n·as
+    #   residual fetch (constant — the stream is fully offloaded)
+    bwd_ckpt_rd = 0.0 if spill else n * w.cs
+    const_b = nw * w.ms / rd + bwd_ckpt_rd / rd + act_b / rd \
         + (1 - alpha) * w.os_bytes * (1 / rd + 1 / wr)
-    add_time_lb(4, const_b, (n * w.cs / rd, nw * w.ms / rd,
+    add_time_lb(4, const_b, (bwd_ckpt_rd / rd, nw * w.ms / rd,
                              (1 - alpha) * w.os_bytes * (1 / rd + 1 / wr)))
     add_time_lb(4, (1 - alpha) * adam_t)
-    add_time_lb(4, max(0.0, pc.total - pcie_fwd) / m.pcie_bw)
+    pcie_bwd = pc.total - (nw * w.ms + (2 * n - nw) * w.cs)
+    if spill:
+        pcie_bwd += act_b - n * w.cs   # residual fetch replaces re-read
+    add_time_lb(4, max(0.0, pcie_bwd) / m.pcie_bw)
 
     # --- data-parallel interconnect lower bounds (constant rows) ---
     if R > 1:
@@ -141,7 +171,8 @@ def solve_config(m: MachineParams, w: Workload, n: int, alpha: float,
         return None
     x_c, x_p, x_o, t_f, t_b = res.x
     return LPSolution(StorageRatios(ckpt=float(x_c), param=float(x_p),
-                                    opt=float(x_o)), float(t_f), float(t_b))
+                                    opt=float(x_o)), float(t_f), float(t_b),
+                      act_policy=act_policy)
 
 
 @dataclasses.dataclass(frozen=True)

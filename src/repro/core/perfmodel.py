@@ -118,6 +118,8 @@ class Workload:
     flops_per_mb: float  # fwd-only model FLOPs for one micro-batch
     tokens_per_mb: int
     n_layers: int = 1
+    as_bytes: float = 0.0  # aggregated activation-residual bytes per
+                           # micro-batch (the spill policy's stream)
 
     @staticmethod
     def from_config(cfg, micro_batch: int, seq_len: int, num_gpus: int = 1
@@ -135,6 +137,7 @@ class Workload:
             flops_per_mb=2 * cfg.active_params() * tokens + attn,
             tokens_per_mb=tokens,
             n_layers=cfg.num_layers,
+            as_bytes=tr.act_residual_bytes(cfg, micro_batch, seq_len),
         )
 
     @property
@@ -149,10 +152,14 @@ class Workload:
 
 @dataclasses.dataclass(frozen=True)
 class StorageRatios:
-    """Fraction of each data type resident in CPU memory (rest on SSD)."""
+    """Fraction of each data type resident in CPU memory (rest on SSD).
+    ``act`` is the activation-stream head fraction — only consulted
+    when ``activation_policy="spill"`` routes non-boundary activations
+    through storage instead of recomputing them."""
     ckpt: float = 0.0
     param: float = 0.0
     opt: float = 1.0
+    act: float = 0.0
 
 
 def _ssd_time(read_bytes, write_bytes, m: MachineParams) -> float:
@@ -191,19 +198,33 @@ def compute_times(w: Workload, m: MachineParams):
 
 
 def iteration_time_vertical(w: Workload, m: MachineParams, M: int,
-                            alpha: float, x: StorageRatios) -> float:
+                            alpha: float, x: StorageRatios,
+                            act: str = "recompute") -> float:
     """GreedySnake §4: fwd and bwd stages each bounded by the max of GPU
-    compute, PCIe traffic, SSD traffic, and (overlapped) CPU-Adam time."""
+    compute, PCIe traffic, SSD traffic, and (overlapped) CPU-Adam time.
+
+    ``act="spill"`` prices the SSDTrain-style activation stream:
+    backward drops its recompute third (``t_b1 = 2·t_f1``) and its
+    checkpoint re-reads, and instead the ``M·as`` residual bytes ride
+    out after forward and back in before backward (``StorageRatios.act``
+    CPU-resident, the tail over SSD at the opportunistic priority)."""
+    spill = act == "spill"
     t_f1, t_b1 = compute_times(w, m)
+    if spill:
+        t_b1 = 2.0 * t_f1                  # vjp only; no recompute pass
     pcie = tr.vertical_traffic(w.ms, w.cs, M)
     # PCIe split: fwd moves params (1x) + ckpt writes/reads; bwd the rest.
     pcie_fwd = w.ms + M * w.cs + (M - 1) * w.cs
     pcie_bwd = pcie.total - pcie_fwd
-    opt_ssd_rd = 2 * w.os_bytes * (1 - x.opt)   # read states + write back
-    # (read and write each os*(1-x); split across the two directions)
+    if spill:
+        pcie_fwd += M * w.as_bytes         # residual spill after each FWD
+        pcie_bwd += M * (w.as_bytes - w.cs)  # fetch replaces ckpt re-read
+    act_tail = M * w.as_bytes * (1 - x.act) if spill else 0.0
+    bwd_ckpt_rd = 0.0 if spill else M * w.cs * (1 - x.ckpt)
     fwd_ssd = _ssd_time(w.ms * (1 - x.param) + alpha * w.os_bytes * (1 - x.opt),
-                        M * w.cs * (1 - x.ckpt) + alpha * w.os_bytes * (1 - x.opt), m)
-    bwd_ssd = _ssd_time(w.ms * (1 - x.param) + M * w.cs * (1 - x.ckpt)
+                        M * w.cs * (1 - x.ckpt) + act_tail
+                        + alpha * w.os_bytes * (1 - x.opt), m)
+    bwd_ssd = _ssd_time(w.ms * (1 - x.param) + bwd_ckpt_rd + act_tail
                         + (1 - alpha) * w.os_bytes * (1 - x.opt),
                         (1 - alpha) * w.os_bytes * (1 - x.opt), m)
     adam_t = (w.os_bytes + w.grad_bytes) / m.cpu_adam_bw
@@ -213,27 +234,39 @@ def iteration_time_vertical(w: Workload, m: MachineParams, M: int,
 
 
 def iteration_time_wave(w: Workload, m: MachineParams, M: int, W: int,
-                        alpha: float, x: StorageRatios) -> float:
+                        alpha: float, x: StorageRatios,
+                        act: str = "recompute") -> float:
     """The wave hybrid (``repro.core.plan.compile_wave``): ``nw = M/W``
     waves, each stage bounded like the vertical model but with the
     parameter (re)loads scaled by ``nw`` and the cross-wave f32
     grad-buffer swap riding the PCIe terms (it is CPU-resident, like
     the horizontal engine's accumulation buffer). ``W=M`` reduces to
-    :func:`iteration_time_vertical` exactly."""
+    :func:`iteration_time_vertical` exactly. ``act="spill"`` prices the
+    activation stream the same way (wave size does not change its byte
+    count — spills and fetches stay within one wave)."""
     if W < 1 or M % W:
         return float("inf")
     if W == M:
-        return iteration_time_vertical(w, m, M, alpha, x)
+        return iteration_time_vertical(w, m, M, alpha, x, act=act)
+    spill = act == "spill"
     nw = M // W
     t_f1, t_b1 = compute_times(w, m)
+    if spill:
+        t_b1 = 2.0 * t_f1
     pcie = tr.wave_traffic(w.ms, w.cs, M, W)
     pcie_fwd = nw * w.ms + M * w.cs + (M - nw) * w.cs
     pcie_bwd = pcie.total - pcie_fwd
+    if spill:
+        pcie_fwd += M * w.as_bytes
+        pcie_bwd += M * (w.as_bytes - w.cs)
+    act_tail = M * w.as_bytes * (1 - x.act) if spill else 0.0
+    bwd_ckpt_rd = 0.0 if spill else M * w.cs * (1 - x.ckpt)
     fwd_ssd = _ssd_time(
         nw * w.ms * (1 - x.param) + alpha * w.os_bytes * (1 - x.opt),
-        M * w.cs * (1 - x.ckpt) + alpha * w.os_bytes * (1 - x.opt), m)
+        M * w.cs * (1 - x.ckpt) + act_tail
+        + alpha * w.os_bytes * (1 - x.opt), m)
     bwd_ssd = _ssd_time(
-        nw * w.ms * (1 - x.param) + M * w.cs * (1 - x.ckpt)
+        nw * w.ms * (1 - x.param) + bwd_ckpt_rd + act_tail
         + (1 - alpha) * w.os_bytes * (1 - x.opt),
         (1 - alpha) * w.os_bytes * (1 - x.opt), m)
     adam_t = (w.os_bytes + w.grad_bytes) / m.cpu_adam_bw
@@ -243,9 +276,24 @@ def iteration_time_wave(w: Workload, m: MachineParams, M: int, W: int,
     return t_fwd + t_bwd
 
 
+def pick_activation_policy(w: Workload, m: MachineParams, M: int, W: int,
+                           alpha: float, x: StorageRatios) -> str:
+    """Resolve ``activation_policy="auto"``: "spill" exactly when the
+    roofline says streaming the residuals beats recomputing them —
+    i.e. the spill-priced iteration is faster. Spilling wins when the
+    backward recompute third is the binding term (slow compute, fast
+    SSDs with spare write bandwidth); recompute wins when storage is
+    the bottleneck and the extra ``2·M·as`` bytes would lengthen the
+    critical path."""
+    t_re = iteration_time_wave(w, m, M, W, alpha, x, act="recompute")
+    t_sp = iteration_time_wave(w, m, M, W, alpha, x, act="spill")
+    return "spill" if t_sp < t_re else "recompute"
+
+
 def iteration_time_vertical_dp(w: Workload, m: MachineParams, M: int,
                                alpha: float, x: StorageRatios,
-                               R: Optional[int] = None) -> float:
+                               R: Optional[int] = None,
+                               act: str = "recompute") -> float:
     """R-GPU data-parallel vertical schedule (the Fig. 10 scaling
     model). ``w`` is the FULL-model workload; each rank owns 1/R of
     every storage shard (ZeRO-style) and M/R of the micro-batches, and
@@ -257,22 +305,31 @@ def iteration_time_vertical_dp(w: Workload, m: MachineParams, M: int,
     ``m.interconnect_bw``. ``m.cpu_mem`` is per rank."""
     R = int(R or m.num_gpus)
     if R <= 1:
-        return iteration_time_vertical(w, m, M, alpha, x)
+        return iteration_time_vertical(w, m, M, alpha, x, act=act)
     if M % R:
         return float("inf")
+    spill = act == "spill"
     Mr = M // R
     wr = dataclasses.replace(w, ms=w.ms / R, os_bytes=w.os_bytes / R,
                              grad_bytes=w.grad_bytes / R)
     t_f1, t_b1 = compute_times(w, m)
+    if spill:
+        t_b1 = 2.0 * t_f1
     # per-rank PCIe: own shard + this rank's micro-batches' ckpt traffic
     pcie = tr.vertical_traffic(wr.ms, w.cs, Mr)
     pcie_fwd = wr.ms + Mr * w.cs + (Mr - 1) * w.cs
     pcie_bwd = pcie.total - pcie_fwd
+    if spill:
+        pcie_fwd += Mr * w.as_bytes
+        pcie_bwd += Mr * (w.as_bytes - w.cs)
+    act_tail = Mr * w.as_bytes * (1 - x.act) if spill else 0.0
+    bwd_ckpt_rd = 0.0 if spill else Mr * w.cs * (1 - x.ckpt)
     fwd_ssd = _ssd_time(
         wr.ms * (1 - x.param) + alpha * wr.os_bytes * (1 - x.opt),
-        Mr * w.cs * (1 - x.ckpt) + alpha * wr.os_bytes * (1 - x.opt), m)
+        Mr * w.cs * (1 - x.ckpt) + act_tail
+        + alpha * wr.os_bytes * (1 - x.opt), m)
     bwd_ssd = _ssd_time(
-        wr.ms * (1 - x.param) + Mr * w.cs * (1 - x.ckpt)
+        wr.ms * (1 - x.param) + bwd_ckpt_rd + act_tail
         + (1 - alpha) * wr.os_bytes * (1 - x.opt),
         (1 - alpha) * wr.os_bytes * (1 - x.opt), m)
     adam_t = (wr.os_bytes + wr.grad_bytes) / m.cpu_adam_bw

@@ -61,7 +61,18 @@ FETCH_CKPT(l, m)      next-layer forward input (device-kept: free;
                       else cpu->gpu, consuming the CPU tail cache)
 FETCH_CKPT_BWD(l, m)  backward recompute input (cpu->gpu + ssd tail
                       re-read unless the tail is still CPU-cached)
-FWD(l, m)             layer forward (compute only)
+FWD(l, m)             layer forward (compute only; under the spill
+                      policy it also materialises the vjp residuals)
+SPILL_ACT(l, m)       spill policy: stream layer l's vjp residuals for
+                      micro-batch m out (act gpu->cpu + ssd tail at the
+                      opportunistic IOPriority.ACT; the CPU tail copy
+                      is dropped once the spill lands)
+PREFETCH_ACT(l, m)    hint: start the residual tail's SSD read now
+                      (bytes accounted at FETCH_ACT)
+FETCH_ACT(l, m)       await the residuals on device ahead of BWD
+                      (act ssd->cpu tail + cpu->gpu full); replaces
+                      FETCH_CKPT_BWD — backward applies the saved vjp
+                      instead of recomputing from the checkpoint
 HEAD_BWD(m)           loss + head backward for m (compute only)
 BWD(l, m)             layer backward; ``acc`` accumulates dW into the
                       layer gradient register (else stashed for DP)
@@ -143,6 +154,9 @@ class Op(enum.Enum):
     FETCH_CKPT = "fetch_ckpt"
     FETCH_CKPT_BWD = "fetch_ckpt_bwd"
     FWD = "fwd"
+    SPILL_ACT = "spill_act"
+    PREFETCH_ACT = "prefetch_act"
+    FETCH_ACT = "fetch_act"
     HEAD_BWD = "head_bwd"
     BWD = "bwd"
     SPILL_GRAD = "spill_grad"
@@ -192,6 +206,10 @@ class PlanSpec:
     M: int                      # micro-batches per iteration
     alpha: float = 0.0          # §4.4 delayed-optimizer ratio
     ranks: int = 1              # data-parallel ranks (vertical only)
+    act_spill: bool = False     # SSDTrain-style activation streaming:
+                                # SPILL_ACT/FETCH_ACT replace backward
+                                # recompute (resolved policy — "auto"
+                                # is decided before compilation)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -282,6 +300,8 @@ def compile_wave(spec: PlanSpec, W: int,
                 for m in grp:
                     emit(PlanOp(Op.FETCH_CKPT, l=l, m=m))
                     emit(PlanOp(Op.FWD, l=l, m=m))
+                    if spec.act_spill:
+                        emit(PlanOp(Op.SPILL_ACT, l=l, m=m))
                     emit(PlanOp(Op.SPILL_CKPT, l=l + 1, m=m,
                                 keep=(m == grp[-1])))
             emit(PlanOp(Op.RELEASE_PARAM, l=l))
@@ -304,7 +324,10 @@ def compile_wave(spec: PlanSpec, W: int,
                 emit(PlanOp(Op.GRAD_INIT, l=l))
             for grp in groups(l, w):
                 for m in grp:
-                    emit(PlanOp(Op.FETCH_CKPT_BWD, l=l, m=m))
+                    # spill policy: backward consumes the streamed vjp
+                    # residuals; recompute re-reads the checkpoint
+                    emit(PlanOp(Op.FETCH_ACT if spec.act_spill
+                                else Op.FETCH_CKPT_BWD, l=l, m=m))
                     emit(PlanOp(Op.FETCH_GRAD, l=l + 1, m=m))
                     emit(PlanOp(Op.BWD, l=l, m=m, acc=not dp))
                     emit(PlanOp(Op.SPILL_GRAD, l=l, m=m, keep=(m == grp[-1])))
@@ -367,6 +390,37 @@ def compile_horizontal(spec: PlanSpec,
 _FETCH_KINDS = (Op.FETCH_PARAM, Op.ALLGATHER)
 
 
+def _hint_pass(ops: List[PlanOp], fetch_kinds, hint_kind: Op) -> List[PlanOp]:
+    """One lookahead pass: every op whose kind is in ``fetch_kinds``
+    gets exactly one ``hint_kind`` hint, placed right after the
+    previous such fetch in the same schedule segment (or after the
+    segment anchor — the leading PHASE/OPT_LATE prefix, or the
+    segment's ``RESET_PARAMS``). Hints never cross a ``RESET_PARAMS``.
+    """
+    # anchor after the leading PHASE/OPT_LATE prefix (α-gate ordering)
+    lead = -1
+    for i, op in enumerate(ops):
+        if op.op is Op.PHASE:
+            continue
+        if op.op is Op.OPT_LATE:
+            lead = i
+            continue
+        break
+    inserts: Dict[int, List[PlanOp]] = defaultdict(list)
+    anchor = lead
+    for i, op in enumerate(ops):
+        if op.op is Op.RESET_PARAMS:
+            anchor = i
+        elif op.op in fetch_kinds:
+            inserts[anchor].append(PlanOp(hint_kind, l=op.l, m=op.m))
+            anchor = i
+    out: List[PlanOp] = list(inserts.get(-1, []))
+    for i, op in enumerate(ops):
+        out.append(op)
+        out.extend(inserts.get(i, []))
+    return out
+
+
 def insert_prefetch(plan: Plan) -> Plan:
     """Derive ``PREFETCH`` hints: every parameter fetch gets exactly one
     hint, placed as early as legal —
@@ -381,31 +435,17 @@ def insert_prefetch(plan: Plan) -> Plan:
     Hints never cross a ``RESET_PARAMS``: the reset cancels queued
     prefetches, but one already running would have moved (and metered)
     bytes the imperative engines never moved.
+
+    Spill plans additionally get one ``PREFETCH_ACT`` hint per
+    ``FETCH_ACT`` under the same anchor discipline, so each
+    micro-batch's residual tail streams in (at the opportunistic
+    ``IOPriority.ACT``) while the previous micro-batch's backward
+    runs.
     """
-    ops = list(plan.ops)
-    # anchor after the leading PHASE/OPT_LATE prefix (α-gate ordering)
-    lead = -1
-    for i, op in enumerate(ops):
-        if op.op is Op.PHASE:
-            continue
-        if op.op is Op.OPT_LATE:
-            lead = i
-            continue
-        break
-    inserts: Dict[int, List[int]] = defaultdict(list)
-    anchor = lead
-    for i, op in enumerate(ops):
-        if op.op is Op.RESET_PARAMS:
-            anchor = i
-        elif op.op in _FETCH_KINDS:
-            inserts[anchor].append(op.l)
-            anchor = i
-    out: List[PlanOp] = [PlanOp(Op.PREFETCH, l=l) for l in inserts.get(-1, [])]
-    for i, op in enumerate(ops):
-        out.append(op)
-        for l in inserts.get(i, []):
-            out.append(PlanOp(Op.PREFETCH, l=l))
-    return dataclasses.replace(plan, ops=tuple(out))
+    ops = _hint_pass(list(plan.ops), _FETCH_KINDS, Op.PREFETCH)
+    if plan.spec.act_spill:
+        ops = _hint_pass(ops, (Op.FETCH_ACT,), Op.PREFETCH_ACT)
+    return dataclasses.replace(plan, ops=tuple(ops))
 
 
 # ---------------------------------------------------------------------------
@@ -424,6 +464,9 @@ class PlanCosts:
     alpha: float = 0.0
     ranks: int = 1
     head_nbytes: int = 0        # f32 embed+unembed+norm grads (DP ring)
+    act_res_bytes: int = 0      # one (layer, micro-batch) vjp-residual
+                                # payload — what SPILL_ACT/FETCH_ACT move
+                                # (engines size it via jax.eval_shape)
 
     @staticmethod
     def from_engine(eng) -> "PlanCosts":
@@ -436,7 +479,8 @@ class PlanCosts:
             P=eng.P, param_itemsize=item,
             ckpt_elems=ocfg.micro_batch * ocfg.seq_len * eng.cfg.d_model,
             act_itemsize=item, ratios=ocfg.ratios, alpha=ocfg.alpha,
-            ranks=getattr(eng, "R", 1), head_nbytes=head_nbytes)
+            ranks=getattr(eng, "R", 1), head_nbytes=head_nbytes,
+            act_res_bytes=getattr(eng, "act_nbytes", 0))
 
 
 def _khost(x: float, n: int) -> int:
@@ -535,6 +579,23 @@ def plan_traffic(plan: Plan, costs: PlanCosts):
             if kc < E and (op.l, op.m) not in tail_cached:
                 add(r, "ckpt", "ssd->cpu", (E - kc) * a)
             add(r, "ckpt", "cpu->gpu", u)
+        elif k is Op.SPILL_ACT:
+            r = owner(op.m)
+            A = costs.act_res_bytes
+            add(r, "act", "gpu->cpu", A)
+            ka = _khost(x.act, A)            # coordinator rounding (bytes)
+            if ka < A:
+                add(r, "act", "cpu->ssd", A - ka)
+        elif k is Op.FETCH_ACT:
+            r = owner(op.m)
+            A = costs.act_res_bytes
+            ka = _khost(x.act, A)
+            if ka < A:
+                # unlike ckpt tails, the CPU copy is dropped as soon as
+                # the spill lands (reclaiming DRAM is the point), so
+                # every fetch re-reads the tail from SSD
+                add(r, "act", "ssd->cpu", A - ka)
+            add(r, "act", "cpu->gpu", A)
         elif k is Op.SPILL_GRAD:
             if op.keep:
                 kept_grad.add((op.l, op.m))

@@ -142,7 +142,50 @@ class CkptTraffic:
         return self.read_fwd + self.read_bwd
 
 
-def wave_ckpt_traffic(cs: float, M: int, W: int, L: int) -> CkptTraffic:
+@dataclasses.dataclass(frozen=True)
+class ActTraffic:
+    """EXACT engine-level counters of the SSDTrain-style activation
+    stream (``activation_policy="spill"``): per pipelined layer and
+    micro-batch, the layer's vjp residuals — ``A`` bytes, the
+    non-boundary activations backward needs — are streamed out after
+    the forward (``SPILL_ACT``) and streamed back just before the
+    backward (``FETCH_ACT``), instead of being recomputed from the
+    boundary checkpoint. ``x_act`` is the CPU-resident head fraction
+    (``StorageRatios.act``); the tail beyond it rides the SSD at
+    ``IOPriority.ACT`` (below ckpt spills — opportunistic)."""
+    spill: float        # act gpu->cpu: every layer, every micro-batch
+    fetch: float        # act cpu->gpu: same count, ahead of each BWD
+    ssd_spill: float    # act cpu->ssd: the (1 - x_act) tails
+    ssd_reread: float   # act ssd->cpu: every tail re-read at backward
+                        # (the CPU copy is dropped once the spill lands
+                        # — freeing DRAM is the point of the stream)
+
+    @property
+    def total(self) -> float:
+        return self.spill + self.fetch + self.ssd_spill + self.ssd_reread
+
+
+def act_spill_traffic(A: float, M: int, L: int,
+                      x_act: float = 0.0) -> ActTraffic:
+    """Closed-form per-iteration activation-stream counters: ``L·M``
+    spills and fetches of ``A`` bytes each (one per (layer,
+    micro-batch)), with the ``(A - k)`` tail touching the SSD both ways
+    (``k = round(x_act · A)`` — the same rounding the coordinator and
+    :func:`repro.core.plan.plan_traffic` apply). Wave size does not
+    enter: activations are written and read within one wave, with no
+    §4.2 keep discipline (the stream is strictly FIFO per micro-batch).
+    """
+    tail = A - int(round(x_act * A))
+    return ActTraffic(
+        spill=L * M * A,
+        fetch=L * M * A,
+        ssd_spill=L * M * tail,
+        ssd_reread=L * M * tail,
+    )
+
+
+def wave_ckpt_traffic(cs: float, M: int, W: int, L: int,
+                      act_spill: bool = False) -> CkptTraffic:
     """Exact per-iteration checkpoint / inter-layer-gradient counters of
     the plan-driven engine for the W-wave schedule (``nw = M/W`` waves,
     each behaving vertically over its W micro-batches): every boundary
@@ -158,7 +201,17 @@ def wave_ckpt_traffic(cs: float, M: int, W: int, L: int) -> CkptTraffic:
     inter-layer gradients, and SSD tail re-reads all collapse to zero
     (the single in-flight micro-batch never leaves the device) — the
     interpolation the wave knob trades against its ``2·nw·ms``
-    parameter reloads."""
+    parameter reloads.
+
+    With ``act_spill=True`` (``activation_policy="spill"``) the
+    backward pass consumes the activation stream
+    (:func:`act_spill_traffic`) instead of recomputing from
+    checkpoints, so the two backward re-read terms vanish: no
+    ``FETCH_CKPT_BWD`` reads (``read_bwd = 0``) and no SSD tail
+    re-reads (``ssd_reread = 0``). Checkpoint WRITES are unchanged —
+    the next layer's forward still consumes the CPU cache, and the SSD
+    tails stay on disk as the recompute fallback a failed activation
+    fetch degrades to."""
     if W < 1 or M % W:
         raise ValueError(f"wave size W={W} must divide M={M}")
     nw = M // W
@@ -167,14 +220,15 @@ def wave_ckpt_traffic(cs: float, M: int, W: int, L: int) -> CkptTraffic:
     return CkptTraffic(
         write=nb * M * u,
         read_fwd=nb * (M - nw) * u,
-        read_bwd=L * M * u,
+        read_bwd=0.0 if act_spill else L * M * u,
         inter_grad=2 * nb * (M - nw) * u,
         ssd_spill=nb * M * u,
-        ssd_reread=L * (M - nw) * u,
+        ssd_reread=0.0 if act_spill else L * (M - nw) * u,
     )
 
 
-def vertical_ckpt_traffic(cs: float, M: int, L: int) -> CkptTraffic:
+def vertical_ckpt_traffic(cs: float, M: int, L: int,
+                          act_spill: bool = False) -> CkptTraffic:
     """Exact per-iteration checkpoint byte counters of the vertical
     engine: "read twice minus the on-device boundary micro-batch"
     (§4.2), per boundary — the single-wave (W=M) case of
@@ -182,7 +236,7 @@ def vertical_ckpt_traffic(cs: float, M: int, L: int) -> CkptTraffic:
     ``(L)·u`` extra checkpoint reads and ``2·L·u`` extra inter-layer
     gradient bytes (only the embedding-side boundary stays aligned).
     ``ssd_*`` fields are the fully-offloaded (x_ckpt=0) values."""
-    return wave_ckpt_traffic(cs, M, M, L)
+    return wave_ckpt_traffic(cs, M, M, L, act_spill=act_spill)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -201,6 +255,8 @@ class DPRankTraffic:
     opt_read: float            # master+m+v shard reads: os_bytes/R
     opt_write: float           # master+m+v shard writes: os_bytes/R
     ckpt: Optional[CkptTraffic]  # boundary traffic over M/R micro-batches
+    act: Optional[ActTraffic] = None  # activation stream over M/R
+                                      # micro-batches (spill policy)
 
     @property
     def interconnect(self) -> float:
@@ -212,18 +268,21 @@ class DPRankTraffic:
     @property
     def ssd_read(self) -> float:
         r = self.param_fetch + self.opt_read
-        return r + (self.ckpt.ssd_reread if self.ckpt else 0.0)
+        r += self.ckpt.ssd_reread if self.ckpt else 0.0
+        return r + (self.act.ssd_reread if self.act else 0.0)
 
     @property
     def ssd_write(self) -> float:
         w = self.param_writeback + self.opt_write
-        return w + (self.ckpt.ssd_spill if self.ckpt else 0.0)
+        w += self.ckpt.ssd_spill if self.ckpt else 0.0
+        return w + (self.act.ssd_spill if self.act else 0.0)
 
 
 def dp_vertical_traffic(ms: float, cs: float, M: int, R: int, *,
                         grad_bytes: Optional[float] = None,
                         os_bytes: Optional[float] = None,
-                        n_layers: Optional[int] = None) -> DPRankTraffic:
+                        n_layers: Optional[int] = None,
+                        act_bytes: Optional[float] = None) -> DPRankTraffic:
     """Closed-form per-rank traffic for R data-parallel ranks running
     the vertical schedule over M global micro-batches.
 
@@ -233,12 +292,18 @@ def dp_vertical_traffic(ms: float, cs: float, M: int, R: int, *,
     ``grad_bytes=ms`` and ``os_bytes=3·ms``). With ``n_layers`` the
     checkpoint terms are the exact per-boundary counters
     (:func:`vertical_ckpt_traffic` over the rank's ``M/R``
-    micro-batches); without it they are omitted."""
+    micro-batches); without it they are omitted. With ``act_bytes=A``
+    (per-(layer, micro-batch) residual bytes) the rank additionally
+    carries the activation stream of its M/R micro-batches
+    (:func:`act_spill_traffic`) and its checkpoint backward re-reads
+    vanish — activations are sharded by micro-batch ownership, so each
+    rank spills and fetches on its OWN path set."""
     if M % R:
         raise ValueError(f"M={M} must divide across R={R} ranks")
     grad_bytes = 2.0 * ms if grad_bytes is None else grad_bytes
     os_bytes = 6.0 * ms if os_bytes is None else os_bytes
     shard = ms / R
+    spill = act_bytes is not None
     return DPRankTraffic(
         param_fetch=2 * shard,
         param_allgather=2 * (ms - shard),
@@ -247,8 +312,10 @@ def dp_vertical_traffic(ms: float, cs: float, M: int, R: int, *,
         grad_reducescatter=grad_bytes * (R - 1) / R,
         opt_read=os_bytes / R,
         opt_write=os_bytes / R,
-        ckpt=(vertical_ckpt_traffic(cs, M // R, n_layers)
+        ckpt=(vertical_ckpt_traffic(cs, M // R, n_layers, act_spill=spill)
               if n_layers else None),
+        act=(act_spill_traffic(act_bytes, M // R, n_layers)
+             if spill and n_layers else None),
     )
 
 
@@ -260,3 +327,21 @@ def optimizer_state_bytes(cfg) -> int:
 
 def accum_grad_bytes(cfg) -> int:
     return cfg.total_params() * BYTES_F32
+
+
+def act_residual_bytes(cfg, micro_batch: int, seq_len: int) -> int:
+    """``as``: aggregated non-boundary activation (vjp residual) bytes
+    for ONE micro-batch across all pipelined layers — the workload term
+    the spill policy streams instead of recomputing (SSDTrain's lever).
+
+    This is a closed-form ESTIMATE for the perf model / Algorithm 1
+    (per token per layer: qkv + attention output + the two MLP
+    intermediates + the normalised inputs, plus the attention
+    probabilities); the engines size the stream EXACTLY from
+    ``jax.eval_shape`` of their residual-returning forward."""
+    t = micro_batch * seq_len
+    per_layer = t * (6 * cfg.d_model + 2 * cfg.d_ff) * BYTES_LOW
+    if not cfg.is_attention_free:
+        per_layer += cfg.num_heads * micro_batch * seq_len * seq_len \
+            * BYTES_LOW
+    return cfg.num_layers * per_layer

@@ -24,7 +24,8 @@ requests here:
               |                                 (static byte prediction,
               v  repro.offload.executor          == the meters below)
     ParameterCoordinator / InterLayerTensorCoordinator /
-    OptimizerStepCoordinator          SSDStore / TieredVector
+    OptimizerStepCoordinator / ActivationCoordinator
+                                      SSDStore / TieredVector
               |                                |
               v  IOEngine.submit (request)     v  chunk ops
         [priority heap -> worker pool]   [per-path channel threads]
@@ -45,8 +46,25 @@ How plan ops map to request priorities
   ``OPTIMIZER_STATE`` requests whose tiered-vector chunk ops yield to
   parameter fetches on the same paths (the α-delay gate makes a fetch
   WAIT on a flush, which is why the engine keeps >= 3 workers).
-* ``SPILL_CKPT`` tails are ``CKPT_SPILL`` (bottom): deferrable until a
+* ``SPILL_CKPT`` tails are ``CKPT_SPILL``: deferrable until a
   ``FETCH_CKPT_BWD`` actually needs them.
+* ``SPILL_ACT``/``FETCH_ACT`` — the SSDTrain-style activation stream
+  (``OffloadConfig.activation_policy="spill"``) — run at ``ACT``, the
+  bottom class: each layer's vjp residuals ride out after its forward
+  and back in ahead of its backward INSTEAD of being recomputed from
+  the boundary checkpoint, so the stream exists precisely to soak up
+  write bandwidth nothing urgent wants. ``PREFETCH_ACT`` hints come
+  from the same lookahead pass (one per fetch, never across a
+  ``RESET_PARAMS``). Failure degrades softly: the checkpoint tier is
+  untouched, so a failed spill or fetch falls back to recomputing that
+  one micro-batch — with bitwise-identical results, because BOTH
+  policies run backward from the same residuals (restored or
+  recomputed). The byte closed forms are
+  ``repro.core.traffic.act_spill_traffic`` and the ``act_spill=True``
+  variants of the ckpt forms; ``plan_traffic`` predicts the meters
+  exactly, and ``perfmodel``/``lp_search`` price spill-vs-recompute so
+  ``"auto"`` can pick per machine (the ``act-battery`` CI suite pins
+  all three legs).
 
 * :class:`~repro.io.engine.IOEngine` — request-level scheduler. Each
   request carries a category/route (shared vocabulary with the

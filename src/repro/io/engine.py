@@ -28,7 +28,7 @@ import heapq
 import itertools
 import os
 import threading
-from concurrent.futures import CancelledError, Future
+from concurrent.futures import Future
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.io.bandwidth import BandwidthSimulator
@@ -37,11 +37,18 @@ from repro.io.staging import StagingPool
 
 
 class IOPriority(enum.IntEnum):
-    """Lower value = more urgent (GreedySnake's critical-path order)."""
+    """Lower value = more urgent (GreedySnake's critical-path order).
+
+    ``ACT`` (SSDTrain-style activation spill/fetch) sits BELOW ckpt
+    spills: the stream is opportunistic — it exists to soak up spare
+    write bandwidth, and a late activation fetch only delays one
+    micro-batch's backward, whereas a late checkpoint tail stalls the
+    whole recompute pipeline."""
     PARAM_FETCH = 0
     INTER_LAYER_GRAD = 1
     OPTIMIZER_STATE = 2
     CKPT_SPILL = 3
+    ACT = 4
 
 
 #: Default priority for a given traffic-meter category.
@@ -51,6 +58,7 @@ CATEGORY_PRIORITY: Dict[str, IOPriority] = {
     "grad": IOPriority.INTER_LAYER_GRAD,
     "opt": IOPriority.OPTIMIZER_STATE,
     "ckpt": IOPriority.CKPT_SPILL,
+    "act": IOPriority.ACT,
 }
 
 

@@ -11,8 +11,6 @@ caches shard the sequence dim over "model".
 """
 from __future__ import annotations
 
-from typing import Any, Optional
-
 import jax
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P

@@ -17,7 +17,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import dense_init, rms_norm
+from repro.models.common import dense_init
 
 
 class MambaState(NamedTuple):

@@ -11,7 +11,6 @@ peak memory holds one layer's working set plus the per-layer checkpoints.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

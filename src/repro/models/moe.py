@@ -14,7 +14,7 @@ all-to-all shows up in the dry-run collective parse.
 from __future__ import annotations
 
 import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -30,7 +30,7 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Any, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

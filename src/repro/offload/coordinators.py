@@ -1,4 +1,4 @@
-"""The three coordinators of GreedySnake §5.
+"""The coordinators of GreedySnake §5 (+ the SSDTrain activation stream).
 
 * ParameterCoordinator — per-layer low-precision params in tiered storage;
   two-stage prefetch (§4.2): SSD->CPU staged two pipeline stages ahead,
@@ -17,6 +17,16 @@
   next forward (§4.4). Gradients for the α fraction are retained in CPU
   memory (the paper reuses reclaimed param/ckpt buffers; we meter the
   bytes the same way).
+* ActivationCoordinator — the SSDTrain-style activation stream
+  (``activation_policy="spill"``): each layer's vjp residuals — the
+  non-boundary activations backward needs — are flattened to one byte
+  payload after the forward, the ``StorageRatios.act`` head kept in
+  CPU and the tail streamed to SSD at ``IOPriority.ACT`` (below ckpt
+  spills: strictly opportunistic). The CPU tail copy is dropped as
+  soon as the spill is staged (reclaiming DRAM is the point), so every
+  backward fetch re-reads the tail. A failed spill or fetch surfaces
+  at ``get`` and the executor degrades that one micro-batch to the
+  recompute path — the checkpoint tier it needs is still intact.
 
 All three submit their asynchronous work to :class:`repro.io.IOEngine`
 rather than raw executors, so a parameter fetch the GPU is about to
@@ -248,6 +258,161 @@ class InterLayerTensorCoordinator:
         arr = self.host.pop(self._key("g", l, m))
         _xfer(self.meter, self.engine, "inter_grad", "cpu->gpu", arr.nbytes)
         return jnp.asarray(arr).reshape(self._shapes[("g", l, m)])
+
+
+class ActivationCoordinator:
+    """Activation (vjp-residual) spill/fetch stream, keyed (layer, mb).
+
+    Layout per key: the flattened residual payload's ``x_act`` head
+    lives in the host store (``act:l:m:h``); the tail is written to SSD
+    asynchronously (``act:l:m:s``, category ``"act"`` =>
+    ``IOPriority.ACT``) and NOT cached — ``get`` re-reads it. The vjp
+    treedef and leaf dtypes/shapes stay in coordinator memory (they are
+    structure, not data; identical every iteration)."""
+
+    def __init__(self, x_act: float, host: HostStore, ssd: SSDStore,
+                 meter: TrafficMeter, engine: IOEngine):
+        self.x = x_act
+        self.host = host
+        self.ssd = ssd
+        self.meter = meter
+        self.engine = engine
+        self._tree: Dict[Tuple[int, int], object] = {}
+        self._meta: Dict[Tuple[int, int], list] = {}
+        self._k: Dict[Tuple[int, int], int] = {}
+        self._n: Dict[Tuple[int, int], int] = {}
+        self._pending: Dict[Tuple[int, int], IORequest] = {}     # spills
+        self._prefetched: Dict[Tuple[int, int], IORequest] = {}  # reads
+
+    def _name(self, l: int, m: int) -> str:
+        return f"act:{l}:{m}"
+
+    def put(self, l: int, m: int, vjp):
+        """Stream micro-batch m's layer-l residuals out (async tail)."""
+        leaves, treedef = jax.tree.flatten(vjp)
+        metas, chunks = [], []
+        for leaf in leaves:
+            arr = np.asarray(leaf)
+            # record the TRUE shape first: ascontiguousarray promotes
+            # 0-d scalars (slice indices etc.) to (1,), and a scalar
+            # restored 1-d would break the vjp's transpose rules
+            metas.append((arr.dtype, arr.shape))
+            chunks.append(np.ascontiguousarray(arr).reshape(-1)
+                          .view(np.uint8))
+        buf = np.concatenate(chunks) if chunks else np.zeros(0, np.uint8)
+        _xfer(self.meter, self.engine, "act", "gpu->cpu", buf.nbytes)
+        key = (l, m)
+        k = int(round(self.x * buf.size))
+        self._tree[key] = treedef
+        self._meta[key] = metas
+        self._k[key] = k
+        self._n[key] = buf.size
+        if k:
+            self.host.put(self._name(l, m) + ":h", buf[:k].copy())
+        if k < buf.size:
+            old = self._pending.pop(key, None)
+            if old is not None:
+                old.result()    # never two in-flight spills of one name
+            self._pending[key] = self.ssd.write_async(
+                self._name(l, m) + ":s", buf[k:], "act")
+
+    def prefetch(self, l: int, m: int):
+        """Hint: start the tail's SSD read now (ACT priority). No-op if
+        there is nothing spilled, or the spill itself is still in
+        flight (a request body must never wait on another request)."""
+        key = (l, m)
+        if key in self._prefetched or key not in self._n:
+            return
+        k, n = self._k[key], self._n[key]
+        if k >= n:
+            return
+        wr = self._pending.get(key)
+        if wr is not None and not wr.done():
+            return
+        name = self._name(l, m) + ":s"
+        self._prefetched[key] = self.engine.submit(
+            lambda: self.ssd.read(name, "act"),
+            priority=IOPriority.ACT, category="act", route="ssd->cpu",
+            nbytes=n - k)
+
+    def get(self, l: int, m: int):
+        """Residuals back on device: host head + SSD tail, rebuilt into
+        the vjp pytree. A failed spill surfaces HERE — the executor's
+        fallback point for degrading to recompute."""
+        key = (l, m)
+        name = self._name(l, m)
+        req = self._prefetched.pop(key, None)
+        wr = self._pending.pop(key, None)
+        try:
+            if wr is not None:
+                wr.result()
+        except BaseException:
+            if req is not None and not req.cancel():
+                try:
+                    req.result()
+                except Exception:
+                    pass        # the spill's error is what propagates
+            raise
+        k, n = self._k[key], self._n[key]
+        if req is not None:
+            tail = req.result()
+        else:
+            tail = self.ssd.read(name + ":s", "act") if k < n else None
+        head = self.host.pop(name + ":h") if k else np.zeros(0, np.uint8)
+        if tail is None:
+            buf = head
+        elif head.size:
+            buf = np.concatenate([head, tail])
+        else:
+            buf = tail
+        _xfer(self.meter, self.engine, "act", "cpu->gpu", buf.nbytes)
+        leaves, off = [], 0
+        for dt, shp in self._meta[key]:
+            nb = int(np.prod(shp)) * dt.itemsize
+            leaves.append(jnp.asarray(
+                np.frombuffer(buf[off:off + nb].tobytes(),
+                              dtype=dt).reshape(shp)))
+            off += nb
+        vjp = jax.tree.unflatten(self._tree[key], leaves)
+        self._forget(key)
+        return vjp
+
+    def _forget(self, key):
+        for d in (self._tree, self._meta, self._k, self._n):
+            d.pop(key, None)
+
+    def drop(self, l: int, m: int):
+        """Abandon one key: cancel/drain its in-flight requests
+        (swallowing their errors — the caller is falling back) and free
+        the host head."""
+        key = (l, m)
+        for d in (self._prefetched, self._pending):
+            req = d.pop(key, None)
+            if req is not None and not req.cancel():
+                try:
+                    req.result()
+                except Exception:
+                    pass
+        name = self._name(l, m)
+        if name + ":h" in self.host:
+            self.host.pop(name + ":h")
+        self._forget(key)
+
+    def clear(self):
+        """Abandon everything (mid-plan fault cleanup)."""
+        keys = set(self._n) | set(self._pending) | set(self._prefetched)
+        for l, m in keys:
+            self.drop(l, m)
+
+    def wait_pending(self):
+        """Drain outstanding spills/reads (finish/teardown)."""
+        for d in (self._pending, self._prefetched):
+            for req in list(d.values()):
+                try:
+                    req.result()
+                except (CancelledError, OSError):
+                    pass
+            d.clear()
 
 
 class OptimizerStepCoordinator:

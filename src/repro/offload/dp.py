@@ -59,13 +59,15 @@ from repro.core.plan import (PlanSpec, compile_vertical, insert_prefetch,
                              mb_order, shard_bounds)
 from repro.io import IOConfig, IOEngine
 from repro.models import blocks as blk
-from repro.offload.coordinators import (InterLayerTensorCoordinator,
+from repro.offload.coordinators import (ActivationCoordinator,
+                                        InterLayerTensorCoordinator,
                                         OptimizerStepCoordinator,
                                         ParameterCoordinator)
 from repro.offload.engine import (OffloadConfig, _flatten_tree,
-                                  _make_unflatten, bind_block_fns,
-                                  build_block_fns, shifted_labels,
-                                  split_microbatches)
+                                  _make_unflatten, act_residual_nbytes,
+                                  bind_block_fns, build_block_fns,
+                                  resolve_activation_policy,
+                                  shifted_labels, split_microbatches)
 from repro.offload.executor import execute_plan
 from repro.offload.stores import (HostStore, SSDStore, TieredVector,
                                   TrafficMeter)
@@ -100,10 +102,12 @@ class _Rank:
         self.params_c: Optional[ParameterCoordinator] = None
         self.ckpt_c: Optional[InterLayerTensorCoordinator] = None
         self.opt_c: Optional[OptimizerStepCoordinator] = None
+        self.act_c: Optional[ActivationCoordinator] = None
 
     def close(self):
         self.params_c.reset()
         self.ckpt_c.wait_pending()
+        self.act_c.wait_pending()
         self.opt_c.wait_all()
         self.ssd.close()
         self.ioe.shutdown(wait=True)
@@ -198,9 +202,19 @@ class DataParallelOffloadEngine:
                 rk.m_master, rk.m_m, rk.m_v, rk.p_vecs, rk.host, rk.meter,
                 rk.ioe, CpuAdam(lr=ocfg.lr), ocfg.alpha,
                 param_dtype=np.dtype(ocfg.param_dtype))
+            # activation shards are per micro-batch OWNER: each rank's
+            # residual payloads ride its own IOEngine + SSD path set
+            rk.act_c = ActivationCoordinator(x.act, rk.host, rk.ssd,
+                                             rk.meter, rk.ioe)
 
         bind_block_fns(self, build_block_fns(cfg, self.kind,
                                              self._unflatten))
+        self.act_nbytes = act_residual_nbytes(
+            self.j_layer_fwd_res, self.P, self.dtype, ocfg.micro_batch,
+            ocfg.seq_len, cfg.d_model)
+        self.act_policy = resolve_activation_policy(
+            ocfg, cfg, self.P, self.dtype.itemsize, self.act_nbytes)
+        self.act_fallbacks = 0
         self._plan = self._compile_plan()
 
     # ------------------------------------------------------------------
@@ -217,7 +231,8 @@ class DataParallelOffloadEngine:
         REDUCE_SCATTER ops; rank-major micro-batch blocks); every
         train_step interprets it with the shared executor."""
         spec = PlanSpec(L=self.L, M=self.ocfg.num_microbatches,
-                        alpha=self.ocfg.alpha, ranks=self.R)
+                        alpha=self.ocfg.alpha, ranks=self.R,
+                        act_spill=(self.act_policy == "spill"))
         return insert_prefetch(compile_vertical(spec, order=self._mb_order))
 
     # ------------------------------------------------------------------
@@ -290,6 +305,7 @@ class DataParallelOffloadEngine:
                 rk.opt_c.wait_late(l)
             rk.opt_c.wait_all()
             rk.ckpt_c.wait_pending()
+            rk.act_c.wait_pending()
 
     def read_params(self, l: int) -> np.ndarray:
         """The full low-precision param vector of layer l, assembled from
@@ -309,6 +325,8 @@ class DataParallelOffloadEngine:
             "bounds": list(self.bounds),
             "io": [rk.ioe.stats() for rk in self.ranks],
             "host_peak_nbytes": [rk.host.peak_nbytes for rk in self.ranks],
+            "act_policy": self.act_policy,
+            "act_fallbacks": self.act_fallbacks,
         }
 
     def close(self):

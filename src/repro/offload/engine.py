@@ -37,6 +37,20 @@ W = wave size, nw = M/W waves):
 and the (1-α) optimizer fraction overlaps backward, the α fraction the
 next forward, via ``OPT_LATE`` gates (§4.4).
 
+Orthogonal to the schedule, ``activation_policy`` picks how backward
+gets its inputs: ``"recompute"`` (the paper) re-reads each boundary
+checkpoint and recomputes the layer inside the vjp; ``"spill"``
+(SSDTrain-style) streams each layer's vjp residuals out after its
+forward (``SPILL_ACT``) and back ahead of its backward (``FETCH_ACT``)
+at the opportunistic ``IOPriority.ACT``, trading ``2·L·M·A`` stream
+bytes for the recompute third of backward and the checkpoint
+re-reads; ``"auto"`` prices both with ``repro.core.perfmodel`` against
+``OffloadConfig.machine`` (or the configured bandwidth caps). Both
+policies apply the SAME saved-residual backward, so they are
+bitwise-identical (f32) in losses and parameters; the closed forms are
+``repro.core.traffic.act_spill_traffic`` + the ``act_spill=True`` ckpt
+variants, and ``A`` is sized exactly by :func:`act_residual_nbytes`.
+
 The embedding and LM head stay device-resident (the paper excludes them
 from the per-layer pipeline and adds their time separately, §4.5).
 """
@@ -49,14 +63,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.perfmodel import StorageRatios
+from repro.core.perfmodel import MachineParams, StorageRatios
 from repro.core.plan import (PlanSpec, compile_wave, insert_prefetch,
                              mb_order)
 from repro.io import IOConfig, IOEngine
 from repro.models import blocks as blk
 from repro.models.common import rms_norm
 from repro.models.model import _xent_chunk
-from repro.offload.coordinators import (InterLayerTensorCoordinator,
+from repro.offload.coordinators import (ActivationCoordinator,
+                                        InterLayerTensorCoordinator,
                                         OptimizerStepCoordinator,
                                         ParameterCoordinator)
 from repro.offload.executor import execute_plan
@@ -65,7 +80,8 @@ from repro.optim.cpu_adam import CpuAdam
 
 __all__ = ["OffloadConfig", "OffloadEngine", "build_block_fns",
            "bind_block_fns", "mb_order", "split_microbatches",
-           "shifted_labels"]
+           "shifted_labels", "act_residual_nbytes",
+           "resolve_activation_policy"]
 
 
 @dataclasses.dataclass
@@ -84,6 +100,15 @@ class OffloadConfig:
     param_dtype: str = "float32"        # f32 => bit-exact vs in-memory ref
     io: Optional[IOConfig] = None       # paths/chunking/budget/bandwidth
                                         # (None: single path = the workdir)
+    activation_policy: str = "recompute"  # "recompute" | "spill" | "auto":
+                                        # spill streams each layer's vjp
+                                        # residuals (SPILL_ACT/FETCH_ACT)
+                                        # instead of recomputing backward
+                                        # from the boundary checkpoint;
+                                        # auto asks the perf model
+    machine: Optional[MachineParams] = None  # link rates for the "auto"
+                                        # decision (None: bandwidth caps
+                                        # in `io` if set, else defaults)
 
     def resolved_wave_size(self) -> int:
         """The W this config's schedule compiles to."""
@@ -144,10 +169,18 @@ def build_block_fns(cfg, kind, unflatten) -> Dict[str, object]:
         y, _, _ = blk.block_apply(lp, x, cfg, kind, mode="train")
         return y
 
-    def layer_bwd(p_flat, x, dy):
-        y, vjp = jax.vjp(lambda p, xx: layer_fwd(p, xx), p_flat, x)
+    def layer_fwd_res(p_flat, x):
+        """Forward that ALSO returns the vjp residuals (a Partial
+        pytree of arrays). Both activation policies run backward from
+        these residuals — spill restores them from storage, recompute
+        re-runs this function at backward time — so the two policies'
+        gradients are bitwise-identical by construction."""
+        return jax.vjp(lambda p, xx: layer_fwd(p, xx), p_flat, x)
+
+    def layer_bwd_res(vjp, dy):
+        """Backward from saved/recomputed residuals (no forward pass)."""
         dp, dx = vjp(dy)
-        return dx, dp.astype(jnp.float32), y
+        return dx, dp.astype(jnp.float32)
 
     def embed_fwd(embed, tokens):
         return embed[tokens]
@@ -171,7 +204,8 @@ def build_block_fns(cfg, kind, unflatten) -> Dict[str, object]:
 
     return {
         "layer_fwd": jax.jit(layer_fwd),
-        "layer_bwd": jax.jit(layer_bwd),
+        "layer_fwd_res": jax.jit(layer_fwd_res),
+        "layer_bwd_res": jax.jit(layer_bwd_res),
         "embed": jax.jit(embed_fwd),
         "head_bwd": jax.jit(head_bwd),
         "embed_bwd": jax.jit(embed_bwd),
@@ -183,11 +217,64 @@ def bind_block_fns(obj, fns: Dict[str, object]) -> None:
     """Attach :func:`build_block_fns` results as the ``j_*`` attributes
     both engines use."""
     obj.j_layer_fwd = fns["layer_fwd"]
-    obj.j_layer_bwd = fns["layer_bwd"]
+    obj.j_layer_fwd_res = fns["layer_fwd_res"]
+    obj.j_layer_bwd_res = fns["layer_bwd_res"]
     obj.j_embed = fns["embed"]
     obj.j_head_bwd = fns["head_bwd"]
     obj.j_embed_bwd = fns["embed_bwd"]
     obj.j_adam_dev = fns["adam_dev"]
+
+
+def act_residual_nbytes(j_layer_fwd_res, P: int, dtype, micro_batch: int,
+                        seq_len: int, d_model: int) -> int:
+    """EXACT byte size of one (layer, micro-batch) residual payload —
+    what each ``SPILL_ACT``/``FETCH_ACT`` moves — via ``jax.eval_shape``
+    (no compute, no allocation). Shared by both engines and by
+    ``PlanCosts.from_engine`` through the ``act_nbytes`` attribute."""
+    _, res = jax.eval_shape(
+        j_layer_fwd_res,
+        jax.ShapeDtypeStruct((P,), dtype),
+        jax.ShapeDtypeStruct((micro_batch, seq_len, d_model), dtype))
+    return sum(int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+               for leaf in jax.tree.leaves(res))
+
+
+def resolve_activation_policy(ocfg: OffloadConfig, cfg, P: int,
+                              itemsize: int, act_nbytes: int) -> str:
+    """Resolve the ``activation_policy`` knob to "recompute"|"spill".
+    "auto" prices both policies with the perf model
+    (:func:`repro.core.perfmodel.pick_activation_policy`) using
+    ENGINE-accurate workload bytes (this engine's dtype and measured
+    residual size, not the bf16 paper defaults) and the machine from
+    ``ocfg.machine``, the configured bandwidth caps, or the defaults.
+    """
+    pol = ocfg.activation_policy
+    if pol in ("recompute", "spill"):
+        return pol
+    if pol != "auto":
+        raise ValueError(f"unknown activation_policy {pol!r}")
+    from repro.core.perfmodel import (Workload, machine_from_bandwidth,
+                                      pick_activation_policy)
+    m = ocfg.machine
+    if m is None:
+        bw = ocfg.io.bandwidth if ocfg.io is not None else None
+        m = machine_from_bandwidth(bw) if bw else MachineParams()
+    L = cfg.num_layers
+    tokens = ocfg.micro_batch * ocfg.seq_len
+    # the FLOP model comes from the one place it is maintained; only
+    # the byte fields are overridden with this engine's actual sizes
+    # (its dtype, its flat layer vector, its measured residual payload)
+    w = dataclasses.replace(
+        Workload.from_config(cfg, ocfg.micro_batch, ocfg.seq_len),
+        ms=L * P * itemsize,
+        cs=L * tokens * cfg.d_model * itemsize,
+        os_bytes=3 * L * P * 4,
+        grad_bytes=L * P * 4,
+        as_bytes=L * act_nbytes,
+    )
+    M = ocfg.num_microbatches
+    return pick_activation_policy(w, m, M, ocfg.resolved_wave_size(),
+                                  ocfg.alpha, ocfg.ratios)
 
 
 def split_microbatches(tokens: np.ndarray, M: int, micro_batch: int
@@ -280,8 +367,18 @@ class OffloadEngine:
             self.m_master, self.m_m, self.m_v, self.p_vecs, self.host,
             self.meter, self.ioe, CpuAdam(lr=ocfg.lr), ocfg.alpha,
             param_dtype=np.dtype(ocfg.param_dtype))
+        self.act_c = ActivationCoordinator(x.act, self.host, self.ssd,
+                                           self.meter, self.ioe)
 
         self._build_jit_fns()
+        # size the activation stream exactly (one (layer, mb) residual
+        # payload) and resolve the recompute/spill/auto policy knob
+        self.act_nbytes = act_residual_nbytes(
+            self.j_layer_fwd_res, self.P, self.dtype, ocfg.micro_batch,
+            ocfg.seq_len, cfg.d_model)
+        self.act_policy = resolve_activation_policy(
+            ocfg, cfg, self.P, self.dtype.itemsize, self.act_nbytes)
+        self.act_fallbacks = 0      # micro-batches degraded to recompute
         self._plan = self._compile_plan()
 
     # ------------------------------------------------------------------
@@ -301,7 +398,8 @@ class OffloadEngine:
         """Compile the configured schedule once; every train_step
         interprets the same plan."""
         spec = PlanSpec(L=self.L, M=self.ocfg.num_microbatches,
-                        alpha=self.ocfg.alpha, ranks=1)
+                        alpha=self.ocfg.alpha, ranks=1,
+                        act_spill=(self.act_policy == "spill"))
         plan = compile_wave(spec, self.ocfg.resolved_wave_size(),
                             order=self._mb_order)
         return insert_prefetch(plan)
@@ -327,6 +425,7 @@ class OffloadEngine:
             self.opt_c.wait_late(l)
         self.opt_c.wait_all()
         self.ckpt_c.wait_pending()
+        self.act_c.wait_pending()
 
     def traffic(self) -> Dict[str, int]:
         out = self.meter.snapshot()
@@ -338,6 +437,8 @@ class OffloadEngine:
         return {"io": self.ioe.stats(),
                 "host_peak_nbytes": self.host.peak_nbytes,
                 "host_nbytes": self.host.nbytes(),
+                "act_policy": self.act_policy,
+                "act_fallbacks": self.act_fallbacks,
                 "phase_time": dict(self.phase_time)}
 
     def close(self):
@@ -348,6 +449,7 @@ class OffloadEngine:
         self._closed = True
         self.params_c.reset()
         self.ckpt_c.wait_pending()
+        self.act_c.wait_pending()
         self.opt_c.wait_all()
         self.ssd.close()              # removes stripe files from the paths
         self.ioe.shutdown(wait=True)

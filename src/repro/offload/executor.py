@@ -11,18 +11,37 @@ folds); all persistent state — tiered vectors, coordinators, the jitted
 block functions — belongs to the engine it is handed.
 
 Determinism: the executor performs the SAME coordinator calls and
-floating-point folds, in the SAME order, as the imperative step bodies
-it replaced, so losses and parameters are bit-identical (f32) across
-the schedule/α/storage-ratio/DP axes (pinned by the schedule-parity
-battery in ``tests/test_property.py`` / ``tests/test_plan_executor.py``).
+floating-point folds, in the SAME order, for a given schedule, so
+losses and parameters are bit-identical (f32) across the α /
+storage-ratio / DP / activation-policy axes (pinned by the
+schedule-parity batteries in ``tests/test_property.py`` /
+``tests/test_plan_executor.py`` / ``tests/test_act_stream.py``). The
+WAVE-SIZE axis is the exception: a 1 < W < M plan GROUPS the f32
+layer-gradient fold differently (per-wave partial sums parked in CPU),
+so its optimizer-bound sums can differ from vertical's in the last ulp
+— step-1 losses are still bitwise, later steps agree within jit
+rounding (W=1 folds element-by-element in a commutative order and
+stays bitwise in practice).
+
+Activation policies: under ``act_spill`` plans the forward runs the
+residual-returning block function and ``SPILL_ACT``/``FETCH_ACT``
+stream each layer's vjp residuals through the ``ActivationCoordinator``
+instead of recomputing backward from the checkpoint. BOTH policies
+apply ``j_layer_bwd_res`` to residuals — restored or recomputed — so
+spill and recompute runs are bitwise-identical (f32) in losses and
+parameters by construction (pinned in ``tests/test_act_stream.py``).
 
 Fault discipline: a mid-plan exception (a failed chunk op surfacing
 through a coordinator) must not leak device slots or host buffers into
 the next step — the executor releases its registers, cancels
-outstanding parameter prefetches, clears the checkpoint coordinator's
-device-kept/CPU state (``InterLayerTensorCoordinator.clear``) and
-drains optimizer requests before re-raising. The fault-injection
-battery (``tests/test_plan_executor.py``) drives these paths with the
+outstanding parameter prefetches, clears the checkpoint and activation
+coordinators' device-kept/CPU state and drains optimizer requests
+before re-raising. A failed ``SPILL_ACT``/``FETCH_ACT`` is SOFTER: it
+degrades just that micro-batch to the recompute path (counted in
+``eng.act_fallbacks``) — the checkpoint tier it needs is still intact
+— and the step completes with bitwise-identical results. The
+fault-injection batteries (``tests/test_plan_executor.py``,
+``tests/test_act_faults.py``) drive these paths with the
 ``tests/test_io_faults.py`` failing backend.
 """
 from __future__ import annotations
@@ -61,6 +80,7 @@ def execute_plan(eng, plan: Plan, tokens: np.ndarray) -> float:
     def rank_of(m: int):
         return ranks[m // Mr] if multi else ranks[0]
 
+    spill = plan.spec.act_spill     # SSDTrain-style activation stream
     regs = {}                       # transient device tensors
     p_dev = None                    # current layer's params
     gacc = None                     # f32 layer-gradient accumulator
@@ -90,8 +110,39 @@ def execute_plan(eng, plan: Plan, tokens: np.ndarray) -> float:
                 regs[("x", op.m)] = \
                     rank_of(op.m).ckpt_c.get_ckpt_fwd(op.l, op.m)
             elif k is Op.FWD:
-                regs[("y", op.m)] = eng.j_layer_fwd(p_dev,
-                                                    regs.pop(("x", op.m)))
+                x_in = regs.pop(("x", op.m))
+                if spill:
+                    # materialise the vjp residuals for the act stream
+                    y, res = eng.j_layer_fwd_res(p_dev, x_in)
+                    regs[("y", op.m)] = y
+                    regs[("res", op.m)] = res
+                else:
+                    regs[("y", op.m)] = eng.j_layer_fwd(p_dev, x_in)
+            elif k is Op.SPILL_ACT:
+                res = regs.pop(("res", op.m))
+                rk = rank_of(op.m)
+                try:
+                    rk.act_c.put(op.l, op.m, res)
+                except Exception:
+                    # a failed spill degrades this micro-batch to the
+                    # recompute path (its checkpoint tier is intact);
+                    # drop whatever the coordinator half-tracked — the
+                    # FETCH_ACT for this key then finds nothing and
+                    # counts the single fallback
+                    rk.act_c.drop(op.l, op.m)
+            elif k is Op.PREFETCH_ACT:
+                rank_of(op.m).act_c.prefetch(op.l, op.m)
+            elif k is Op.FETCH_ACT:
+                rk = rank_of(op.m)
+                try:
+                    regs[("res", op.m)] = rk.act_c.get(op.l, op.m)
+                except Exception:
+                    # failed (or never-landed) fetch: fall back to the
+                    # checkpoint re-read; BWD recomputes the residuals
+                    rk.act_c.drop(op.l, op.m)
+                    eng.act_fallbacks += 1
+                    regs[("x", op.m)] = \
+                        rk.ckpt_c.get_ckpt_bwd(op.l, op.m)
             elif k is Op.SPILL_CKPT:
                 rank_of(op.m).ckpt_c.put_ckpt(op.l, op.m,
                                               regs.pop(("y", op.m)),
@@ -103,8 +154,15 @@ def execute_plan(eng, plan: Plan, tokens: np.ndarray) -> float:
                 regs[("dy", op.m)] = \
                     rank_of(op.m).ckpt_c.get_grad(op.l, op.m)
             elif k is Op.BWD:
-                dx, dp, _ = eng.j_layer_bwd(p_dev, regs.pop(("x", op.m)),
-                                            regs.pop(("dy", op.m)))
+                # Both policies run backward from vjp residuals — spill
+                # restores them from the act stream, recompute re-runs
+                # the residual-returning forward on the fetched ckpt —
+                # so spill/recompute gradients are bitwise-identical.
+                res = regs.pop(("res", op.m), None)
+                if res is None:
+                    _, res = eng.j_layer_fwd_res(p_dev,
+                                                 regs.pop(("x", op.m)))
+                dx, dp = eng.j_layer_bwd_res(res, regs.pop(("dy", op.m)))
                 if op.acc:
                     gacc = gacc + dp
                 else:
@@ -220,7 +278,7 @@ def execute_plan(eng, plan: Plan, tokens: np.ndarray) -> float:
         per_mb_dp = head_stash = embed_stash = {}
         gacc = p_dev = None
         for rk in ranks:
-            for fn in (rk.params_c.reset, rk.ckpt_c.clear,
+            for fn in (rk.params_c.reset, rk.ckpt_c.clear, rk.act_c.clear,
                        rk.opt_c.wait_all):
                 try:
                     fn()

@@ -8,7 +8,7 @@ master parameter, momentum, variance (the paper folds master params into
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,7 @@ not align with layer boundaries, §2.2).
 """
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Tuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.schedules import (ScheduleConfig, init_train_state,
                                   make_delayed_train_step, make_train_step)

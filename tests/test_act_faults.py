@@ -1,0 +1,175 @@
+"""Fault injection for the activation stream: a failed ``SPILL_ACT`` /
+``FETCH_ACT`` must release its staging buffer and in-flight budget,
+clear the coordinator's tracking for that key, and degrade JUST that
+micro-batch to the recompute path — the step completes, and because
+both policies run backward from the same residuals the results stay
+bitwise-identical to a clean run. A non-act mid-plan fault with live
+activation state must clear the whole coordinator (no leaks into the
+next step). Reuses the ``tests/test_io_faults.py`` failing backend.
+"""
+import errno
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+from test_io_faults import FaultyFiles
+
+from repro.configs.base import ArchConfig
+from repro.core.perfmodel import StorageRatios
+from repro.data import SyntheticLM
+from repro.offload import OffloadConfig, OffloadEngine
+
+CFG = ArchConfig(name="act-fault-tiny", family="dense", source="test",
+                 num_layers=2, d_model=32, num_heads=2, num_kv_heads=2,
+                 head_dim=16, d_ff=64, vocab_size=256, act="gelu")
+MB, S, M = 1, 16, 4
+
+
+class ActFaultyFiles(FaultyFiles):
+    """FaultyFiles plus name-targeted fuses, so a fault can be aimed at
+    the activation stream specifically (chunk-level fuses cannot tell
+    an act tail from a ckpt tail)."""
+
+    def __init__(self, engine):
+        super().__init__(engine)
+        self.fail_act_writes = 0
+        self.fail_act_reads = 0
+        self.fail_prefix = ""        # arbitrary-name write fuse
+
+    def write(self, name, data_u8, byte_lo, priority):
+        if name.startswith("act:") and self.fail_act_writes > 0:
+            self.fail_act_writes -= 1
+            raise OSError(errno.EIO, "injected act write fault")
+        if self.fail_prefix and name.startswith(self.fail_prefix):
+            self.fail_prefix = ""
+            raise OSError(errno.EIO, "injected write fault")
+        return super().write(name, data_u8, byte_lo, priority)
+
+    def readinto(self, name, out_u8, byte_lo, priority):
+        if name.startswith("act:") and self.fail_act_reads > 0:
+            self.fail_act_reads -= 1
+            raise OSError(errno.EIO, "injected act read fault")
+        return super().readinto(name, out_u8, byte_lo, priority)
+
+
+def _spill_engine(d):
+    eng = OffloadEngine(CFG, OffloadConfig(
+        schedule="vertical", num_microbatches=M, micro_batch=MB, seq_len=S,
+        ratios=StorageRatios(0.0, 0.0, 0.0), activation_policy="spill"),
+        jax.random.PRNGKey(3), d)
+    eng.ssd.files.close()
+    eng.ssd.files = ActFaultyFiles(eng.ioe)   # init writes stay intact
+    return eng
+
+
+def _clean_losses(steps=2):
+    """Reference losses from a fault-free spill engine (bitwise equal to
+    the recompute engine by the executor's construction)."""
+    with tempfile.TemporaryDirectory() as d:
+        eng = OffloadEngine(CFG, OffloadConfig(
+            schedule="vertical", num_microbatches=M, micro_batch=MB,
+            seq_len=S, ratios=StorageRatios(0.0, 0.0, 0.0),
+            activation_policy="spill"), jax.random.PRNGKey(3), d)
+        data = SyntheticLM(CFG.vocab_size, seed=0)
+        losses = [eng.train_step(data.batch(M * MB, S))
+                  for _ in range(steps)]
+        eng.finish()
+        eng.close()
+    return losses
+
+
+def _assert_act_clean(eng):
+    co = eng.act_c
+    assert co._pending == {}, "leaked in-flight act spills"
+    assert co._prefetched == {}, "leaked act prefetch reads"
+    assert co._n == {} and co._meta == {}, "leaked act tracking state"
+    assert eng.host.nbytes() == 0, "leaked host buffers"
+
+
+def test_act_write_fault_degrades_to_recompute_bitwise():
+    """One act-tail write fault: the step COMPLETES (no exception), that
+    micro-batch falls back to recompute, and losses are bitwise equal to
+    a clean run — the fallback runs the same residual arithmetic."""
+    ref = _clean_losses()
+    with tempfile.TemporaryDirectory() as d:
+        eng = _spill_engine(d)
+        data = SyntheticLM(CFG.vocab_size, seed=0)
+        eng.ssd.files.fail_act_writes = 1
+        losses = [eng.train_step(data.batch(M * MB, S)) for _ in range(2)]
+        assert eng.act_fallbacks == 1
+        assert losses == ref, "fallback changed the arithmetic"
+        eng.finish()
+        _assert_act_clean(eng)
+        s = eng.ioe.stats()
+        assert s["inflight_bytes"] == 0, "fault leaked the byte budget"
+        assert s["completed"] + s["cancelled"] == s["submitted"]
+        eng.close()
+
+
+def test_act_read_fault_degrades_to_recompute_bitwise():
+    """One act-tail read fault at FETCH_ACT: same contract."""
+    ref = _clean_losses()
+    with tempfile.TemporaryDirectory() as d:
+        eng = _spill_engine(d)
+        data = SyntheticLM(CFG.vocab_size, seed=0)
+        eng.train_step(data.batch(M * MB, S))     # step 1 clean
+        eng.ssd.files.fail_act_reads = 1
+        losses = [ref[0], eng.train_step(data.batch(M * MB, S))]
+        assert eng.act_fallbacks >= 1
+        assert losses == ref
+        eng.finish()
+        _assert_act_clean(eng)
+        assert eng.ioe.stats()["inflight_bytes"] == 0
+        eng.close()
+
+
+def test_act_fault_releases_staging_buffers():
+    """After an act write fault the staging pool must be fully
+    acquirable — the failed spill released its slot."""
+    import threading
+
+    with tempfile.TemporaryDirectory() as d:
+        eng = _spill_engine(d)
+        data = SyntheticLM(CFG.vocab_size, seed=0)
+        eng.ssd.files.fail_act_writes = 2
+        eng.train_step(data.batch(M * MB, S))
+        eng.finish()
+        nbuf = eng.ioe.config.staging_buffers
+        got = threading.Event()
+
+        def drain_pool():
+            bufs = [eng.ioe.staging.acquire(64) for _ in range(nbuf)]
+            got.set()
+            for b in bufs:
+                b.release()
+
+        t = threading.Thread(target=drain_pool, daemon=True)
+        t.start()
+        assert got.wait(5.0), "failed act spill leaked a staging buffer"
+        t.join(5.0)
+        eng.close()
+
+
+def test_non_act_fault_clears_act_coordinator():
+    """A checkpoint-spill write fault on the HEAD boundary surfaces at
+    its DROP_CKPT right after HEAD_BWD — before any FETCH_ACT, with all
+    L·M act payloads still tracked: the executor's cleanup must clear
+    the activation coordinator too, and the engine must run a clean,
+    fallback-free step afterwards."""
+    with tempfile.TemporaryDirectory() as d:
+        eng = _spill_engine(d)
+        data = SyntheticLM(CFG.vocab_size, seed=0)
+        eng.ssd.files.fail_prefix = f"c:{CFG.num_layers}:"
+        with pytest.raises(OSError, match="injected write fault"):
+            eng.train_step(data.batch(M * MB, S))
+        _assert_act_clean(eng)
+        assert eng.ckpt_c._device_kept == {}
+        assert eng.params_c._futures == {}
+        before = eng.act_fallbacks
+        loss = eng.train_step(data.batch(M * MB, S))
+        assert np.isfinite(loss)
+        assert eng.act_fallbacks == before, "recovered step degraded"
+        eng.finish()
+        _assert_act_clean(eng)
+        eng.close()

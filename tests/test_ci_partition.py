@@ -1,0 +1,115 @@
+"""CI-partition meta-test: the workflow matrix must PARTITION the test
+suite. Every ``tests/test_*.py`` file is covered by exactly one suite —
+tier1 covers everything it does not ``--ignore``, the battery suites
+list their files explicitly — so adding a battery file without updating
+the tier1 ignores (or ignoring a file nowhere listed) fails HERE, on
+every run, instead of silently dropping tests from CI. Also pins the
+required job set and the concurrency group.
+"""
+import glob
+import os
+
+import pytest
+
+yaml = pytest.importorskip("yaml")
+
+HERE = os.path.dirname(__file__)
+WORKFLOW = os.path.join(HERE, "..", ".github", "workflows", "ci.yml")
+
+
+def _doc():
+    with open(WORKFLOW) as f:
+        return yaml.safe_load(f)
+
+
+def _suites():
+    """suite name -> pytest args (whitespace-split, >- folded)."""
+    matrix = _doc()["jobs"]["tests"]["strategy"]["matrix"]["include"]
+    return {e["suite"]: e["args"].split() for e in matrix}
+
+
+def _all_test_files():
+    return sorted(os.path.basename(p)
+                  for p in glob.glob(os.path.join(HERE, "test_*.py")))
+
+
+def test_every_test_file_in_exactly_one_suite():
+    suites = _suites()
+    all_files = _all_test_files()
+    assert all_files, "no test files found next to this meta-test?"
+    coverage = {f: [] for f in all_files}
+    for name, args in suites.items():
+        listed = [os.path.basename(a) for a in args
+                  if a.startswith("tests/") and a.endswith(".py")]
+        ignored = [os.path.basename(a.split("=", 1)[1]) for a in args
+                   if a.startswith("--ignore=")]
+        if "tests" in args:          # the catch-all suite
+            covered = [f for f in all_files if f not in ignored]
+        else:
+            covered = listed
+        for f in covered:
+            assert f in coverage, \
+                f"suite {name!r} names {f}, which does not exist"
+        for f in ignored + listed:
+            assert f in coverage, \
+                f"suite {name!r} references {f}, which does not exist " \
+                f"(stale --ignore / file list)"
+        for f in covered:
+            coverage[f].append(name)
+    problems = {f: names for f, names in coverage.items()
+                if len(names) != 1}
+    assert not problems, (
+        "every tests/test_*.py must be covered by exactly one CI suite; "
+        f"violations (file -> suites): {problems}")
+
+
+def test_required_jobs_present():
+    doc = _doc()
+    jobs = doc["jobs"]
+    assert set(jobs) >= {"tests", "bench-smoke", "lint"}, sorted(jobs)
+    suites = set(_suites())
+    assert suites >= {"tier1", "io-dp-battery", "plan-battery",
+                      "act-battery"}, sorted(suites)
+    # >= 5 effective jobs: the four matrix suites + bench-smoke + lint
+    assert len(suites) + len(set(jobs) - {"tests"}) >= 5
+
+
+def test_concurrency_group_cancels_superseded_runs():
+    doc = _doc()
+    conc = doc.get("concurrency")
+    assert conc, "workflow must define a concurrency group"
+    cancel = conc.get("cancel-in-progress")
+    # either unconditionally true or the guarded expression that keeps
+    # main-branch runs (and their bench artifacts) alive
+    assert cancel is True or (
+        isinstance(cancel, str) and "github.ref" in cancel), cancel
+
+
+def test_invocation_is_unified():
+    """CI and ROADMAP.md run the SAME tier-1 line — the package is
+    installed (CI) or pyproject's pythonpath covers src/ (local), so
+    neither needs PYTHONPATH juggling."""
+    with open(WORKFLOW) as f:
+        wf = f.read()
+    assert "PYTHONPATH=" not in wf, \
+        "CI must use the unified `python -m pytest` invocation"
+    with open(os.path.join(HERE, "..", "ROADMAP.md")) as f:
+        roadmap = f.read()
+    assert "`python -m pytest -x -q`" in roadmap
+    assert "PYTHONPATH=src python -m pytest" not in roadmap
+
+
+def test_bench_smoke_job_shape():
+    """The bench job must produce both JSONs, gate against the
+    checked-in baseline, and upload the artifacts."""
+    steps = _doc()["jobs"]["bench-smoke"]["steps"]
+    runs = " ".join(s.get("run", "") for s in steps)
+    assert "bench_engine.py --smoke --json" in runs
+    assert "bench_io.py" in runs and "--json" in runs
+    assert "check_smoke.py" in runs
+    assert "baseline_smoke.json" in runs
+    uploads = [s for s in steps
+               if "upload-artifact" in str(s.get("uses", ""))]
+    assert uploads, "bench JSONs must be uploaded as artifacts"
+    assert os.path.exists(os.path.join(HERE, "..", "benchmarks",
+                                       "baseline_smoke.json"))

@@ -148,17 +148,28 @@ def test_horizontal_m1_equals_vertical_bitwise():
     assert lh[2] != lh[0]
 
 
-def test_wave_losses_bitwise_invariant_across_W():
-    """W only re-orders storage traffic; the arithmetic (same jitted
-    kernels, same fold orders) is unchanged — losses are bit-identical
-    across the whole knob for the first two steps."""
+def test_wave_losses_invariant_across_W():
+    """W only re-orders storage traffic, so step-1 losses (forward of
+    identical parameters, identical per-micro-batch fold) are
+    bit-identical across the whole knob. From step 2 on, equality is
+    within jit rounding only: the cross-wave f32 accumulation GROUPS
+    differently — vertical folds ((d0+d1)+d2)+d3 where a 2-wave run
+    folds (d0+d1)+(d2+d3) via the parked partial — so the optimizer
+    sees ulp-level-different sums. This was ALWAYS true (measured: the
+    pre-IR fused backward's W=2 accumulators already differed from
+    vertical's in ~2.4k elements); the old bitwise-loss pin held only
+    because those ulp param deltas happened not to move the loss scalar
+    with the fused backward's values. Per-micro-batch gradients ARE
+    bitwise-invariant across W, and the spill/recompute policy axis is
+    bitwise by construction — ``tests/test_act_stream.py``."""
     ref = None
     for sched, W in (("vertical", 4), ("wave", 2), ("horizontal", 1)):
         losses, _, _, _ = _run(sched, 4, 0.5, W=W)
         if ref is None:
             ref = losses
         else:
-            assert losses == ref, (sched, losses, ref)
+            assert losses[0] == ref[0], (sched, losses, ref)
+            np.testing.assert_allclose(losses, ref, rtol=1e-5)
 
 
 def test_wave_interpolates_measured_traffic():
