@@ -1,21 +1,27 @@
 """Gate a ``bench_engine.py --smoke --json`` run against the checked-in
 baseline: any cell whose smoke throughput drops more than ``tolerance``
-(default 20%) below its baseline fails the build — offload systems
-regress silently unless per-route traffic and throughput numbers are
+(default 20%) below its baseline — or whose measured stall-seconds grow
+past ``stall-tolerance`` (default 100%, plus a 50 ms absolute floor so
+micro-stalls cannot flap CI) — fails the build. Offload systems regress
+silently unless per-route traffic, throughput, AND stall numbers are
 checked on every push (MLP-Offload's lesson). Cells present in only one
 file are reported but do not fail (a new schedule/policy lands before
 its baseline).
 
     python benchmarks/check_smoke.py bench_smoke.json \
-        --baseline benchmarks/baseline_smoke.json [--tolerance 0.2]
+        --baseline benchmarks/baseline_smoke.json [--tolerance 0.2] \
+        [--stall-tolerance 1.0]
 
 Exit status: 0 pass, 1 regression.
 
-Refresh the baseline by re-running the smoke on the reference runner
-and committing the JSON:
+Refresh the baseline (runs the smoke battery and rewrites the JSON,
+stamping the refresh command into its header):
 
-    python benchmarks/bench_engine.py --smoke --json \
-        benchmarks/baseline_smoke.json
+    python benchmarks/check_smoke.py --update \
+        [--baseline benchmarks/baseline_smoke.json]
+
+or, to promote an already-measured run: append ``--update`` to the
+normal invocation and the measured file is copied over the baseline.
 """
 from __future__ import annotations
 
@@ -23,9 +29,19 @@ import argparse
 import json
 import sys
 
+STALL_FLOOR_S = 0.05        # absolute slack under the stall gate
 
-def compare(measured: dict, baseline: dict, tolerance: float) -> list:
-    """Return a list of (cell, measured_tps, baseline_tps, verdict)
+#: the cross-stream-lookahead A/B acceptance floor (absolute, on the
+#: measured run — not relative to the baseline): the paced-SSD smoke
+#: at α>0 must show at least this tokens/s ratio with hints on vs off
+LOOKAHEAD_GAIN_GATE = 1.10
+
+REFRESH_CMD = "python benchmarks/check_smoke.py --update"
+
+
+def compare(measured: dict, baseline: dict, tolerance: float,
+            stall_tolerance: float) -> list:
+    """Return a list of (cell, metric, measured, baseline, verdict)
     rows; verdict is "ok", "REGRESSION", or "no-baseline"/"missing"."""
     rows = []
     m_cells = measured.get("cells", {})
@@ -34,35 +50,100 @@ def compare(measured: dict, baseline: dict, tolerance: float) -> list:
         m = m_cells.get(cell, {}).get("tokens_per_s")
         b = b_cells.get(cell, {}).get("tokens_per_s")
         if m is None:
-            rows.append((cell, None, b, "missing"))
+            rows.append((cell, "tokens_per_s", None, b, "missing"))
+            continue
         elif b is None:
-            rows.append((cell, m, None, "no-baseline"))
+            rows.append((cell, "tokens_per_s", m, None, "no-baseline"))
         elif m < (1.0 - tolerance) * b:
-            rows.append((cell, m, b, "REGRESSION"))
+            rows.append((cell, "tokens_per_s", m, b, "REGRESSION"))
         else:
-            rows.append((cell, m, b, "ok"))
+            rows.append((cell, "tokens_per_s", m, b, "ok"))
+        # the stall gate: wall-clock seconds the executor spent blocked
+        # on storage per iteration (the new per-op meters); only gated
+        # when both files carry the column
+        ms = m_cells.get(cell, {}).get("stall_s_per_iter")
+        bs = b_cells.get(cell, {}).get("stall_s_per_iter")
+        if ms is not None and bs is not None:
+            limit = bs * (1.0 + stall_tolerance) + STALL_FLOOR_S
+            verdict = "REGRESSION" if ms > limit else "ok"
+            rows.append((cell, "stall_s", ms, bs, verdict))
+    # the lookahead A/B acceptance gate (absolute, within the measured
+    # run): hints on must beat hints off on the paced-SSD cells
+    la = m_cells.get("paced_alpha_lookahead", {}).get("tokens_per_s")
+    nl = m_cells.get("paced_alpha_nolookahead", {}).get("tokens_per_s")
+    if la is not None and nl is not None and nl > 0:
+        gain = la / nl
+        rows.append(("lookahead_ab", "speedup_x", gain,
+                     LOOKAHEAD_GAIN_GATE,
+                     "ok" if gain >= LOOKAHEAD_GAIN_GATE
+                     else "REGRESSION"))
     return rows
+
+
+def refresh(baseline_path: str, measured: dict | None) -> int:
+    """--update: rewrite the baseline from a measured run (or by
+    running the smoke battery right here — through the SAME
+    ``run_smoke(json_path=...)`` artifact writer CI uses, so the
+    config header always describes how the cells were measured)."""
+    if measured is None:
+        import os
+        sys.path.insert(0, os.path.dirname(__file__))
+        sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                        "src"))
+        from bench_engine import run_smoke
+        run_smoke(json_path=baseline_path)
+        with open(baseline_path) as f:
+            measured = json.load(f)
+    measured = {"refresh_with": REFRESH_CMD, **{k: v for k, v in
+                                               measured.items()
+                                               if k != "refresh_with"}}
+    with open(baseline_path, "w") as f:
+        json.dump(measured, f, indent=2)
+        f.write("\n")
+    print(f"baseline refreshed: {baseline_path} "
+          f"({len(measured.get('cells', {}))} cells)")
+    return 0
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("measured", help="bench_engine --smoke --json output")
-    ap.add_argument("--baseline", required=True)
+    ap.add_argument("measured", nargs="?", default=None,
+                    help="bench_engine --smoke --json output (omit with "
+                         "--update to run the smoke battery here)")
+    ap.add_argument("--baseline", default="benchmarks/baseline_smoke.json")
     ap.add_argument("--tolerance", type=float, default=0.2,
                     help="allowed fractional throughput drop (0.2 = 20%%)")
+    ap.add_argument("--stall-tolerance", type=float, default=1.0,
+                    help="allowed fractional stall-seconds growth vs "
+                         "baseline (1.0 = stall may double) on top of a "
+                         f"{STALL_FLOOR_S * 1000:.0f} ms absolute floor")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the measured run "
+                         "(or from a fresh smoke run when no measured "
+                         "file is given) instead of gating")
     args = ap.parse_args(argv)
-    with open(args.measured) as f:
-        measured = json.load(f)
+    measured = None
+    if args.measured is not None:
+        with open(args.measured) as f:
+            measured = json.load(f)
+    if args.update:
+        return refresh(args.baseline, measured)
+    if measured is None:
+        ap.error("a measured JSON is required unless --update is given")
     with open(args.baseline) as f:
         baseline = json.load(f)
-    rows = compare(measured, baseline, args.tolerance)
+    rows = compare(measured, baseline, args.tolerance,
+                   args.stall_tolerance)
     width = max(len(r[0]) for r in rows) if rows else 10
     bad = 0
-    for cell, m, b, verdict in rows:
-        ms = f"{m:10.0f}" if m is not None else "         -"
-        bs = f"{b:10.0f}" if b is not None else "         -"
-        print(f"  {cell:<{width}}  measured {ms} tok/s   "
-              f"baseline {bs} tok/s   {verdict}")
+    units = {"tokens_per_s": "tok/s", "stall_s": "s/iter",
+             "speedup_x": "x (gate)"}
+    for cell, metric, m, b, verdict in rows:
+        unit = units.get(metric, "")
+        ms = f"{m:10.3f}" if m is not None else "         -"
+        bs = f"{b:10.3f}" if b is not None else "         -"
+        print(f"  {cell:<{width}} {metric:<12} measured {ms} {unit}   "
+              f"baseline {bs} {unit}   {verdict}")
         if verdict == "REGRESSION":
             bad += 1
         elif verdict == "missing":
@@ -70,10 +151,12 @@ def main(argv=None) -> int:
                   "measured run — did a schedule disappear?")
             bad += 1
     if bad:
-        print(f"FAIL: {bad} cell(s) regressed more than "
-              f"{args.tolerance:.0%} vs {args.baseline}")
+        print(f"FAIL: {bad} metric(s) regressed past the gates "
+              f"(throughput -{args.tolerance:.0%}, stall "
+              f"+{args.stall_tolerance:.0%}) vs {args.baseline}")
         return 1
-    print(f"PASS: all cells within {args.tolerance:.0%} of baseline")
+    print(f"PASS: all cells within the gates (throughput "
+          f"-{args.tolerance:.0%}, stall +{args.stall_tolerance:.0%})")
     return 0
 
 

@@ -44,7 +44,8 @@ class LPSolution:
 def solve_config(m: MachineParams, w: Workload, n: int, alpha: float,
                  num_gpus: int = 1,
                  wave: Optional[int] = None,
-                 act_policy: str = "recompute") -> Optional[LPSolution]:
+                 act_policy: str = "recompute",
+                 lookahead: bool = True) -> Optional[LPSolution]:
     """One LP solve for fixed (n, α). Returns None if infeasible.
 
     With ``num_gpus=R > 1`` the LP models the R-way data-parallel
@@ -71,10 +72,19 @@ def solve_config(m: MachineParams, w: Workload, n: int, alpha: float,
     lowest, so it only soaks spare bandwidth — letting it compete for
     the LP's CPU budget would understate checkpoint residency).
     "auto" solves both rows and returns the faster solution, tagged in
-    ``LPSolution.act_policy``."""
+    ``LPSolution.act_policy``.
+
+    ``lookahead=False`` prices the hint-free executor (the default
+    models the cross-stream lookahead pass): the SSD reads the hints
+    overlap — the α-tail optimizer state ahead of the forward gates,
+    the per-micro-batch checkpoint/residual tails ahead of each
+    backward fetch — join the GPU-compute rows as serialized stall
+    terms (with their x coefficients) instead of hiding under the
+    stage max, mirroring ``perfmodel._lookahead_stalls``."""
     if act_policy == "auto":
         sols = [solve_config(m, w, n, alpha, num_gpus=num_gpus, wave=wave,
-                             act_policy=p) for p in ("recompute", "spill")]
+                             act_policy=p, lookahead=lookahead)
+                for p in ("recompute", "spill")]
         sols = [s for s in sols if s is not None]
         return min(sols, key=lambda s: s.iteration_time, default=None)
     if act_policy not in ("recompute", "spill"):
@@ -129,7 +139,13 @@ def solve_config(m: MachineParams, w: Workload, n: int, alpha: float,
     add([-n * w.cs, -w.ms, 0, 0, 0], -alpha * w.grad_bytes)
 
     # --- forward stage lower bounds ---
-    add_time_lb(3, n * t_f1)                                   # GPU compute
+    if lookahead:
+        add_time_lb(3, n * t_f1)                               # GPU compute
+    else:
+        # hint-free: the α-tail optimizer reads serialize with compute
+        # at the forward gates (PREFETCH_OPT is what overlaps them)
+        add_time_lb(3, n * t_f1 + alpha * w.os_bytes / rd,
+                    (0.0, 0.0, alpha * w.os_bytes / rd))
     #   SSD: reads  nw·ms(1-x_p)/rd + α·os(1-x_o)/rd
     #        writes n·cs(1-x_c)/wr + n·as/wr (spill) + α·os(1-x_o)/wr
     const_f = nw * w.ms / rd + n * w.cs / wr + act_b / wr \
@@ -143,7 +159,15 @@ def solve_config(m: MachineParams, w: Workload, n: int, alpha: float,
     add_time_lb(3, pcie_fwd / m.pcie_bw)                       # PCIe
 
     # --- backward stage lower bounds ---
-    add_time_lb(4, n * t_b1)
+    if lookahead:
+        add_time_lb(4, n * t_b1)
+    elif spill:
+        # residual-tail reads serialize with backward (PREFETCH_ACT)
+        add_time_lb(4, n * t_b1 + act_b / rd)
+    else:
+        # ckpt-tail re-reads serialize with backward (PREFETCH_CKPT)
+        add_time_lb(4, n * t_b1 + n * w.cs / rd,
+                    (n * w.cs / rd, 0.0, 0.0))
     #   spill: the n·cs checkpoint re-read row is replaced by the n·as
     #   residual fetch (constant — the stream is fully offloaded)
     bwd_ckpt_rd = 0.0 if spill else n * w.cs

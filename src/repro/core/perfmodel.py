@@ -197,9 +197,35 @@ def compute_times(w: Workload, m: MachineParams):
     return t_f, 3.0 * t_f
 
 
+def _lookahead_stalls(w: Workload, m: MachineParams, M: int, alpha: float,
+                      x: StorageRatios, spill: bool) -> tuple:
+    """(fwd, bwd) seconds of SSD reads the schedule SERIALIZES with
+    compute when the cross-stream lookahead hints are disabled:
+
+    * fwd — the α-tail optimizer state reads block the first layers'
+      gate-ordered parameter fetches instead of riding ahead of them
+      (``PREFETCH_OPT``);
+    * bwd — each checkpoint tail's re-read (recompute) or residual
+      tail's read (spill) blocks the executor at the fetch instead of
+      streaming in behind the previous micro-batch's backward
+      (``PREFETCH_CKPT`` / ``PREFETCH_ACT``).
+
+    With lookahead ON these reads overlap compute, so the stage bounds
+    stay pure maxes — the model the pre-lookahead formulas already
+    assumed optimistically; ``lookahead=False`` makes the lost overlap
+    explicit, which is the reduced-stall term Algorithm 1 prices."""
+    fwd = alpha * w.os_bytes * (1 - x.opt) / m.ssd_read_bw
+    if spill:
+        bwd = M * w.as_bytes * (1 - x.act) / m.ssd_read_bw
+    else:
+        bwd = M * w.cs * (1 - x.ckpt) / m.ssd_read_bw
+    return fwd, bwd
+
+
 def iteration_time_vertical(w: Workload, m: MachineParams, M: int,
                             alpha: float, x: StorageRatios,
-                            act: str = "recompute") -> float:
+                            act: str = "recompute",
+                            lookahead: bool = True) -> float:
     """GreedySnake §4: fwd and bwd stages each bounded by the max of GPU
     compute, PCIe traffic, SSD traffic, and (overlapped) CPU-Adam time.
 
@@ -207,7 +233,11 @@ def iteration_time_vertical(w: Workload, m: MachineParams, M: int,
     backward drops its recompute third (``t_b1 = 2·t_f1``) and its
     checkpoint re-reads, and instead the ``M·as`` residual bytes ride
     out after forward and back in before backward (``StorageRatios.act``
-    CPU-resident, the tail over SSD at the opportunistic priority)."""
+    CPU-resident, the tail over SSD at the opportunistic priority).
+
+    ``lookahead=False`` prices the hint-free executor: the reads the
+    cross-stream lookahead overlaps (:func:`_lookahead_stalls`) are
+    added to the stage compute terms instead of hiding under the max."""
     spill = act == "spill"
     t_f1, t_b1 = compute_times(w, m)
     if spill:
@@ -228,14 +258,19 @@ def iteration_time_vertical(w: Workload, m: MachineParams, M: int,
                         + (1 - alpha) * w.os_bytes * (1 - x.opt),
                         (1 - alpha) * w.os_bytes * (1 - x.opt), m)
     adam_t = (w.os_bytes + w.grad_bytes) / m.cpu_adam_bw
-    t_fwd = max(M * t_f1, pcie_fwd / m.pcie_bw, fwd_ssd, alpha * adam_t)
-    t_bwd = max(M * t_b1, pcie_bwd / m.pcie_bw, bwd_ssd, (1 - alpha) * adam_t)
+    st_f, st_b = (0.0, 0.0) if lookahead else \
+        _lookahead_stalls(w, m, M, alpha, x, spill)
+    t_fwd = max(M * t_f1 + st_f, pcie_fwd / m.pcie_bw, fwd_ssd,
+                alpha * adam_t)
+    t_bwd = max(M * t_b1 + st_b, pcie_bwd / m.pcie_bw, bwd_ssd,
+                (1 - alpha) * adam_t)
     return t_fwd + t_bwd
 
 
 def iteration_time_wave(w: Workload, m: MachineParams, M: int, W: int,
                         alpha: float, x: StorageRatios,
-                        act: str = "recompute") -> float:
+                        act: str = "recompute",
+                        lookahead: bool = True) -> float:
     """The wave hybrid (``repro.core.plan.compile_wave``): ``nw = M/W``
     waves, each stage bounded like the vertical model but with the
     parameter (re)loads scaled by ``nw`` and the cross-wave f32
@@ -247,7 +282,8 @@ def iteration_time_wave(w: Workload, m: MachineParams, M: int, W: int,
     if W < 1 or M % W:
         return float("inf")
     if W == M:
-        return iteration_time_vertical(w, m, M, alpha, x, act=act)
+        return iteration_time_vertical(w, m, M, alpha, x, act=act,
+                                       lookahead=lookahead)
     spill = act == "spill"
     nw = M // W
     t_f1, t_b1 = compute_times(w, m)
@@ -270,30 +306,39 @@ def iteration_time_wave(w: Workload, m: MachineParams, M: int, W: int,
         + (1 - alpha) * w.os_bytes * (1 - x.opt),
         (1 - alpha) * w.os_bytes * (1 - x.opt), m)
     adam_t = (w.os_bytes + w.grad_bytes) / m.cpu_adam_bw
-    t_fwd = max(M * t_f1, pcie_fwd / m.pcie_bw, fwd_ssd, alpha * adam_t)
-    t_bwd = max(M * t_b1, pcie_bwd / m.pcie_bw, bwd_ssd,
+    st_f, st_b = (0.0, 0.0) if lookahead else \
+        _lookahead_stalls(w, m, M, alpha, x, spill)
+    t_fwd = max(M * t_f1 + st_f, pcie_fwd / m.pcie_bw, fwd_ssd,
+                alpha * adam_t)
+    t_bwd = max(M * t_b1 + st_b, pcie_bwd / m.pcie_bw, bwd_ssd,
                 (1 - alpha) * adam_t)
     return t_fwd + t_bwd
 
 
 def pick_activation_policy(w: Workload, m: MachineParams, M: int, W: int,
-                           alpha: float, x: StorageRatios) -> str:
+                           alpha: float, x: StorageRatios,
+                           lookahead: bool = True) -> str:
     """Resolve ``activation_policy="auto"``: "spill" exactly when the
     roofline says streaming the residuals beats recomputing them —
     i.e. the spill-priced iteration is faster. Spilling wins when the
     backward recompute third is the binding term (slow compute, fast
     SSDs with spare write bandwidth); recompute wins when storage is
     the bottleneck and the extra ``2·M·as`` bytes would lengthen the
-    critical path."""
-    t_re = iteration_time_wave(w, m, M, W, alpha, x, act="recompute")
-    t_sp = iteration_time_wave(w, m, M, W, alpha, x, act="spill")
+    critical path. ``lookahead`` must match the executor that will run
+    the plan (``prefetch_depth > 0``): the hint-free executor pays the
+    serialized tail-read stalls, which shift the break-even point."""
+    t_re = iteration_time_wave(w, m, M, W, alpha, x, act="recompute",
+                               lookahead=lookahead)
+    t_sp = iteration_time_wave(w, m, M, W, alpha, x, act="spill",
+                               lookahead=lookahead)
     return "spill" if t_sp < t_re else "recompute"
 
 
 def iteration_time_vertical_dp(w: Workload, m: MachineParams, M: int,
                                alpha: float, x: StorageRatios,
                                R: Optional[int] = None,
-                               act: str = "recompute") -> float:
+                               act: str = "recompute",
+                               lookahead: bool = True) -> float:
     """R-GPU data-parallel vertical schedule (the Fig. 10 scaling
     model). ``w`` is the FULL-model workload; each rank owns 1/R of
     every storage shard (ZeRO-style) and M/R of the micro-batches, and
@@ -305,7 +350,8 @@ def iteration_time_vertical_dp(w: Workload, m: MachineParams, M: int,
     ``m.interconnect_bw``. ``m.cpu_mem`` is per rank."""
     R = int(R or m.num_gpus)
     if R <= 1:
-        return iteration_time_vertical(w, m, M, alpha, x, act=act)
+        return iteration_time_vertical(w, m, M, alpha, x, act=act,
+                                       lookahead=lookahead)
     if M % R:
         return float("inf")
     spill = act == "spill"
@@ -336,9 +382,11 @@ def iteration_time_vertical_dp(w: Workload, m: MachineParams, M: int,
     frac = (R - 1) / R
     ic_fwd = frac * w.ms / m.interconnect_bw                  # all-gather
     ic_bwd = frac * (w.ms + w.grad_bytes) / m.interconnect_bw  # + red-scat
-    t_fwd = max(Mr * t_f1, pcie_fwd / m.pcie_bw, fwd_ssd, ic_fwd,
+    st_f, st_b = (0.0, 0.0) if lookahead else \
+        _lookahead_stalls(wr, m, Mr, alpha, x, spill)
+    t_fwd = max(Mr * t_f1 + st_f, pcie_fwd / m.pcie_bw, fwd_ssd, ic_fwd,
                 alpha * adam_t)
-    t_bwd = max(Mr * t_b1, pcie_bwd / m.pcie_bw, bwd_ssd, ic_bwd,
+    t_bwd = max(Mr * t_b1 + st_b, pcie_bwd / m.pcie_bw, bwd_ssd, ic_bwd,
                 (1 - alpha) * adam_t)
     return t_fwd + t_bwd
 

@@ -25,11 +25,16 @@ data structure:
   :func:`repro.core.traffic.wave_ckpt_traffic`).
 * :func:`compile_vertical` / :func:`compile_horizontal` — the two paper
   schedules as wave specializations (``W=M`` / ``W=1``).
-* :func:`insert_prefetch` — a lookahead pass deriving ``PREFETCH``
-  hints: each parameter fetch's hint is placed right after the
-  previous fetch (or after the α-gates / a ``RESET_PARAMS`` boundary),
-  never across a reset — cancelled prefetches would otherwise change
-  measured traffic.
+* :func:`insert_prefetch` — THE unified cross-stream lookahead pass:
+  one hint per fetch-class op, for every stream that can touch the SSD
+  (``PREFETCH`` for param fetches / all-gathers, ``PREFETCH_CKPT`` for
+  backward checkpoint-tail re-reads, ``PREFETCH_ACT`` for the
+  activation stream, ``PREFETCH_OPT`` for the α-tail optimizer state
+  reads). Hints are placed ``depth`` same-stream fetches ahead (or at
+  the segment anchor), never across a ``RESET_PARAMS`` — cancelled
+  prefetches would otherwise change measured traffic. Hints move
+  *when* bytes flow, never *how many*: a plan with hints predicts (and
+  measures) byte-for-byte the same traffic as the same plan without.
 * :func:`plan_traffic` — a static analyzer: an abstract interpreter
   over the op stream (tracking device-kept slots and CPU-cached
   checkpoint tails, §4.2 eviction included) that predicts every
@@ -43,11 +48,21 @@ Op table (executor semantics live in ``repro.offload.executor``):
 op                    meaning (bytes it moves)
 ====================  =====================================================
 PHASE(tag)            wall-clock phase marker (fwd / bwd / opt_wait)
-OPT_LATE(l)           flush layer l's α-tail optimizer segment from the
-                      previous step and gate l's param fetch on it
-                      (opt state r/w for the [k_early, P) segment)
+OPT_LATE(l)           flush layer l's α-tail optimizer segment and gate
+                      l's NEXT param fetch on it (opt state r/w for the
+                      [k_early, P) segment). Emitted in the plan
+                      EPILOGUE: the flush of iteration i's tail is
+                      submitted at the end of iteration i, so it is in
+                      flight together with iteration i+1's first param
+                      fetches — the §4.4 optimizer/forward overlap as a
+                      plan-level seam rather than executor ordering
 PREFETCH(l)           hint: start layer l's param fetch now (maps to
                       IOPriority.PARAM_FETCH; bytes accounted at FETCH)
+PREFETCH_OPT(l)       hint: start the α-tail optimizer-state reads of
+                      layer l now (tag="late"; bytes accounted at the
+                      OPT_LATE flush that consumes them)
+PREFETCH_CKPT(l, m)   hint: start the backward checkpoint tail's SSD
+                      re-read now (bytes accounted at FETCH_CKPT_BWD)
 FETCH_PARAM(l)        await layer l's params on device
                       (param ssd->cpu tail + cpu->gpu full)
 ALLGATHER(l)          DP: all ranks' shard fetches + ring all-gather
@@ -60,7 +75,8 @@ SPILL_CKPT(l, m)      offload boundary-l ckpt of m (gpu->cpu + ssd tail;
 FETCH_CKPT(l, m)      next-layer forward input (device-kept: free;
                       else cpu->gpu, consuming the CPU tail cache)
 FETCH_CKPT_BWD(l, m)  backward recompute input (cpu->gpu + ssd tail
-                      re-read unless the tail is still CPU-cached)
+                      re-read unless the tail is still CPU-cached or
+                      already prefetched by a PREFETCH_CKPT hint)
 FWD(l, m)             layer forward (compute only; under the spill
                       policy it also materialises the vjp residuals)
 SPILL_ACT(l, m)       spill policy: stream layer l's vjp residuals for
@@ -145,6 +161,8 @@ class Op(enum.Enum):
     PHASE = "phase"
     OPT_LATE = "opt_late"
     PREFETCH = "prefetch"
+    PREFETCH_OPT = "prefetch_opt"
+    PREFETCH_CKPT = "prefetch_ckpt"
     FETCH_PARAM = "fetch_param"
     ALLGATHER = "allgather"
     RELEASE_PARAM = "release_param"
@@ -245,13 +263,24 @@ def _restrict(order: Sequence[int], lo: int, hi: int) -> List[int]:
 
 
 def compile_wave(spec: PlanSpec, W: int,
-                 order: Optional[OrderFn] = None) -> Plan:
+                 order: Optional[OrderFn] = None,
+                 opt_epilogue: bool = True) -> Plan:
     """Compile the W-micro-batches-per-wave schedule for ``spec``.
 
     ``order(l)`` must return the global micro-batch order of layer l
     (default: the canonical :func:`mb_order`); compilers consume blocks
     of it, so a perturbed order compiles to a plan whose executor pays
     the §4.2 eviction penalty — and :func:`plan_traffic` predicts it.
+
+    ``opt_epilogue`` places the α-tail ``OPT_LATE`` flushes: ``True``
+    (the cross-iteration seam, default) emits them in the plan
+    EPILOGUE — iteration i's tail is submitted at the end of iteration
+    i and overlaps iteration i+1's first fetches; ``False`` emits them
+    in the PROLOGUE (tag ``"pro"``) — the pre-lookahead executor
+    ordering, where the flush of the previous step's tail serializes
+    against this step's empty pipeline. Both orderings flush the same
+    (gradient, Adam-step) pairs, so results are bitwise-identical; the
+    prologue variant exists as the lookahead-off baseline.
     """
     L, M, R, alpha = spec.L, spec.M, spec.ranks, spec.alpha
     if W < 1 or M % W:
@@ -280,9 +309,9 @@ def compile_wave(spec: PlanSpec, W: int,
         return [_restrict(order(l), w * W, (w + 1) * W)]
 
     emit(PlanOp(Op.PHASE, tag="fwd"))
-    if alpha > 0:
+    if alpha > 0 and not opt_epilogue:
         for l in range(L):
-            emit(PlanOp(Op.OPT_LATE, l=l))
+            emit(PlanOp(Op.OPT_LATE, l=l, tag="pro"))
 
     for w in range(nw):
         if w > 0:
@@ -359,6 +388,18 @@ def compile_wave(spec: PlanSpec, W: int,
         emit(PlanOp(Op.FOLD_EMBED, ms=tuple(reversed(order(0)))))
         emit(PlanOp(Op.ALLREDUCE_HEAD))
     emit(PlanOp(Op.PHASE, tag="opt_wait"))
+    # The cross-iteration seam (§4.4 realized at plan level): THIS
+    # iteration's α-tail optimizer segments are flushed in the EPILOGUE
+    # — each OPT_LATE(l) submits the tail update and re-arms layer l's
+    # fetch gate — so by the time the next interpretation of this same
+    # plan issues its first PREFETCH/FETCH_PARAM ops, the tail flushes
+    # (and, via PREFETCH_OPT hints, their state reads) are already in
+    # flight: iteration i's optimizer tail overlaps iteration i+1's
+    # layer-0/1 parameter fetches. The gate (not plan order) is what
+    # keeps a fetch from reading a half-updated parameter vector.
+    if alpha > 0 and opt_epilogue:
+        for l in range(L):
+            emit(PlanOp(Op.OPT_LATE, l=l))
     emit(PlanOp(Op.HEAD_ADAM))
     if alpha == 0:
         emit(PlanOp(Op.WAIT_OPT))
@@ -368,36 +409,60 @@ def compile_wave(spec: PlanSpec, W: int,
 
 
 def compile_vertical(spec: PlanSpec,
-                     order: Optional[OrderFn] = None) -> Plan:
+                     order: Optional[OrderFn] = None,
+                     opt_epilogue: bool = True) -> Plan:
     """GreedySnake's vertical schedule: one wave of all M micro-batches
     (§3.4: params loaded twice per ITERATION, grads accumulated on
     device and moved once)."""
-    return compile_wave(spec, spec.M, order=order)
+    return compile_wave(spec, spec.M, order=order,
+                        opt_epilogue=opt_epilogue)
 
 
 def compile_horizontal(spec: PlanSpec,
-                       order: Optional[OrderFn] = None) -> Plan:
+                       order: Optional[OrderFn] = None,
+                       opt_epilogue: bool = True) -> Plan:
     """ZeRO-Infinity-style baseline: waves of one micro-batch (params
     loaded twice per MICRO-BATCH, the f32 grad buffer swapped through
     CPU (2M-1) times)."""
-    return compile_wave(spec, 1, order=order)
+    return compile_wave(spec, 1, order=order, opt_epilogue=opt_epilogue)
 
 
 # ---------------------------------------------------------------------------
-# the PREFETCH lookahead pass
+# the unified cross-stream lookahead pass
 # ---------------------------------------------------------------------------
 
 _FETCH_KINDS = (Op.FETCH_PARAM, Op.ALLGATHER)
 
+#: fetch-class op -> the hint op the lookahead pass derives for it.
+#: FETCH_CKPT and FETCH_GRAD are absent on purpose: their payloads are
+#: provably device-kept or CPU-resident (the forward consumes the ckpt
+#: CPU cache, inter-layer gradients never touch SSD), so there is
+#: nothing to look ahead for.
+HINT_FOR_FETCH: Dict[Op, Op] = {
+    Op.FETCH_PARAM: Op.PREFETCH,
+    Op.ALLGATHER: Op.PREFETCH,
+    Op.FETCH_CKPT_BWD: Op.PREFETCH_CKPT,
+    Op.FETCH_ACT: Op.PREFETCH_ACT,
+    Op.OPT_LATE: Op.PREFETCH_OPT,
+}
 
-def _hint_pass(ops: List[PlanOp], fetch_kinds, hint_kind: Op) -> List[PlanOp]:
-    """One lookahead pass: every op whose kind is in ``fetch_kinds``
-    gets exactly one ``hint_kind`` hint, placed right after the
-    previous such fetch in the same schedule segment (or after the
-    segment anchor — the leading PHASE/OPT_LATE prefix, or the
-    segment's ``RESET_PARAMS``). Hints never cross a ``RESET_PARAMS``.
-    """
-    # anchor after the leading PHASE/OPT_LATE prefix (α-gate ordering)
+#: every hint op kind (executor: submit the fetch early; moves no bytes)
+HINT_KINDS = (Op.PREFETCH, Op.PREFETCH_OPT, Op.PREFETCH_CKPT,
+              Op.PREFETCH_ACT)
+
+
+def _hint_pass(ops: List[PlanOp], fetch_kinds, hint_kind: Op,
+               depth: int) -> List[PlanOp]:
+    """One stream's lookahead pass: every op whose kind is in
+    ``fetch_kinds`` gets exactly one ``hint_kind`` hint, placed right
+    after the ``depth``-th previous same-stream fetch in the same
+    schedule segment (``depth=1`` is the classic two-stage §4.2
+    pipeline; larger depths hint further ahead), or after the segment
+    anchor — plan start (or, in a prologue-ordered plan, after the
+    leading ``OPT_LATE`` prefix: a hint before the α gates are armed
+    would fetch parameters the late optimizer segment is still
+    writing), or the segment's ``RESET_PARAMS``. Hints never cross a
+    ``RESET_PARAMS``."""
     lead = -1
     for i, op in enumerate(ops):
         if op.op is Op.PHASE:
@@ -408,12 +473,18 @@ def _hint_pass(ops: List[PlanOp], fetch_kinds, hint_kind: Op) -> List[PlanOp]:
         break
     inserts: Dict[int, List[PlanOp]] = defaultdict(list)
     anchor = lead
+    recent: List[int] = []           # last <= depth same-stream fetches
     for i, op in enumerate(ops):
         if op.op is Op.RESET_PARAMS:
             anchor = i
+            recent = []
         elif op.op in fetch_kinds:
-            inserts[anchor].append(PlanOp(hint_kind, l=op.l, m=op.m))
-            anchor = i
+            pos = recent[0] if len(recent) == depth else anchor
+            inserts[pos].append(PlanOp(hint_kind, l=op.l, m=op.m,
+                                       tag=op.tag))
+            recent.append(i)
+            if len(recent) > depth:
+                recent.pop(0)
     out: List[PlanOp] = list(inserts.get(-1, []))
     for i, op in enumerate(ops):
         out.append(op)
@@ -421,30 +492,85 @@ def _hint_pass(ops: List[PlanOp], fetch_kinds, hint_kind: Op) -> List[PlanOp]:
     return out
 
 
-def insert_prefetch(plan: Plan) -> Plan:
-    """Derive ``PREFETCH`` hints: every parameter fetch gets exactly one
-    hint, placed as early as legal —
+def _opt_hint_pass(ops: List[PlanOp]) -> List[PlanOp]:
+    """PREFETCH_OPT hints for the epilogue ``OPT_LATE`` flushes: layer
+    l's α-tail state reads start right after its ``WRITEBACK_GRAD`` /
+    ``REDUCE_SCATTER`` (the op that retires layer l in backward), so
+    they overlap the remaining backward compute. The [k_early, P) tail
+    is stable from the previous flush (gate-ordered before this
+    iteration's forward fetch) until this epilogue's flush consumes the
+    prefetch, and the early segment's concurrent [0, k_early) writes
+    are range-disjoint — so the hint is value-safe anywhere after the
+    previous fetch of layer l; this placement maximises overlap."""
+    idx_late = {op.l: i for i, op in enumerate(ops)
+                if op.op is Op.OPT_LATE}
+    if not idx_late:
+        return ops
+    inserts: Dict[int, List[PlanOp]] = defaultdict(list)
+    before: set = set()
+    for l, li in idx_late.items():
+        wb = next((i for i, op in enumerate(ops)
+                   if op.op in (Op.WRITEBACK_GRAD, Op.REDUCE_SCATTER)
+                   and op.l == l and i < li), None)
+        if wb is not None:
+            inserts[wb].append(PlanOp(Op.PREFETCH_OPT, l=l, tag="late"))
+        else:
+            # no retiring op ahead of the flush (prologue-ordered
+            # plans): hint just before the flush so the 1:1 pairing
+            # holds — the prefetch reads the exact pre-flush state the
+            # flush consumes
+            before.add(li)
+    out: List[PlanOp] = []
+    for i, op in enumerate(ops):
+        if i in before:
+            out.append(PlanOp(Op.PREFETCH_OPT, l=op.l, tag="late"))
+        out.append(op)
+        out.extend(inserts.get(i, []))
+    return out
 
-    * right after the PREVIOUS fetch in the same schedule segment (the
-      two-stage §4.2 pipeline: layer l on device while l+1 streams in);
-    * for a segment's first fetch, right after the segment's
-      ``RESET_PARAMS`` (or after the α-gates at plan start — a hint
-      before ``OPT_LATE`` would fetch parameters the late optimizer
-      segment is still writing).
+
+def insert_prefetch(plan: Plan, depth: int = 1) -> Plan:
+    """THE unified cross-stream lookahead pass: derive exactly one hint
+    per fetch-class op, for every stream that can touch the SSD —
+
+    * ``PREFETCH`` per ``FETCH_PARAM``/``ALLGATHER``, placed ``depth``
+      param fetches ahead (``depth=1``: right after the previous fetch
+      — the two-stage §4.2 pipeline: layer l on device while l+1
+      streams in; a segment's first fetches anchor at plan start or
+      the segment's ``RESET_PARAMS``);
+    * ``PREFETCH_CKPT`` per ``FETCH_CKPT_BWD`` (recompute plans): the
+      checkpoint tail's SSD re-read streams in while the previous
+      micro-batch's backward runs, instead of blocking the executor;
+    * ``PREFETCH_ACT`` per ``FETCH_ACT`` (spill plans), at the
+      opportunistic ``IOPriority.ACT``;
+    * ``PREFETCH_OPT`` per epilogue ``OPT_LATE``: the α-tail optimizer
+      state reads start as soon as the layer retires in backward
+      (see :func:`_opt_hint_pass` for the value-safety argument).
+
+    ``depth=0`` disables the pass entirely (the plan is returned
+    unchanged — every fetch degrades to a synchronous gate-ordered
+    read, which is the "lookahead off" baseline the byte-parity and
+    bitwise batteries compare against).
 
     Hints never cross a ``RESET_PARAMS``: the reset cancels queued
     prefetches, but one already running would have moved (and metered)
-    bytes the imperative engines never moved.
-
-    Spill plans additionally get one ``PREFETCH_ACT`` hint per
-    ``FETCH_ACT`` under the same anchor discipline, so each
-    micro-batch's residual tail streams in (at the opportunistic
-    ``IOPriority.ACT``) while the previous micro-batch's backward
-    runs.
+    bytes a hint-free plan never moved. For the same reason hints move
+    *when* bytes flow, never *how many*: ``plan_traffic`` of a hinted
+    plan equals ``plan_traffic`` of the bare plan exactly, and the
+    executor may legally SKIP any hint (backpressure-adaptive
+    throttling) without changing a single byte counter.
     """
-    ops = _hint_pass(list(plan.ops), _FETCH_KINDS, Op.PREFETCH)
+    if depth < 0:
+        raise ValueError(f"prefetch depth must be >= 0, got {depth}")
+    if depth == 0:
+        return plan
+    ops = _hint_pass(list(plan.ops), _FETCH_KINDS, Op.PREFETCH, depth)
     if plan.spec.act_spill:
-        ops = _hint_pass(ops, (Op.FETCH_ACT,), Op.PREFETCH_ACT)
+        ops = _hint_pass(ops, (Op.FETCH_ACT,), Op.PREFETCH_ACT, depth)
+    else:
+        ops = _hint_pass(ops, (Op.FETCH_CKPT_BWD,), Op.PREFETCH_CKPT,
+                         depth)
+    ops = _opt_hint_pass(ops)
     return dataclasses.replace(plan, ops=tuple(ops))
 
 
@@ -502,9 +628,12 @@ def plan_traffic(plan: Plan, costs: PlanCosts):
     device-kept checkpoint/gradient slots and CPU-cached checkpoint
     tails — including the §4.2 eviction discipline, so a plan compiled
     from a PERTURBED micro-batch order predicts the eviction penalty
-    too. α-delayed optimizer segments are counted at steady state (each
-    iteration late-flushes the previous step's tail), which is what an
-    engine run followed by ``finish()`` measures.
+    too. α-delayed optimizer segments are counted at the epilogue
+    ``OPT_LATE`` ops (each iteration flushes its own tail at plan end),
+    which is what an engine run followed by ``finish()`` measures.
+    ``PREFETCH*`` hint ops move no bytes — a hinted plan's prediction
+    equals the bare plan's exactly (hints change *when* bytes flow,
+    never *how many*).
 
     Returns one dict for single-rank plans, a per-rank list for DP.
     """
@@ -624,7 +753,10 @@ def plan_traffic(plan: Plan, costs: PlanCosts):
             add(0, "grad", "gpu->cpu", P * 4)
             opt_segment(0, P, 0, int(round((1.0 - costs.alpha) * P)))
         elif k is Op.OPT_LATE:
-            # steady state: this iteration late-flushes last step's tail
+            # epilogue seam: each iteration flushes its OWN α-tail at
+            # plan end (the byte count is what an engine run followed
+            # by finish() measures; PREFETCH_OPT hints only move the
+            # state reads earlier, never change them)
             for r, (lo, hi) in enumerate(bounds):
                 n_r = hi - lo
                 opt_segment(r, n_r, int(round((1.0 - costs.alpha) * n_r)),

@@ -32,13 +32,55 @@ requests here:
               |                                ^
               +---- request bodies ------------+
 
+The unified cross-stream lookahead + backpressure loop
+======================================================
+
+``repro.core.plan.insert_prefetch`` derives ONE hint op per fetch-class
+op for every stream that can touch the SSD — ``PREFETCH`` per
+``FETCH_PARAM``/``ALLGATHER``, ``PREFETCH_CKPT`` per backward
+checkpoint-tail re-read, ``PREFETCH_ACT`` per activation-residual
+fetch, and ``PREFETCH_OPT`` per α-tail ``OPT_LATE`` flush — each
+placed ``prefetch_depth`` same-stream fetches ahead of its consumer
+and never across a ``RESET_PARAMS``. The α-tail flushes themselves
+ride the plan EPILOGUE (the cross-iteration seam): iteration i's
+optimizer tail is submitted at the end of iteration i, so it is in
+flight together with iteration i+1's first parameter fetches, gated
+(not plan-ordered) for correctness.
+
+Hints are pure scheduling: each submits the owning coordinator's
+asynchronous read early and moves NO bytes of its own, so a hinted
+plan's ``plan_traffic`` prediction — and every live meter — equals the
+bare plan's exactly, and results stay bitwise-identical (f32) with the
+lookahead on, off, or at any depth (``tests/test_lookahead.py`` pins
+the whole grid).
+
+The loop closes through :meth:`~repro.io.engine.IOEngine.depth`, the
+thread-safe live queue snapshot (request heap by priority, per-route
+channel-chunk backlog, in-flight bytes vs the backpressure budget).
+Before issuing any hint the executor consults it and SKIPS the hint
+when the link is saturated — MLP-Offload's idle-level rule: prefetch
+only INTO idle bandwidth; a read issued against a standing backlog
+cannot finish early, it just steals link time from whatever the GPU
+blocks on next. Skipping is always legal (hints are byte-neutral), so
+adaptivity costs nothing in determinism of results or counters. Under
+``activation_policy="auto"`` the same signal gates each ``SPILL_ACT``
+per (layer, micro-batch): a saturated write queue degrades that one
+residual to the recompute path — still bitwise-identical, because both
+policies run backward from the same vjp residuals.
+
 How plan ops map to request priorities
 (:data:`~repro.io.engine.CATEGORY_PRIORITY`):
 
-* ``PREFETCH(l)`` hints — derived by the plan compiler's lookahead
-  pass, one per ``FETCH_PARAM``/``ALLGATHER``, placed right after the
-  previous fetch and never across a ``RESET_PARAMS`` — submit at
-  ``PARAM_FETCH`` (top) priority: the GPU will block on them next.
+* ``PREFETCH(l)`` hints submit at ``PARAM_FETCH`` (top) priority: the
+  GPU will block on them next. The prefetch body performs only the
+  SSD -> host stage; the host -> device copy stays on the consumer
+  thread (an engine worker doing device copies would steal CPU from
+  the compute the lookahead is protecting). A hint whose α gate is
+  not READY — the gating flush still queued, so waiting on it would
+  be unbounded — is refused by the coordinator (``set_gate``'s
+  readiness probe): a burst of ``prefetch_depth`` gated fetch bodies
+  outranking the queued flushes could otherwise occupy every request
+  worker and leave none to run the flushes they wait on.
 * ``SPILL_GRAD``/``FETCH_GRAD`` traffic is ``INTER_LAYER_GRAD``; the
   wave schedule's cross-wave ``GRAD_SPILL``/``GRAD_FETCH_ACC`` buffer
   swaps pace at the same level (category ``grad``).
@@ -46,25 +88,29 @@ How plan ops map to request priorities
   ``OPTIMIZER_STATE`` requests whose tiered-vector chunk ops yield to
   parameter fetches on the same paths (the α-delay gate makes a fetch
   WAIT on a flush, which is why the engine keeps >= 3 workers).
+  ``PREFETCH_OPT`` state reads share the class; a flush consumes a
+  landed prefetch's arrays, cancels a still-queued one (no bytes
+  moved), and only ever waits on a running-or-done request — the
+  bounded-wait discipline that keeps the worker pool deadlock-free.
 * ``SPILL_CKPT`` tails are ``CKPT_SPILL``: deferrable until a
-  ``FETCH_CKPT_BWD`` actually needs them.
+  ``FETCH_CKPT_BWD`` actually needs them — whose ``PREFETCH_CKPT``
+  hint streams the tail back in behind the previous micro-batch's
+  backward instead of blocking the executor at the fetch.
 * ``SPILL_ACT``/``FETCH_ACT`` — the SSDTrain-style activation stream
   (``OffloadConfig.activation_policy="spill"``) — run at ``ACT``, the
   bottom class: each layer's vjp residuals ride out after its forward
   and back in ahead of its backward INSTEAD of being recomputed from
   the boundary checkpoint, so the stream exists precisely to soak up
-  write bandwidth nothing urgent wants. ``PREFETCH_ACT`` hints come
-  from the same lookahead pass (one per fetch, never across a
-  ``RESET_PARAMS``). Failure degrades softly: the checkpoint tier is
-  untouched, so a failed spill or fetch falls back to recomputing that
-  one micro-batch — with bitwise-identical results, because BOTH
-  policies run backward from the same residuals (restored or
-  recomputed). The byte closed forms are
+  write bandwidth nothing urgent wants. Failure degrades softly: the
+  checkpoint tier is untouched, so a failed spill or fetch falls back
+  to recomputing that one micro-batch — with bitwise-identical
+  results, because BOTH policies run backward from the same residuals
+  (restored or recomputed). The byte closed forms are
   ``repro.core.traffic.act_spill_traffic`` and the ``act_spill=True``
   variants of the ckpt forms; ``plan_traffic`` predicts the meters
-  exactly, and ``perfmodel``/``lp_search`` price spill-vs-recompute so
-  ``"auto"`` can pick per machine (the ``act-battery`` CI suite pins
-  all three legs).
+  exactly, and ``perfmodel``/``lp_search`` price spill-vs-recompute
+  (now with ``lookahead=``-aware stall terms) so ``"auto"`` can pick
+  per machine (the ``act-battery`` CI suite pins all three legs).
 
 * :class:`~repro.io.engine.IOEngine` — request-level scheduler. Each
   request carries a category/route (shared vocabulary with the

@@ -97,7 +97,8 @@ class StripedFiles:
                         raise IOError(
                             f"short read on {name!r} path {p}: "
                             f"{got}/{n} bytes at offset {off}")
-            futs.append(eng.submit_chunk(p, op, priority))
+            futs.append(eng.submit_chunk(p, op, priority, route=route,
+                                         nbytes=hi - lo))
         for f in futs:
             f.result()
 

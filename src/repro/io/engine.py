@@ -11,15 +11,21 @@ Two scheduling levels, chosen so requests never deadlock on each other:
 * **Chunk level** — request bodies issue fixed-size chunk operations on
   the per-path channels (`submit_chunk`), one thread per SSD path, each
   with its own priority heap. Channels never wait on anything, so they
-  always drain, so request workers always finish. The only permitted
-  request-on-request wait is a *gate* (α-delay ordering: a param fetch
-  waiting on an optimizer flush); keep ``workers >= 2`` so the gating
-  request can run while the gated one waits.
+  always drain, so request workers always finish. Two request-on-request
+  waits are permitted: a *gate* (α-delay ordering: a param fetch
+  waiting on an optimizer flush — keep ``workers >= 2`` so the gating
+  request can run while the gated one waits), and a *prefetch consume*
+  (an optimizer flush using a ``PREFETCH_OPT`` hint's state reads) —
+  legal because the consumer cancels a still-queued hint and only ever
+  waits on a running-or-done request, whose body is itself wait-free.
 
 Backpressure is a bounded in-flight byte budget charged at submit and
 released at completion/cancellation. Cancellation is
 best-effort-before-start (`IORequest.cancel`), which is exactly what a
 schedule reset needs: queued prefetches die, a running one is drained.
+:meth:`IOEngine.depth` exposes the live queue state (front heap,
+per-route channel backlog, budget utilization) — the signal the plan
+executor's backpressure-adaptive lookahead throttles on.
 """
 from __future__ import annotations
 
@@ -105,6 +111,9 @@ class IORequest:
     def done(self) -> bool:
         return self.future.done()
 
+    def running(self) -> bool:
+        return self.future.running()
+
     def cancelled(self) -> bool:
         return self.future.cancelled()
 
@@ -116,6 +125,7 @@ class _PriorityWorkers:
         self._heap: List[IORequest] = []
         self._cv = threading.Condition()
         self._closed = False
+        self._running = 0
         self._threads = [threading.Thread(target=self._run,
                                           name=f"{name}-{i}", daemon=True)
                          for i in range(n)]
@@ -139,11 +149,15 @@ class _PriorityWorkers:
                 req = heapq.heappop(self._heap)
             if not req.future.set_running_or_notify_cancel():
                 continue                         # cancelled while queued
+            with self._cv:
+                self._running += 1
             try:
                 req.future.set_result(req.fn())
             except BaseException as e:           # propagate via the future
                 req.future.set_exception(e)
             finally:
+                with self._cv:
+                    self._running -= 1
                 if req._engine is not None and req._settle_once():
                     req._engine._on_done(req)
 
@@ -190,6 +204,11 @@ class IOEngine:
         self._budget = int(config.inflight_bytes)
         self._inflight = 0
         self._bp_cv = threading.Condition()
+        # per-route bytes of chunk ops submitted but not yet finished —
+        # the O(1) backlog signal the adaptive lookahead polls per hint
+        # (depth() reports the same numbers without scanning heaps)
+        self._backlog_lock = threading.Lock()
+        self._route_backlog: Dict[str, int] = {}
         self._closed = False
         self._stats_lock = threading.Lock()
         self._stats = {
@@ -246,16 +265,90 @@ class IOEngine:
 
     # ---------------- chunk level ----------------
     def submit_chunk(self, path_index: int, fn: Callable,
-                     priority: IOPriority) -> Future:
+                     priority: IOPriority, route: str = "",
+                     nbytes: int = 0) -> Future:
         """Enqueue one chunk operation on a path channel. Channels are
-        leaf workers: ``fn`` must not wait on other engine work."""
-        req = IORequest(priority, next(self._seq), "", "", 0, fn, None)
+        leaf workers: ``fn`` must not wait on other engine work.
+        ``route``/``nbytes`` are accounting only — they feed the
+        per-route channel-backlog counter (:meth:`route_backlog`) the
+        adaptive lookahead throttles on."""
+        req = IORequest(priority, next(self._seq), "", route, nbytes, fn,
+                        None)
         with self._stats_lock:
             self._stats["chunk_ops"] += 1
+        if route and nbytes:
+            with self._backlog_lock:
+                self._route_backlog[route] = \
+                    self._route_backlog.get(route, 0) + nbytes
+
+            def _done(_f, route=route, nbytes=nbytes):
+                # fires on completion, failure, AND cancellation
+                with self._backlog_lock:
+                    self._route_backlog[route] -= nbytes
+
+            req.future.add_done_callback(_done)
         self._channels[path_index].submit(req)
         return req.future
 
+    def route_backlog(self, route: str) -> int:
+        """Bytes of chunk work submitted on ``route`` and not yet
+        finished — the O(1) saturation signal (one lock, no heap
+        scans; cheap enough to poll per plan op)."""
+        with self._backlog_lock:
+            return self._route_backlog.get(route, 0)
+
+    @property
+    def inflight_bytes(self) -> int:
+        with self._bp_cv:
+            return self._inflight
+
+    @property
+    def budget_bytes(self) -> int:
+        return self._budget
+
     # ---------------- accounting ----------------
+    def depth(self) -> dict:
+        """Thread-safe live queue-depth snapshot (introspection /
+        diagnostics; the executor's per-hint saturation check uses the
+        O(1) ``inflight_bytes`` / :meth:`route_backlog` accessors that
+        feed the same numbers).
+
+        Keys: ``queued`` (requests waiting in the front heap),
+        ``running`` (request bodies currently executing),
+        ``queued_by_priority`` (name -> count),
+        ``queued_bytes_by_route`` (route -> request bytes waiting),
+        ``channel_queued`` / ``channel_queued_bytes_by_route`` (chunk
+        ops on the path channels, submitted and unfinished),
+        ``inflight_bytes`` / ``budget_bytes`` (the backpressure
+        budget), and ``utilization`` (inflight / budget)."""
+        with self._front._cv:
+            heap = list(self._front._heap)
+            running = self._front._running
+        qbp = {p.name: 0 for p in IOPriority}
+        qbr: Dict[str, int] = {}
+        for req in heap:
+            if req.future.cancelled():
+                continue
+            qbp[IOPriority(req.priority).name] += 1
+            if req.route:
+                qbr[req.route] = qbr.get(req.route, 0) + req.nbytes
+        ch_n = 0
+        for ch in self._channels:
+            with ch._cv:
+                ch_n += len(ch._heap)
+        with self._backlog_lock:
+            ch_bytes = {r: n for r, n in self._route_backlog.items() if n}
+        with self._bp_cv:
+            inflight = self._inflight
+        return {
+            "queued": len(heap), "running": running,
+            "queued_by_priority": qbp, "queued_bytes_by_route": qbr,
+            "channel_queued": ch_n,
+            "channel_queued_bytes_by_route": ch_bytes,
+            "inflight_bytes": inflight, "budget_bytes": self._budget,
+            "utilization": inflight / self._budget if self._budget else 0.0,
+        }
+
     def throttle(self, route: str, nbytes: int):
         """Pace a transfer on a simulated-bandwidth route (no-op when the
         route has no configured cap)."""

@@ -1,22 +1,32 @@
 """The coordinators of GreedySnake §5 (+ the SSDTrain activation stream).
 
-* ParameterCoordinator — per-layer low-precision params in tiered storage;
-  two-stage prefetch (§4.2): SSD->CPU staged two pipeline stages ahead,
-  CPU->device one stage ahead (async engine request), device copy dropped
+* ParameterCoordinator — per-layer low-precision params in tiered
+  storage; two-stage prefetch (§4.2): the async engine request performs
+  the SSD->CPU stage (scheduled by the plan's ``PREFETCH`` hints, up to
+  ``prefetch_depth`` fetches ahead), the CPU->device copy happens at
+  consumption on the caller's thread, and the device copy is dropped
   after use. ``reset()`` cancels in-flight fetches via the I/O engine's
   cancellation API at a schedule boundary.
 * InterLayerTensorCoordinator — activation checkpoints (forward) and
-  inter-layer gradients (backward). Checkpoints are written to CPU and the
-  (1-x_c) tail streamed to SSD; the forward-pass consumer reads the CPU
-  cache (paper: "written to SSD but at the same time cached in CPU"), after
-  which the tail is dropped from CPU; the backward-pass recompute re-reads
-  the tail from SSD. Inter-layer gradients stay in CPU (never SSD).
+  inter-layer gradients (backward). Checkpoints are written to CPU and
+  the (1-x_c) tail streamed to SSD; the forward-pass consumer reads the
+  CPU cache (paper: "written to SSD but at the same time cached in
+  CPU"), after which the tail is dropped from CPU; the backward-pass
+  recompute re-reads the tail from SSD — asynchronously ahead of the
+  consumer when a ``PREFETCH_CKPT`` hint fired (``prefetch_bwd``).
+  Inter-layer gradients stay in CPU (never SSD).
 * OptimizerStepCoordinator — master/momentum/variance in tiered f32
   vectors; the (1-α) fraction updates right after a layer's backward
-  (async, overlapped), the α fraction is flushed just before the layer's
-  next forward (§4.4). Gradients for the α fraction are retained in CPU
-  memory (the paper reuses reclaimed param/ckpt buffers; we meter the
-  bytes the same way).
+  (async, overlapped), the α fraction is flushed at the plan EPILOGUE
+  and gates the layer's next forward fetch (§4.4 as a cross-iteration
+  seam). ``prefetch_late`` (the ``PREFETCH_OPT`` hint) starts the
+  α-tail state reads while backward still runs; ``flush_late``
+  consumes a landed prefetch, cancels a queued one, and reads the tail
+  itself otherwise — byte counters are hint-invariant either way.
+  Gradients for the α fraction are retained in CPU memory (the paper
+  reuses reclaimed param/ckpt buffers; we meter the bytes the same
+  way).
+
 * ActivationCoordinator — the SSDTrain-style activation stream
   (``activation_policy="spill"``): each layer's vjp residuals — the
   non-boundary activations backward needs — are flattened to one byte
@@ -28,6 +38,10 @@
   at ``get`` and the executor degrades that one micro-batch to the
   recompute path — the checkpoint tier it needs is still intact.
 
+Every coordinator counts lookahead hits/misses (``la_hits`` /
+``la_misses``: did the consumer find a completed prefetch?) — the
+hit-rate column of the bench-smoke artifact.
+
 All three submit their asynchronous work to :class:`repro.io.IOEngine`
 rather than raw executors, so a parameter fetch the GPU is about to
 block on is scheduled ahead of a deferrable checkpoint spill, and every
@@ -36,7 +50,7 @@ transfer is budgeted, cancellable, and (optionally) bandwidth-paced.
 from __future__ import annotations
 
 from concurrent.futures import CancelledError
-from typing import Callable, Dict, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +69,17 @@ def _xfer(meter: TrafficMeter, engine: IOEngine, category: str, route: str,
     engine.throttle(route, nbytes)
 
 
+def _cancel_or_drain(req: IORequest):
+    """Dispose of a request whose result nobody wants: cancel it if
+    still queued (no bytes moved), else drain it, swallowing its error
+    — the caller has its own data path (fallback, unwind, teardown)."""
+    if not req.cancel():
+        try:
+            req.result()
+        except Exception:
+            pass
+
+
 class ParameterCoordinator:
     def __init__(self, vectors: List[TieredVector], meter: TrafficMeter,
                  engine: IOEngine, dtype=np.float16):
@@ -63,33 +88,71 @@ class ParameterCoordinator:
         self.engine = engine
         self._futures: Dict[int, IORequest] = {}
         self._gate: Dict[int, Callable[[], None]] = {}
+        self._gate_ready: Dict[int, Callable[[], bool]] = {}
+        self.la_hits = 0        # get() found a completed prefetch
+        self.la_misses = 0      # get() had to wait (or submit) the fetch
 
-    def set_gate(self, l: int, fn: Callable[[], None]):
+    def set_gate(self, l: int, fn: Callable[[], None],
+                 ready: Optional[Callable[[], bool]] = None):
         """Barrier that must complete before layer l's params are read
-        (used to order the α-delayed optimizer flush before the fetch)."""
-        self._gate[l] = fn
+        (used to order the α-delayed optimizer flush before the fetch).
 
-    def _fetch(self, l: int):
+        ``ready`` is the deadlock guard for HINTED fetches: it must
+        return True only when waiting on the gate is BOUNDED (the
+        gating work is running or done, not still queued). A prefetch
+        hint whose gate is not ready is skipped — otherwise a burst of
+        ``prefetch_depth`` gated fetch bodies, all outranking the
+        queued flushes in the priority heap, could occupy every
+        request worker and leave none to run the very flushes they
+        wait on. A consumer-driven ``get`` ignores ``ready``: the
+        executor blocks instead of a worker, so workers stay free to
+        drain the flush."""
+        self._gate[l] = fn
+        if ready is not None:
+            self._gate_ready[l] = ready
+
+    def _fetch(self, l: int) -> np.ndarray:
+        """SSD -> host stage only (the two-stage §4.2 pipeline's first
+        stage, and everything a prefetch worker should do): wait the α
+        gate, then assemble the host vector. The host -> device copy
+        stays in :meth:`get` on the consumer thread — doing it on an
+        engine worker would steal CPU from the overlapped compute the
+        lookahead exists to protect."""
         gate = self._gate.pop(l, None)
+        self._gate_ready.pop(l, None)
         if gate is not None:
             gate()
-        host_arr = self.vectors[l].read()          # meters ssd->cpu
-        dev = jnp.asarray(host_arr)                 # "PCIe" copy
-        _xfer(self.meter, self.engine, "param", "cpu->gpu", host_arr.nbytes)
-        return dev
+        return self.vectors[l].read()              # meters ssd->cpu
 
-    def prefetch(self, l: int):
-        if 0 <= l < len(self.vectors) and l not in self._futures:
-            v = self.vectors[l]
-            self._futures[l] = self.engine.submit(
-                lambda l=l: self._fetch(l),
-                priority=IOPriority.PARAM_FETCH, category="param",
-                route="ssd->cpu", nbytes=v.n * v.dtype.itemsize)
+    def prefetch(self, l: int, consumer: bool = False):
+        """Submit layer l's async host fetch. A HINT (``consumer=False``)
+        is refused while l's gate is not ready (see :meth:`set_gate`);
+        the consumer path always submits — its wait is the executor's,
+        not a worker's."""
+        if not (0 <= l < len(self.vectors)) or l in self._futures:
+            return
+        if not consumer:
+            ready = self._gate_ready.get(l)
+            if l in self._gate and ready is not None and not ready():
+                return
+        v = self.vectors[l]
+        self._futures[l] = self.engine.submit(
+            lambda l=l: self._fetch(l),
+            priority=IOPriority.PARAM_FETCH, category="param",
+            route="ssd->cpu", nbytes=v.n * v.dtype.itemsize)
 
     def get(self, l: int) -> jax.Array:
         if l not in self._futures:
-            self.prefetch(l)
-        return self._futures.pop(l).result()
+            self.prefetch(l, consumer=True)
+            self.la_misses += 1
+        elif self._futures[l].done():
+            self.la_hits += 1
+        else:
+            self.la_misses += 1
+        host_arr = self._futures.pop(l).result()
+        dev = jnp.asarray(host_arr)                 # "PCIe" copy
+        _xfer(self.meter, self.engine, "param", "cpu->gpu", host_arr.nbytes)
+        return dev
 
     def reset(self):
         """Drop all outstanding prefetches at a schedule boundary:
@@ -118,6 +181,9 @@ class InterLayerTensorCoordinator:
         self._pending: Dict[Tuple[str, int, int], IORequest] = {}
         self._shapes: Dict[Tuple[str, int, int], tuple] = {}
         self._device_kept: Dict[Tuple[int, int], jax.Array] = {}
+        self._prefetched: Dict[Tuple[int, int], IORequest] = {}  # bwd tails
+        self.la_hits = 0        # bwd tail was prefetched and had landed
+        self.la_misses = 0      # bwd tail came off the SSD synchronously
 
     def _key(self, kind: str, l: int, m: int) -> str:
         return f"{kind}:{l}:{m}"
@@ -163,24 +229,62 @@ class InterLayerTensorCoordinator:
         _xfer(self.meter, self.engine, "ckpt", "cpu->gpu", arr.nbytes)
         return jnp.asarray(arr).reshape(self._shapes[("c", l, m)])
 
+    def prefetch_bwd(self, l: int, m: int):
+        """``PREFETCH_CKPT`` hint: start the backward tail's SSD re-read
+        now (ckpt priority) instead of blocking the executor at
+        ``get_ckpt_bwd``. No-op when the payload cannot need an SSD
+        read — unknown key, CPU-cached tail, fully host-resident head —
+        or when the spill itself is still in flight (a request body
+        must never wait on another request). Moves the read's bytes
+        earlier, never changes them."""
+        key = (l, m)
+        if key in self._prefetched or ("c", l, m) not in self._shapes:
+            return
+        name = self._key("c", l, m)
+        if name + ":tail" in self.host or name + ":h" not in self.host:
+            return
+        head = self.host.get(name + ":h")
+        n = int(np.prod(self._shapes[("c", l, m)]))
+        if head.size >= n:
+            return
+        wr = self._pending.get(("c", l, m))
+        if wr is not None and not wr.done():
+            return
+        self._prefetched[key] = self.engine.submit(
+            lambda: self.ssd.read(name + ":s", "ckpt"),
+            priority=IOPriority.CKPT_SPILL, category="ckpt",
+            route="ssd->cpu",
+            nbytes=(n - head.size) * head.dtype.itemsize)
+
     def get_ckpt_bwd(self, l: int, m: int) -> jax.Array:
-        """Backward recompute input: CPU head + SSD tail."""
+        """Backward recompute input: CPU head + SSD tail (prefetched by
+        a ``PREFETCH_CKPT`` hint when the lookahead pass placed one)."""
         self._device_kept.pop((l, m), None)
         name = self._key("c", l, m)
         req = self._pending.pop(("c", l, m), None)
         if req is not None:
             req.result()
+        pre = self._prefetched.pop((l, m), None)
         head = self.host.get(name + ":h")
         shape = self._shapes[("c", l, m)]
         n = int(np.prod(shape))
         if head.size < n:
             if name + ":tail" in self.host:      # never trimmed (x=1 case)
                 tail = self.host.get(name + ":tail")
+            elif pre is not None:
+                hit = pre.done()     # evaluate once: it can flip mid-read
+                self.la_hits += hit
+                self.la_misses += not hit
+                tail = pre.result()
+                pre = None
             else:
+                self.la_misses += 1
                 tail = self.ssd.read(name + ":s", "ckpt")
             arr = np.concatenate([head, tail])
         else:
             arr = head
+        if pre is not None:          # prefetched but unused (CPU-cached)
+            _cancel_or_drain(pre)
         _xfer(self.meter, self.engine, "ckpt", "cpu->gpu", arr.nbytes)
         return jnp.asarray(arr).reshape(shape)
 
@@ -208,6 +312,9 @@ class InterLayerTensorCoordinator:
                 except Exception:
                     pass
         self._pending.clear()
+        for req in list(self._prefetched.values()):
+            _cancel_or_drain(req)
+        self._prefetched.clear()
         for kind, l, m in list(self._shapes):
             name = self._key(kind, l, m)
             keys = ([name + ":h", name + ":tail"] if kind == "c"
@@ -222,6 +329,9 @@ class InterLayerTensorCoordinator:
         # its SSD spill in flight: drain it so no orphan write can race a
         # next-step spill of the same name and counters stay deterministic.
         self._device_kept.pop((l, m), None)
+        pre = self._prefetched.pop((l, m), None)
+        if pre is not None:
+            _cancel_or_drain(pre)
         req = self._pending.pop(("c", l, m), None)
         if req is not None:
             req.result()
@@ -283,6 +393,8 @@ class ActivationCoordinator:
         self._n: Dict[Tuple[int, int], int] = {}
         self._pending: Dict[Tuple[int, int], IORequest] = {}     # spills
         self._prefetched: Dict[Tuple[int, int], IORequest] = {}  # reads
+        self.la_hits = 0        # get() found a landed tail prefetch
+        self.la_misses = 0      # get() read the tail synchronously
 
     def _name(self, l: int, m: int) -> str:
         return f"act:{l}:{m}"
@@ -355,9 +467,15 @@ class ActivationCoordinator:
             raise
         k, n = self._k[key], self._n[key]
         if req is not None:
+            hit = req.done()         # evaluate once: it can flip mid-read
+            self.la_hits += hit
+            self.la_misses += not hit
             tail = req.result()
+        elif k < n:
+            self.la_misses += 1
+            tail = self.ssd.read(name + ":s", "act")
         else:
-            tail = self.ssd.read(name + ":s", "act") if k < n else None
+            tail = None
         head = self.host.pop(name + ":h") if k else np.zeros(0, np.uint8)
         if tail is None:
             buf = head
@@ -388,11 +506,8 @@ class ActivationCoordinator:
         key = (l, m)
         for d in (self._prefetched, self._pending):
             req = d.pop(key, None)
-            if req is not None and not req.cancel():
-                try:
-                    req.result()
-                except Exception:
-                    pass
+            if req is not None:
+                _cancel_or_drain(req)
         name = self._name(l, m)
         if name + ":h" in self.host:
             self.host.pop(name + ":h")
@@ -436,9 +551,37 @@ class OptimizerStepCoordinator:
         self.param_dtype = param_dtype
         self._early_futs: Dict[int, IORequest] = {}
         self._late_futs: Dict[int, IORequest] = {}
+        self._late_pre: Dict[int, IORequest] = {}   # PREFETCH_OPT reads
+        self.la_hits = 0        # flush_late consumed a landed prefetch
+        self.la_misses = 0      # flush_late read the α-tail itself
 
     def _k_early(self, l: int) -> int:
         return int(round((1.0 - self.alpha) * self.masters[l].n))
+
+    def prefetch_late(self, l: int):
+        """``PREFETCH_OPT`` hint: start layer l's α-tail state reads
+        (master/m/v of [k_early, n)) now, so the next ``flush_late``
+        only has to run the Adam segment and the writes. Value-safe
+        whenever the previous flush of l has completed (the α gate
+        orders it before l's forward fetch) — the concurrent EARLY
+        segment only writes the disjoint [0, k_early) ranges. No-op if
+        there is no α tail or a hint is already in flight; moves the
+        reads earlier, never changes them."""
+        if l in self._late_pre:
+            return
+        n = self.masters[l].n
+        k = self._k_early(l)
+        if k >= n:
+            return
+
+        def work():
+            return (self.masters[l].read_range(k, n),
+                    self.ms[l].read_range(k, n),
+                    self.vs[l].read_range(k, n))
+
+        self._late_pre[l] = self.engine.submit(
+            work, priority=IOPriority.OPTIMIZER_STATE, category="opt",
+            route="ssd->cpu", nbytes=3 * (n - k) * 4)
 
     def submit_early(self, l: int, g_dev: jax.Array, step: int):
         """After layer l's backward: transfer grads, update the (1-α)
@@ -470,23 +613,44 @@ class OptimizerStepCoordinator:
         vec.write_seg(data, lo)
 
     def flush_late(self, l: int, step: int):
-        """Before layer l's next forward: update the remaining α fraction."""
+        """Flush the remaining α fraction (gate-ordered before layer
+        l's next forward fetch). Consumes a ``prefetch_late`` hint's
+        state reads when one landed; a still-queued hint is cancelled
+        (no bytes moved) and the flush reads the tail itself, so the
+        byte counters are hint-invariant either way."""
         f = self._early_futs.pop(l, None)
         if f is not None:
             f.result()
+        pre = self._late_pre.pop(l, None)
         n = self.masters[l].n
         k = self._k_early(l)
-        if k >= n:
-            return
         key = f"pending_grad:{l}"
-        if key not in self.host:
+        if k >= n or key not in self.host:
+            if pre is not None:
+                _cancel_or_drain(pre)
             return
         g_tail = self.host.pop(key)
+        if pre is not None:
+            if pre.done():
+                self.la_hits += 1
+            elif pre.cancel():
+                pre = None           # never started: read synchronously
+                self.la_misses += 1
+            else:
+                self.la_misses += 1  # running: its bytes are in flight
+        else:
+            self.la_misses += 1
 
         def work():
-            mast = self.masters[l].read_range(k, n)
-            m_ = self.ms[l].read_range(k, n)
-            v_ = self.vs[l].read_range(k, n)
+            if pre is not None:
+                # running-or-done by construction (a queued hint was
+                # cancelled above), so this wait is bounded and cannot
+                # deadlock the request workers
+                mast, m_, v_ = pre.result()
+            else:
+                mast = self.masters[l].read_range(k, n)
+                m_ = self.ms[l].read_range(k, n)
+                v_ = self.vs[l].read_range(k, n)
             self.adam.update(mast, m_, v_, g_tail, step)
             self._write_range(self.masters[l], mast, k, n)
             self._write_range(self.ms[l], m_, k, n)
@@ -502,7 +666,17 @@ class OptimizerStepCoordinator:
         if f is not None:
             f.result()
 
+    def late_settled(self, l: int) -> bool:
+        """Is waiting on layer l's late flush BOUNDED right now — no
+        flush outstanding, or its request already running/done (never
+        still queued)? The α-gate readiness probe for hinted fetches."""
+        f = self._late_futs.get(l)
+        return f is None or f.done() or f.running()
+
     def wait_all(self):
+        for f in list(self._late_pre.values()):
+            _cancel_or_drain(f)     # an orphaned hint's error is moot
+        self._late_pre.clear()
         for d in (self._early_futs, self._late_futs):
             for f in list(d.values()):
                 f.result()

@@ -49,6 +49,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+from collections import defaultdict
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -66,6 +67,8 @@ from repro.offload.coordinators import (ActivationCoordinator,
 from repro.offload.engine import (OffloadConfig, _flatten_tree,
                                   _make_unflatten, act_residual_nbytes,
                                   bind_block_fns, build_block_fns,
+                                  lookahead_stats,
+                                  reset_lookahead_stats,
                                   resolve_activation_policy,
                                   shifted_labels, split_microbatches)
 from repro.offload.executor import execute_plan
@@ -215,6 +218,12 @@ class DataParallelOffloadEngine:
         self.act_policy = resolve_activation_policy(
             ocfg, cfg, self.P, self.dtype.itemsize, self.act_nbytes)
         self.act_fallbacks = 0
+        self.op_seconds: Dict[str, float] = defaultdict(float)
+        self.hint_skips = 0
+        self.act_skips = 0
+        self.backpressure = ocfg.backpressure
+        self.act_adaptive = (ocfg.activation_policy == "auto"
+                             and self.act_policy == "spill")
         self._plan = self._compile_plan()
 
     # ------------------------------------------------------------------
@@ -230,10 +239,13 @@ class DataParallelOffloadEngine:
         """Compile the R-rank vertical plan once (ALLGATHER /
         REDUCE_SCATTER ops; rank-major micro-batch blocks); every
         train_step interprets it with the shared executor."""
+        depth = self.ocfg.resolved_prefetch_depth()
         spec = PlanSpec(L=self.L, M=self.ocfg.num_microbatches,
                         alpha=self.ocfg.alpha, ranks=self.R,
                         act_spill=(self.act_policy == "spill"))
-        return insert_prefetch(compile_vertical(spec, order=self._mb_order))
+        return insert_prefetch(
+            compile_vertical(spec, order=self._mb_order,
+                             opt_epilogue=depth > 0), depth=depth)
 
     # ------------------------------------------------------------------
     # simulated deterministic collectives
@@ -319,6 +331,17 @@ class DataParallelOffloadEngine:
         """Per-rank meter snapshots (index = rank)."""
         return [rk.meter.snapshot() for rk in self.ranks]
 
+    def _coordinators(self):
+        return [c for rk in self.ranks
+                for c in (rk.params_c, rk.ckpt_c, rk.act_c, rk.opt_c)]
+
+    def _lookahead_stats(self) -> Dict[str, object]:
+        """Cross-rank aggregate, same shape as the single-rank engine's."""
+        return lookahead_stats(self, self._coordinators())
+
+    def reset_stats(self):
+        reset_lookahead_stats(self, self._coordinators())
+
     def stats(self) -> Dict[str, object]:
         return {
             "ranks": self.R,
@@ -327,6 +350,7 @@ class DataParallelOffloadEngine:
             "host_peak_nbytes": [rk.host.peak_nbytes for rk in self.ranks],
             "act_policy": self.act_policy,
             "act_fallbacks": self.act_fallbacks,
+            "lookahead": self._lookahead_stats(),
         }
 
     def close(self):

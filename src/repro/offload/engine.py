@@ -57,6 +57,7 @@ from the per-layer pipeline and adds their time separately, §4.5).
 from __future__ import annotations
 
 import dataclasses
+from collections import defaultdict
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -105,10 +106,56 @@ class OffloadConfig:
                                         # residuals (SPILL_ACT/FETCH_ACT)
                                         # instead of recomputing backward
                                         # from the boundary checkpoint;
-                                        # auto asks the perf model
+                                        # auto asks the perf model AND
+                                        # adapts per (layer, micro-batch)
+                                        # at runtime: a spill is skipped
+                                        # (recompute fallback, bitwise-
+                                        # identical) when the live write
+                                        # queue depth says the SSD is
+                                        # saturated
     machine: Optional[MachineParams] = None  # link rates for the "auto"
                                         # decision (None: bandwidth caps
                                         # in `io` if set, else defaults)
+    prefetch_depth: int = 1             # cross-stream lookahead depth:
+                                        # how many same-stream fetches
+                                        # ahead each PREFETCH* hint is
+                                        # placed (0 disables the hints
+                                        # entirely — every fetch becomes
+                                        # a synchronous gate-ordered
+                                        # read; byte counters and
+                                        # results are identical)
+    backpressure: float = 0.5           # adaptive-lookahead threshold:
+                                        # skip hints / degrade "auto"
+                                        # spills once the I/O engine's
+                                        # live depth exceeds this
+                                        # fraction of its in-flight
+                                        # byte budget
+
+    #: guard against typo'd or absurd lookahead depths — a hint placed
+    #: hundreds of fetches ahead would just pin host memory
+    MAX_PREFETCH_DEPTH = 16
+
+    def __post_init__(self):
+        """Reject malformed lookahead knobs at CONSTRUCTION (a typo'd
+        depth should fail where it was written, not when a plan first
+        compiles)."""
+        d = int(self.prefetch_depth)
+        if not 0 <= d <= self.MAX_PREFETCH_DEPTH:
+            raise ValueError(
+                f"prefetch_depth={self.prefetch_depth} is outside "
+                f"[0, {self.MAX_PREFETCH_DEPTH}]; 0 disables the "
+                "lookahead hints, 1 is the classic two-stage pipeline, "
+                "larger values hint further ahead")
+        if not 0.0 < float(self.backpressure) <= 1.0:
+            raise ValueError(
+                f"backpressure={self.backpressure} must be in (0, 1] "
+                "(fraction of the I/O in-flight budget beyond which "
+                "lookahead hints are skipped)")
+
+    def resolved_prefetch_depth(self) -> int:
+        """The validated lookahead depth (0 = hints off)."""
+        self.__post_init__()     # mutable dataclass: re-check at use
+        return int(self.prefetch_depth)
 
     def resolved_wave_size(self) -> int:
         """The W this config's schedule compiles to."""
@@ -274,7 +321,35 @@ def resolve_activation_policy(ocfg: OffloadConfig, cfg, P: int,
     )
     M = ocfg.num_microbatches
     return pick_activation_policy(w, m, M, ocfg.resolved_wave_size(),
-                                  ocfg.alpha, ocfg.ratios)
+                                  ocfg.alpha, ocfg.ratios,
+                                  lookahead=ocfg.resolved_prefetch_depth()
+                                  > 0)
+
+
+def lookahead_stats(eng, coordinators) -> Dict[str, object]:
+    """Prefetch hit/miss counters aggregated over ``coordinators`` plus
+    the engine's adaptive-skip counters and per-op stall meters — the
+    ONE ``stats()["lookahead"]`` shape for both engines (the DP engine
+    passes every rank's coordinator stack)."""
+    from repro.offload.executor import stall_seconds
+    hits = sum(c.la_hits for c in coordinators)
+    misses = sum(c.la_misses for c in coordinators)
+    total = hits + misses
+    return {"hits": hits, "misses": misses,
+            "hit_rate": hits / total if total else 1.0,
+            "hint_skips": eng.hint_skips,
+            "act_skips": eng.act_skips,
+            "stall_s": stall_seconds(eng.op_seconds),
+            "op_seconds": dict(eng.op_seconds)}
+
+
+def reset_lookahead_stats(eng, coordinators) -> None:
+    """Zero the stall meters and lookahead counters (bench warm-up
+    boundary; traffic meters have their own ``reset``)."""
+    eng.op_seconds.clear()
+    eng.hint_skips = eng.act_skips = 0
+    for c in coordinators:
+        c.la_hits = c.la_misses = 0
 
 
 def split_microbatches(tokens: np.ndarray, M: int, micro_batch: int
@@ -379,6 +454,14 @@ class OffloadEngine:
         self.act_policy = resolve_activation_policy(
             ocfg, cfg, self.P, self.dtype.itemsize, self.act_nbytes)
         self.act_fallbacks = 0      # micro-batches degraded to recompute
+        # cross-stream lookahead state: per-op stall meters, adaptive
+        # skip counters, and the backpressure knob the executor reads
+        self.op_seconds: Dict[str, float] = defaultdict(float)
+        self.hint_skips = 0         # hints skipped under backpressure
+        self.act_skips = 0          # "auto" spills degraded per (l, m)
+        self.backpressure = ocfg.backpressure
+        self.act_adaptive = (ocfg.activation_policy == "auto"
+                             and self.act_policy == "spill")
         self._plan = self._compile_plan()
 
     # ------------------------------------------------------------------
@@ -396,13 +479,18 @@ class OffloadEngine:
 
     def _compile_plan(self):
         """Compile the configured schedule once; every train_step
-        interprets the same plan."""
+        interprets the same plan (with the cross-stream lookahead
+        hints at the configured depth)."""
+        depth = self.ocfg.resolved_prefetch_depth()
         spec = PlanSpec(L=self.L, M=self.ocfg.num_microbatches,
                         alpha=self.ocfg.alpha, ranks=1,
                         act_spill=(self.act_policy == "spill"))
+        # depth 0 = the full lookahead-off baseline: no hints AND the
+        # pre-lookahead prologue OPT_LATE ordering
         plan = compile_wave(spec, self.ocfg.resolved_wave_size(),
-                            order=self._mb_order)
-        return insert_prefetch(plan)
+                            order=self._mb_order,
+                            opt_epilogue=depth > 0)
+        return insert_prefetch(plan, depth=depth)
 
     def train_step(self, tokens: np.ndarray) -> float:
         return execute_plan(self, self._plan, tokens)
@@ -432,6 +520,17 @@ class OffloadEngine:
         out["host:peak_nbytes"] = self.host.peak_nbytes
         return out
 
+    def _coordinators(self):
+        return (self.params_c, self.ckpt_c, self.act_c, self.opt_c)
+
+    def _lookahead_stats(self) -> Dict[str, object]:
+        return lookahead_stats(self, self._coordinators())
+
+    def reset_stats(self):
+        """Zero the stall meters and lookahead counters (bench warm-up
+        boundary; the traffic meter has its own ``reset``)."""
+        reset_lookahead_stats(self, self._coordinators())
+
     def stats(self) -> Dict[str, object]:
         """I/O-engine counters + host residency + phase wall-times."""
         return {"io": self.ioe.stats(),
@@ -439,6 +538,7 @@ class OffloadEngine:
                 "host_nbytes": self.host.nbytes(),
                 "act_policy": self.act_policy,
                 "act_fallbacks": self.act_fallbacks,
+                "lookahead": self._lookahead_stats(),
                 "phase_time": dict(self.phase_time)}
 
     def close(self):

@@ -31,6 +31,29 @@ apply ``j_layer_bwd_res`` to residuals — restored or recomputed — so
 spill and recompute runs are bitwise-identical (f32) in losses and
 parameters by construction (pinned in ``tests/test_act_stream.py``).
 
+Cross-stream lookahead: the compiled plan carries one hint op per
+fetch-class op (``PREFETCH`` for params, ``PREFETCH_CKPT`` for backward
+checkpoint tails, ``PREFETCH_ACT`` for the activation stream,
+``PREFETCH_OPT`` for the α-tail optimizer state reads — see
+``repro.core.plan.insert_prefetch``). Hints are pure optimization:
+each one submits the matching coordinator's asynchronous read early
+and moves no bytes of its own, so the executor may legally SKIP any
+hint without changing a single byte counter or output bit. That is
+exactly what the backpressure-adaptive gate does: before issuing a
+hint it consults the owning ``IOEngine.depth()`` and skips when the
+live queue says the SSD is saturated (counted in ``eng.hint_skips``).
+Under ``activation_policy="auto"`` the same signal gates each
+``SPILL_ACT`` per (layer, micro-batch): when the write queue is
+saturated the spill is skipped (``eng.act_skips``) and that
+micro-batch's backward falls back to recompute — bitwise-identical by
+construction, because both policies run backward from the same vjp
+residuals.
+
+Stall metering: every op's wall-clock is accumulated into
+``eng.op_seconds[op.name]``; :func:`stall_seconds` sums the kinds the
+GPU actually blocks on (the FETCH-class ops and the waits), which is
+what the bench-smoke artifact reports and CI gates.
+
 Fault discipline: a mid-plan exception (a failed chunk op surfacing
 through a coordinator) must not leak device slots or host buffers into
 the next step — the executor releases its registers, cancels
@@ -63,6 +86,46 @@ def _ranks(eng):
     return rks if rks is not None else (eng,)
 
 
+#: plan-op kinds whose handler time is GPU-blocking stall (awaiting
+#: storage / collectives / drains) rather than useful compute — the
+#: "stall-seconds" the lookahead exists to shrink.
+STALL_OPS = frozenset(o.name for o in (
+    Op.FETCH_PARAM, Op.ALLGATHER, Op.FETCH_CKPT, Op.FETCH_CKPT_BWD,
+    Op.FETCH_ACT, Op.FETCH_GRAD, Op.GRAD_FETCH_ACC, Op.WAIT_OPT,
+    Op.BARRIER))
+
+
+def stall_seconds(op_seconds) -> float:
+    """Total stall from a per-op-kind seconds map (``eng.op_seconds``)."""
+    return sum(v for k, v in op_seconds.items() if k in STALL_OPS)
+
+
+def _saturated(ioe, frac: float, route: str) -> bool:
+    """The backpressure signal: should a lookahead hint (or an "auto"
+    activation spill) on ``route`` be skipped right now?
+
+    Two saturation conditions, either one suffices:
+
+    * the engine's in-flight byte budget is past ``frac`` utilization
+      (requests already queue at submit — adding lookahead would make
+      the executor BLOCK on the very backpressure it is trying to
+      dodge);
+    * the per-path channels already hold more than ``frac * 16`` chunks
+      of unfinished work on this route (MLP-Offload's idle-level rule:
+      prefetch only INTO idle bandwidth — when the link has a standing
+      backlog, an early read cannot finish early, it just steals
+      link time from whatever the GPU blocks on next).
+
+    Reads only the engine's O(1) counters (``inflight_bytes``,
+    ``route_backlog``) — this is polled per hint op, so it must not
+    scan queues (``IOEngine.depth()`` is the rich, occasional-use
+    snapshot).
+    """
+    if ioe.inflight_bytes > frac * ioe.budget_bytes:
+        return True
+    return ioe.route_backlog(route) > frac * 16 * ioe.chunk_bytes
+
+
 def execute_plan(eng, plan: Plan, tokens: np.ndarray) -> float:
     """Run one training step of ``eng`` by interpreting ``plan``.
     Returns the summed micro-batch loss (same fold order as the
@@ -81,6 +144,9 @@ def execute_plan(eng, plan: Plan, tokens: np.ndarray) -> float:
         return ranks[m // Mr] if multi else ranks[0]
 
     spill = plan.spec.act_spill     # SSDTrain-style activation stream
+    bp = getattr(eng, "backpressure", 0.5)
+    act_adaptive = getattr(eng, "act_adaptive", False)
+    op_seconds = eng.op_seconds
     regs = {}                       # transient device tensors
     p_dev = None                    # current layer's params
     gacc = None                     # f32 layer-gradient accumulator
@@ -106,6 +172,7 @@ def execute_plan(eng, plan: Plan, tokens: np.ndarray) -> float:
     try:
         for op in plan.ops:
             k = op.op
+            t_op = time.perf_counter()
             if k is Op.FETCH_CKPT:
                 regs[("x", op.m)] = \
                     rank_of(op.m).ckpt_c.get_ckpt_fwd(op.l, op.m)
@@ -121,17 +188,43 @@ def execute_plan(eng, plan: Plan, tokens: np.ndarray) -> float:
             elif k is Op.SPILL_ACT:
                 res = regs.pop(("res", op.m))
                 rk = rank_of(op.m)
-                try:
-                    rk.act_c.put(op.l, op.m, res)
-                except Exception:
-                    # a failed spill degrades this micro-batch to the
-                    # recompute path (its checkpoint tier is intact);
-                    # drop whatever the coordinator half-tracked — the
-                    # FETCH_ACT for this key then finds nothing and
-                    # counts the single fallback
-                    rk.act_c.drop(op.l, op.m)
+                if act_adaptive and _saturated(rk.ioe, bp, "cpu->ssd"):
+                    # SSDTrain's adaptive knob per (layer, micro-batch):
+                    # the write queue is saturated, so streaming this
+                    # residual would lengthen the critical path — drop
+                    # it and let FETCH_ACT degrade this micro-batch to
+                    # the recompute path (bitwise-identical results)
+                    eng.act_skips += 1
+                    del res
+                else:
+                    try:
+                        rk.act_c.put(op.l, op.m, res)
+                    except Exception:
+                        # a failed spill degrades this micro-batch to
+                        # the recompute path (its checkpoint tier is
+                        # intact); drop whatever the coordinator
+                        # half-tracked — the FETCH_ACT for this key
+                        # then finds nothing and counts the fallback
+                        rk.act_c.drop(op.l, op.m)
             elif k is Op.PREFETCH_ACT:
-                rank_of(op.m).act_c.prefetch(op.l, op.m)
+                rk = rank_of(op.m)
+                if _saturated(rk.ioe, bp, "ssd->cpu"):
+                    eng.hint_skips += 1
+                else:
+                    rk.act_c.prefetch(op.l, op.m)
+            elif k is Op.PREFETCH_CKPT:
+                rk = rank_of(op.m)
+                if _saturated(rk.ioe, bp, "ssd->cpu"):
+                    eng.hint_skips += 1
+                else:
+                    rk.ckpt_c.prefetch_bwd(op.l, op.m)
+            elif k is Op.PREFETCH_OPT:
+                if ocfg.alpha > 0:
+                    for rk in ranks:
+                        if _saturated(rk.ioe, bp, "ssd->cpu"):
+                            eng.hint_skips += 1
+                        else:
+                            rk.opt_c.prefetch_late(op.l)
             elif k is Op.FETCH_ACT:
                 rk = rank_of(op.m)
                 try:
@@ -176,7 +269,10 @@ def execute_plan(eng, plan: Plan, tokens: np.ndarray) -> float:
                 rank_of(op.m).ckpt_c.drop_ckpt(op.l, op.m)
             elif k is Op.PREFETCH:
                 for rk in ranks:
-                    rk.params_c.prefetch(op.l)
+                    if _saturated(rk.ioe, bp, "ssd->cpu"):
+                        eng.hint_skips += 1
+                    else:
+                        rk.params_c.prefetch(op.l)
             elif k is Op.FETCH_PARAM:
                 p_dev = ranks[0].params_c.get(op.l)
             elif k is Op.ALLGATHER:
@@ -228,12 +324,25 @@ def execute_plan(eng, plan: Plan, tokens: np.ndarray) -> float:
                 eng._reduce_scatter_update(op.l, per_mb_dp, step)
                 per_mb_dp = {}
             elif k is Op.OPT_LATE:
-                if ocfg.alpha > 0 and step > 1:
+                # epilogue seam (default): flush THIS step's α-tail now
+                # (it was retained at WRITEBACK_GRAD) and re-arm the
+                # gate, so the flush overlaps the next step's first
+                # fetches. A tag="pro" op is the lookahead-off PROLOGUE
+                # variant: flush the PREVIOUS step's tail at plan start
+                # (same (gradient, Adam-step) pairs => bitwise-equal).
+                pro = op.tag == "pro"
+                if ocfg.alpha > 0 and not (pro and step <= 1):
                     for rk in ranks:
-                        rk.opt_c.flush_late(op.l, step - 1)
+                        rk.opt_c.flush_late(op.l, step - 1 if pro
+                                            else step)
+                        # the ready probe keeps a hinted fetch from
+                        # parking a request worker on a still-QUEUED
+                        # flush (deadlock guard for deep lookahead)
                         rk.params_c.set_gate(
                             op.l,
                             (lambda c, ll: lambda: c.wait_late(ll))(
+                                rk.opt_c, op.l),
+                            (lambda c, ll: lambda: c.late_settled(ll))(
                                 rk.opt_c, op.l))
             elif k is Op.FOLD_HEAD:
                 for m in op.ms:
@@ -269,6 +378,7 @@ def execute_plan(eng, plan: Plan, tokens: np.ndarray) -> float:
                 flip(op.tag)
             else:                    # pragma: no cover - compiler bug
                 raise ValueError(f"unknown plan op {op!r}")
+            op_seconds[k.name] += time.perf_counter() - t_op
         flip(None)
     except BaseException:
         # Mid-plan failure: free the device slots and cancel in-flight

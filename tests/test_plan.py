@@ -166,11 +166,36 @@ def test_prefetch_two_stage_pipeline_order():
             assert nxt.op is Op.PREFETCH and nxt.l == expect, (i, nxt)
 
 
-def test_prefetch_waits_for_alpha_gates():
+def test_alpha_tail_epilogue_seam():
+    """The cross-iteration seam: the α-tail OPT_LATE flushes are
+    emitted in the plan EPILOGUE (after the last backward writeback),
+    each preceded by exactly one PREFETCH_OPT hint placed at its
+    layer's WRITEBACK_GRAD — so iteration i's tail flush and state
+    reads are in flight together with iteration i+1's first param
+    fetches, whose hints sit at plan START (the fetch gate, runtime
+    state re-armed by each OPT_LATE, enforces flush-before-fetch)."""
     plan = insert_prefetch(compile_vertical(PlanSpec(L=L, M=M, alpha=0.3)))
     kinds = [op.op for op in plan.ops]
-    assert kinds.index(Op.PREFETCH) > max(
-        i for i, k in enumerate(kinds) if k is Op.OPT_LATE)
+    assert plan.count(Op.OPT_LATE) == plan.count(Op.PREFETCH_OPT) == L
+    # next iteration's first param hint is the very first op
+    assert kinds.index(Op.PREFETCH) == 0
+    # every OPT_LATE sits after the last WRITEBACK_GRAD (the epilogue)
+    last_wb = max(i for i, k in enumerate(kinds)
+                  if k is Op.WRITEBACK_GRAD)
+    assert min(i for i, k in enumerate(kinds) if k is Op.OPT_LATE) > last_wb
+    # each PREFETCH_OPT(l) follows its layer's WRITEBACK_GRAD(l) and
+    # precedes its OPT_LATE(l)
+    for l in range(L):
+        wb = next(i for i, op in enumerate(plan.ops)
+                  if op.op is Op.WRITEBACK_GRAD and op.l == l)
+        hint = next(i for i, op in enumerate(plan.ops)
+                    if op.op is Op.PREFETCH_OPT and op.l == l)
+        late = next(i for i, op in enumerate(plan.ops)
+                    if op.op is Op.OPT_LATE and op.l == l)
+        assert wb < hint < late, (l, wb, hint, late)
+    # α = 0 plans carry neither
+    z = insert_prefetch(compile_vertical(SPEC))
+    assert z.count(Op.OPT_LATE) == z.count(Op.PREFETCH_OPT) == 0
 
 
 # ---------------------------------------------------------------------------
