@@ -11,14 +11,26 @@ compiled ``repro.core.plan`` plans walked by the one executor.
 
     PYTHONPATH=src python benchmarks/bench_engine.py
         [--schedule all|vertical|horizontal|wave] [--smoke] [--json OUT]
+        [--trace-dir DIR]
 
 ``--smoke --json OUT`` runs the CI bench-smoke battery — all three
 schedules x activation policy on the tiny config, plus the paced-SSD
 cross-stream-lookahead A/B (interleaved engines at prefetch depth 2 vs
 0, α>0, 2 striped paths with both SSD routes token-bucket-capped) —
-and dumps per-cell throughput, stall-seconds, and prefetch hit-rate
-for ``check_smoke.py`` to gate against the checked-in
+and dumps per-cell throughput, stall-seconds, prefetch hit-rate, and
+the top stall stream (from ``metrics_snapshot()``) for
+``check_smoke.py`` to gate against the checked-in
 ``baseline_smoke.json``.
+
+``--trace-dir DIR`` additionally exports one Chrome trace-event JSON
+per cell (Perfetto-loadable; uploaded as a CI artifact). The measured
+iterations of the schedules x policy cells keep tracing DISABLED —
+that is the regime the ±20% throughput gate protects — and their
+artifacts come from one traced iteration each in a separate pass
+AFTER all measurement (a traced iteration's writeback otherwise
+bleeds into the next cell's measured window). The lookahead A/B
+measures with tracing ENABLED on both engines: its speedup gate
+doubles as the tracing-overhead acceptance check.
 """
 from __future__ import annotations
 
@@ -48,6 +60,8 @@ def _measure(cfg, sched: str, M: int, mb: int, s: int, alpha: float,
              ratios: StorageRatios, iters: int = 3,
              wave_size: int = 0, act_policy: str = "recompute",
              io=None, prefetch_depth: int = 1) -> dict:
+    from repro.obs import top_stall_stream
+
     with tempfile.TemporaryDirectory() as d:
         eng = OffloadEngine(cfg, OffloadConfig(
             schedule=sched, num_microbatches=M, micro_batch=mb, seq_len=s,
@@ -66,7 +80,8 @@ def _measure(cfg, sched: str, M: int, mb: int, s: int, alpha: float,
         dt = (time.perf_counter() - t0) / iters
         routes = dict(eng.meter.bytes)
         traffic = sum(routes.values())
-        look = eng.stats()["lookahead"]
+        snap = eng.metrics_snapshot()
+        look = snap["lookahead"]
         eng.close()
 
     def per_iter(cat):
@@ -80,7 +95,32 @@ def _measure(cfg, sched: str, M: int, mb: int, s: int, alpha: float,
             "act_bytes_per_iter": per_iter("act"),
             "grad_bytes_per_iter": per_iter("grad"),
             "stall_s_per_iter": look["stall_s"] / iters,
-            "prefetch_hit_rate": look["hit_rate"]}
+            "prefetch_hit_rate": look["hit_rate"],
+            "top_stall_stream": top_stall_stream(snap["op_seconds"])}
+
+
+def _export_cell_trace(cfg, sched: str, M: int, mb: int, s: int,
+                       alpha: float, ratios: StorageRatios,
+                       wave_size: int, act_policy: str,
+                       trace_path: str) -> None:
+    """One traced iteration of a smoke cell, exported as Chrome
+    trace-event JSON. Runs in its own engine, AFTER every measured
+    window — a traced iteration's disk writeback bleeds into the next
+    cell's 1-iteration measurement, so the artifacts are produced in a
+    separate pass instead of inline with the gate numbers."""
+    with tempfile.TemporaryDirectory() as d:
+        eng = OffloadEngine(cfg, OffloadConfig(
+            schedule=sched, num_microbatches=M, micro_batch=mb, seq_len=s,
+            alpha=alpha, ratios=ratios, wave_size=wave_size,
+            activation_policy=act_policy), jax.random.PRNGKey(0), d)
+        data = SyntheticLM(cfg.vocab_size, seed=0)
+        eng.train_step(data.batch(M * mb, s))  # compile warm-up
+        eng.tracer.clear()
+        eng.tracer.enable()
+        eng.train_step(data.batch(M * mb, s))
+        eng.finish()
+        eng.tracer.export_chrome(trace_path)
+        eng.close()
 
 
 #: the paced-SSD regime for the lookahead A/B: two striped paths with
@@ -102,17 +142,21 @@ PACED_AB_ITERS = 3
 # the full comparison table, never a crashed bench or --update run.
 
 
-def run_lookahead_ab(rep: Optional[Reporter] = None) -> dict:
+def run_lookahead_ab(rep: Optional[Reporter] = None,
+                     trace_dir: str = "") -> dict:
     """The paced-SSD cross-stream-lookahead A/B (the PR-acceptance
     datapoint): identical engines at ``prefetch_depth=2`` (hints + the
     cross-iteration α-tail seam) vs ``prefetch_depth=0`` (no hints,
     pre-lookahead prologue ordering), α>0, everything on the paced SSD
     tier. Iterations are INTERLEAVED between the two engines so
-    machine drift cancels out of the ratio. Returns the two cells
-    keyed ``paced_alpha_lookahead`` / ``paced_alpha_nolookahead``."""
+    machine drift cancels out of the ratio — and both run with span
+    tracing ENABLED, so the speedup gate doubles as the
+    tracing-overhead acceptance check. Returns the two cells keyed
+    ``paced_alpha_lookahead`` / ``paced_alpha_nolookahead``."""
     import numpy as np
 
     from repro.io import IOConfig
+    from repro.obs import top_stall_stream
 
     rep = rep or Reporter()
     cfg, M, mb, s = get_config("gpt-tiny"), 4, 1, 64
@@ -137,6 +181,8 @@ def run_lookahead_ab(rep: Optional[Reporter] = None) -> dict:
             e.train_step(data.batch(M * mb, s))     # compile warm-up
             e.meter.reset()
             e.reset_stats()
+            e.tracer.clear()
+            e.tracer.enable()       # the A/B measures WITH tracing on
         t = {"la": 0.0, "nl": 0.0}
         for _ in range(PACED_AB_ITERS):
             batch = data.batch(M * mb, s)
@@ -148,7 +194,8 @@ def run_lookahead_ab(rep: Optional[Reporter] = None) -> dict:
             e.finish()
         for key, name, e in (("la", "paced_alpha_lookahead", e_la),
                              ("nl", "paced_alpha_nolookahead", e_nl)):
-            look = e.stats()["lookahead"]
+            snap = e.metrics_snapshot()
+            look = snap["lookahead"]
             dt = t[key] / PACED_AB_ITERS
             cells[name] = {
                 "s_per_iter": dt,
@@ -156,7 +203,11 @@ def run_lookahead_ab(rep: Optional[Reporter] = None) -> dict:
                 "stall_s_per_iter": look["stall_s"] / PACED_AB_ITERS,
                 "prefetch_hit_rate": look["hit_rate"],
                 "hint_skips": look["hint_skips"],
+                "top_stall_stream": top_stall_stream(snap["op_seconds"]),
             }
+            if trace_dir:
+                e.tracer.export_chrome(
+                    os.path.join(trace_dir, f"{name}.trace.json"))
             rep.add(f"smoke/{name}_tokens_per_s",
                     f"{cells[name]['tokens_per_s']:.0f}",
                     f"stall {cells[name]['stall_s_per_iter']:.3f} s/iter, "
@@ -175,15 +226,20 @@ def run_lookahead_ab(rep: Optional[Reporter] = None) -> dict:
     return cells
 
 
-def run_smoke(rep: Optional[Reporter] = None, json_path: str = "") -> dict:
+def run_smoke(rep: Optional[Reporter] = None, json_path: str = "",
+              trace_dir: str = "") -> dict:
     """The CI bench-smoke battery: every schedule x activation policy
     on the tiny config, one measured iteration each, plus the paced-SSD
     cross-stream-lookahead A/B (α>0, hints on vs off). The JSON is the
     artifact ``check_smoke.py`` gates (>20% throughput drop — or a
     stall-seconds regression — vs the checked-in baseline fails the
     push) and MLP-Offload-style per-route traffic numbers ride along
-    for the archaeology."""
+    for the archaeology. With ``trace_dir`` every cell also exports a
+    Chrome trace-event JSON there (see the module docstring for which
+    cells measure traced vs untraced)."""
     rep = rep or Reporter()
+    if trace_dir:
+        os.makedirs(trace_dir, exist_ok=True)
     cfg, M, mb, s = get_config("gpt-tiny"), 4, 1, 64
     ratios = StorageRatios(0.0, 0.0, 0.0)
     rep.section(f"bench-smoke: schedules x activation policy "
@@ -205,7 +261,21 @@ def run_smoke(rep: Optional[Reporter] = None, json_path: str = "") -> dict:
         assert cells[f"{sched}_recompute"]["act_bytes_per_iter"] == 0
 
     # --- the paced-SSD lookahead A/B (the PR-acceptance datapoint) ---
-    cells.update(run_lookahead_ab(rep))
+    cells.update(run_lookahead_ab(rep, trace_dir=trace_dir))
+
+    # --- trace artifacts for the schedule cells, strictly AFTER every
+    # measured window (see _export_cell_trace) ---
+    if trace_dir:
+        for sched, W in (("vertical", 0), ("horizontal", 0), ("wave", 2)):
+            for pol in ("recompute", "spill"):
+                key = f"{sched}_{pol}"
+                _export_cell_trace(
+                    cfg, sched, M, mb, s, alpha=0.0, ratios=ratios,
+                    wave_size=W, act_policy=pol,
+                    trace_path=os.path.join(trace_dir,
+                                            f"{key}.trace.json"))
+        rep.add("smoke/traces", trace_dir,
+                "one Chrome trace-event JSON per cell")
     if json_path:
         import json
         out = {"config": {"model": cfg.name, "M": M, "micro_batch": mb,
@@ -290,10 +360,13 @@ def main(argv=None) -> None:
     ap.add_argument("--json", default="", help="with --smoke: run the "
                     "schedules-x-policy battery and dump per-cell "
                     "throughput for check_smoke.py")
+    ap.add_argument("--trace-dir", default="", help="with --smoke "
+                    "--json: export one Chrome trace-event JSON per "
+                    "cell into this directory (CI artifact)")
     args = ap.parse_args(argv)
     rep = Reporter()
     if args.smoke and args.json:
-        run_smoke(rep, json_path=args.json)
+        run_smoke(rep, json_path=args.json, trace_dir=args.trace_dir)
         return
     if args.schedule in ("all", "vertical", "horizontal"):
         run(rep)

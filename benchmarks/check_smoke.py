@@ -6,7 +6,10 @@ micro-stalls cannot flap CI) — fails the build. Offload systems regress
 silently unless per-route traffic, throughput, AND stall numbers are
 checked on every push (MLP-Offload's lesson). Cells present in only one
 file are reported but do not fail (a new schedule/policy lands before
-its baseline).
+its baseline). Two informational columns from ``metrics_snapshot()``
+ride along ungated: the prefetch hit rate and the top stall stream
+(which plan stream owns the blocked seconds), so a stall-gate failure
+arrives with its attribution in the same table.
 
     python benchmarks/check_smoke.py bench_smoke.json \
         --baseline benchmarks/baseline_smoke.json [--tolerance 0.2] \
@@ -67,6 +70,18 @@ def compare(measured: dict, baseline: dict, tolerance: float,
             limit = bs * (1.0 + stall_tolerance) + STALL_FLOOR_S
             verdict = "REGRESSION" if ms > limit else "ok"
             rows.append((cell, "stall_s", ms, bs, verdict))
+        # informational columns from metrics_snapshot(): the prefetch
+        # hit rate and WHICH stream the stall seconds sit on — never
+        # gated (timing-dependent), always shown so a stall regression
+        # row above comes with its attribution
+        mh = m_cells.get(cell, {}).get("prefetch_hit_rate")
+        bh = b_cells.get(cell, {}).get("prefetch_hit_rate")
+        if mh is not None:
+            rows.append((cell, "hit_rate", mh, bh, "ok"))
+        mt = m_cells.get(cell, {}).get("top_stall_stream")
+        bt = b_cells.get(cell, {}).get("top_stall_stream")
+        if mt is not None:
+            rows.append((cell, "top_stall", mt, bt, "ok"))
     # the lookahead A/B acceptance gate (absolute, within the measured
     # run): hints on must beat hints off on the paced-SSD cells
     la = m_cells.get("paced_alpha_lookahead", {}).get("tokens_per_s")
@@ -137,11 +152,20 @@ def main(argv=None) -> int:
     width = max(len(r[0]) for r in rows) if rows else 10
     bad = 0
     units = {"tokens_per_s": "tok/s", "stall_s": "s/iter",
-             "speedup_x": "x (gate)"}
+             "speedup_x": "x (gate)", "hit_rate": "",
+             "top_stall": "(info)"}
+
+    def fmt(v):
+        if v is None:
+            return "         -"
+        if isinstance(v, str):
+            return f"{v:>10}"
+        return f"{v:10.3f}"
+
     for cell, metric, m, b, verdict in rows:
         unit = units.get(metric, "")
-        ms = f"{m:10.3f}" if m is not None else "         -"
-        bs = f"{b:10.3f}" if b is not None else "         -"
+        ms = fmt(m)
+        bs = fmt(b)
         print(f"  {cell:<{width}} {metric:<12} measured {ms} {unit}   "
               f"baseline {bs} {unit}   {verdict}")
         if verdict == "REGRESSION":

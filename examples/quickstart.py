@@ -1,7 +1,7 @@
 """Quickstart: train a small GPT with GreedySnake's vertical schedule.
 
     PYTHONPATH=src python examples/quickstart.py [--wave W]
-        [--activation-policy recompute|spill|auto]
+        [--activation-policy recompute|spill|auto] [--trace out.json]
 
 Shows the core public APIs:
   1. configs      — pick an architecture (any of the 10 assigned archs
@@ -20,6 +20,12 @@ Shows the core public APIs:
      fetches ahead (0 disables the hints AND the cross-iteration
      α-tail seam); losses are bitwise-identical at every depth, only
      the prefetch hit rate and stall-seconds move
+  7. the observability stack — --trace out.json runs a traced engine,
+     exports a Perfetto-loadable Chrome trace (one track per I/O
+     channel thread + the executor + the hint streams), and prints the
+     ``obs.reconcile`` plan-vs-actual table: every (category, route)
+     byte counter measured by the run against the ``plan_traffic``
+     prediction, EXACT row by row, plus the stall attribution
 """
 import argparse
 import sys
@@ -50,6 +56,10 @@ def main() -> None:
                     help="cross-stream lookahead depth for the adaptive-"
                          "pipeline demo (0 = hints off; the engine "
                          "rejects negative or absurd depths)")
+    ap.add_argument("--trace", default="", metavar="OUT.json",
+                    help="run the observability demo: export a Chrome "
+                         "trace-event JSON here and print the "
+                         "plan-vs-actual reconciliation table")
     args = ap.parse_args()
     cfg = get_config("gpt-tiny")
     print(f"model: {cfg.name}  layers={cfg.num_layers} d={cfg.d_model} "
@@ -158,6 +168,36 @@ def main() -> None:
         ld, bd = results[args.prefetch_depth]
         assert l0 == ld, "lookahead must not change the loss"
         assert b0 == bd, "lookahead must not change a single byte counter"
+
+    # --- 6. span tracing + plan-vs-actual reconciliation --------------
+    # trace=True turns the engine's always-compiled-in tracer on: plan
+    # ops, per-chunk I/O (queue-wait vs transfer, per path), and the
+    # hint lifecycle all land on one timeline. metrics_snapshot() is
+    # the versioned flat contract; obs.reconcile joins it against the
+    # plan's byte predictions — exactly.
+    if args.trace:
+        from repro.obs import reconcile
+        print(f"\nobservability (vertical, alpha=0.3, traced; "
+              f"--trace {args.trace}):")
+        with tempfile.TemporaryDirectory() as d:
+            eng = OffloadEngine(cfg, OffloadConfig(
+                schedule="vertical", num_microbatches=M,
+                micro_batch=1, seq_len=64, alpha=0.3,
+                ratios=StorageRatios(0.0, 0.0, 0.0),
+                prefetch_depth=args.prefetch_depth or 1, trace=True),
+                jax.random.PRNGKey(0), d)
+            tok = make_batch(cfg, M, 64, seed=2)["tokens"]
+            for _ in range(2):
+                eng.train_step(np.asarray(tok))
+            eng.finish()
+            snap = eng.metrics_snapshot()
+            rec = reconcile(eng.plan, snap)
+            path = eng.tracer.export_chrome(args.trace)
+            eng.close()
+        print(f"  {len(eng.tracer)} spans -> {path} "
+              "(open in ui.perfetto.dev)")
+        print(rec.format())
+        assert rec.ok, "plan-vs-actual byte reconciliation must be exact"
     print("OK")
 
 

@@ -85,6 +85,36 @@ def machine_from_bench(source, base: Optional[MachineParams] = None
         pcie_bw=float(data.get("pcie_bw", base.pcie_bw)))
 
 
+def machine_from_snapshot(snapshot, base: Optional[MachineParams] = None
+                          ) -> MachineParams:
+    """MachineParams whose SSD link rates come from a LIVE
+    ``metrics_snapshot()`` — the ``repro.obs`` registry dict both
+    engines export. The snapshot's ``trace.routes`` aggregates hold the
+    measured chunk-span bytes and busy seconds per route (recorded by
+    the I/O channel threads while the tracer was enabled), so
+    ``bytes / busy_s`` is the effective rate the striped device
+    actually delivered under THIS workload — the ROADMAP item-3 feed:
+    ``machine_from_bench`` ingesting live meters instead of a separate
+    ``bench_io.py`` pass. Routes with no measured spans (tracing off,
+    or no traffic on that link) keep ``base``'s rates.
+
+    Takes a plain dict, so ``repro.core`` stays independent of
+    ``repro.obs``."""
+    base = base or MachineParams()
+    routes = (snapshot.get("trace") or {}).get("routes") or {}
+
+    def rate(route: str, default: float) -> float:
+        d = routes.get(route)
+        if not d or not d.get("busy_s") or not d.get("bytes"):
+            return default
+        return float(d["bytes"]) / float(d["busy_s"])
+
+    return dataclasses.replace(
+        base, name=f"{base.name}-live",
+        ssd_read_bw=rate("ssd->cpu", base.ssd_read_bw),
+        ssd_write_bw=rate("cpu->ssd", base.ssd_write_bw))
+
+
 def transfer_seconds(m: MachineParams, route: str, nbytes: float) -> float:
     """Predicted wall-clock for moving ``nbytes`` over one route."""
     bw = {"cpu->gpu": m.pcie_bw, "gpu->cpu": m.pcie_bw,

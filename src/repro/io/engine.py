@@ -24,8 +24,35 @@ released at completion/cancellation. Cancellation is
 best-effort-before-start (`IORequest.cancel`), which is exactly what a
 schedule reset needs: queued prefetches die, a running one is drained.
 :meth:`IOEngine.depth` exposes the live queue state (front heap,
-per-route channel backlog, budget utilization) — the signal the plan
-executor's backpressure-adaptive lookahead throttles on.
+per-route and per-path channel backlog, budget utilization) — the
+signal the plan executor's backpressure-adaptive lookahead throttles
+on.
+
+Request/span lifecycle (what ``repro.obs`` observes)
+====================================================
+
+Every request and chunk op walks the same four edges, and the tracer
+hooks exactly those edges — so a trace is a complete account of where
+each byte's time went:
+
+    submit ──(queue-wait)──> start ──(transfer)──> settle
+       │                       │                      │
+       │ `t_submit` stamped    │ worker pops the      │ exactly-once
+       │ (only while tracing   │ heap, wins           │ `_settle_once`
+       │ is enabled)           │ `set_running_…`      │ accounting
+       └── budget wait (front  └───────────────────────── completion,
+           requests only; charged                         failure or
+           against `inflight_bytes`)                      cancellation
+
+When the shared :class:`repro.obs.Tracer` is enabled, each worker
+records TWO spans per executed request on its own track (= one Chrome
+trace row per thread): a *queue-wait* span (``t_submit`` -> start; how
+long the priority heap held it) and a *transfer* span (start ->
+settle; how long the body ran), both tagged with route, priority
+class, nbytes, and — on channel threads — the SSD path index. A
+cancelled-while-queued request records nothing (no bytes moved). With
+the tracer disabled the only cost is one flag test per submit/run,
+measured by the bench-smoke gate.
 """
 from __future__ import annotations
 
@@ -34,12 +61,15 @@ import heapq
 import itertools
 import os
 import threading
+import time
 from concurrent.futures import Future
 from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.io.bandwidth import BandwidthSimulator
 from repro.io.config import IOConfig
 from repro.io.staging import StagingPool
+from repro.obs.tracer import (CAT_IO_CHUNK, CAT_IO_QUEUE, CAT_IO_REQ,
+                              CAT_IO_REQ_QUEUE)
 
 
 class IOPriority(enum.IntEnum):
@@ -73,7 +103,7 @@ class IORequest:
     ``result()/cancel()/done()`` delegate to the underlying future."""
 
     __slots__ = ("priority", "seq", "category", "route", "nbytes", "fn",
-                 "future", "_engine", "_accounted")
+                 "future", "_engine", "_accounted", "t_submit")
 
     def __init__(self, priority: int, seq: int, category: str, route: str,
                  nbytes: int, fn: Callable, engine: Optional["IOEngine"]):
@@ -86,6 +116,7 @@ class IORequest:
         self.future: Future = Future()
         self._engine = engine
         self._accounted = False
+        self.t_submit = 0.0     # stamped at submit ONLY while tracing
 
     def __lt__(self, other: "IORequest") -> bool:
         return (self.priority, self.seq) < (other.priority, other.seq)
@@ -119,13 +150,18 @@ class IORequest:
 
 
 class _PriorityWorkers:
-    """N threads draining a priority heap of IORequests."""
+    """N threads draining a priority heap of IORequests. When a tracer
+    is attached each thread records queue-wait + execution spans on its
+    own track (``path_index`` marks a single-thread path channel)."""
 
-    def __init__(self, n: int, name: str):
+    def __init__(self, n: int, name: str, tracer=None,
+                 path_index: Optional[int] = None):
         self._heap: List[IORequest] = []
         self._cv = threading.Condition()
         self._closed = False
         self._running = 0
+        self._tracer = tracer
+        self._path_index = path_index
         self._threads = [threading.Thread(target=self._run,
                                           name=f"{name}-{i}", daemon=True)
                          for i in range(n)]
@@ -149,6 +185,10 @@ class _PriorityWorkers:
                 req = heapq.heappop(self._heap)
             if not req.future.set_running_or_notify_cancel():
                 continue                         # cancelled while queued
+            tr = self._tracer
+            rec = tr is not None and tr.enabled and req.t_submit > 0.0
+            if rec:
+                t_start = time.perf_counter()
             with self._cv:
                 self._running += 1
             try:
@@ -158,8 +198,28 @@ class _PriorityWorkers:
             finally:
                 with self._cv:
                     self._running -= 1
+                if rec:
+                    t_end = time.perf_counter()
+                    self._record(tr, req, t_start, t_end)
                 if req._engine is not None and req._settle_once():
                     req._engine._on_done(req)
+
+    def _record(self, tr, req: IORequest, t_start: float, t_end: float):
+        """Queue-wait + transfer spans for one executed request, on this
+        worker thread's track."""
+        track = threading.current_thread().name
+        args = {"route": req.route, "nbytes": req.nbytes,
+                "priority": IOPriority(req.priority).name}
+        if self._path_index is None:             # front (request) pool
+            name = req.category or "req"
+            cat_q, cat_x = CAT_IO_REQ_QUEUE, CAT_IO_REQ
+        else:                                    # path channel
+            name = req.route or "chunk"
+            cat_q, cat_x = CAT_IO_QUEUE, CAT_IO_CHUNK
+            args["path"] = self._path_index
+        tr.record(track, name + ":wait", cat_q, req.t_submit, t_start,
+                  **args)
+        tr.record(track, name, cat_x, t_start, t_end, **args)
 
     def shutdown(self, wait: bool = True):
         with self._cv:
@@ -175,7 +235,11 @@ class IOEngine:
     across one or more SSD paths. See the module docstring."""
 
     def __init__(self, config: Optional[IOConfig] = None, meter=None,
-                 default_root: Optional[str] = None):
+                 default_root: Optional[str] = None, tracer=None,
+                 label: str = ""):
+        # ``tracer``: a shared repro.obs.Tracer (or None); ``label``
+        # prefixes the worker thread names — the DP engine passes
+        # "rank<r>-" so each rank's channels get distinct trace tracks.
         # The default is built HERE, not in the signature: a default
         # argument is evaluated once at class-definition time, so
         # `config: IOConfig = IOConfig()` would hand every
@@ -193,22 +257,31 @@ class IOEngine:
         self.config = config
         self.paths: Sequence[str] = list(paths)
         self.meter = meter
+        self.tracer = tracer
         self.chunk_bytes = int(config.chunk_bytes)
         self.simulator = BandwidthSimulator(config.bandwidth)
         self.staging = StagingPool(config.staging_buffers,
                                    max(self.chunk_bytes, 1 << 20))
         self._seq = itertools.count()
-        self._front = _PriorityWorkers(max(1, config.workers), "io-req")
-        self._channels = [_PriorityWorkers(1, f"io-path{i}")
+        self._front = _PriorityWorkers(max(1, config.workers),
+                                       f"{label}io-req", tracer)
+        self._channels = [_PriorityWorkers(1, f"{label}io-path{i}", tracer,
+                                           path_index=i)
                           for i in range(len(self.paths))]
         self._budget = int(config.inflight_bytes)
         self._inflight = 0
         self._bp_cv = threading.Condition()
         # per-route bytes of chunk ops submitted but not yet finished —
         # the O(1) backlog signal the adaptive lookahead polls per hint
-        # (depth() reports the same numbers without scanning heaps)
+        # (depth() reports the same numbers without scanning heaps) —
+        # plus the per-path counterparts (chunk backlog, cumulative
+        # bytes/ops) that depth()/stats() report for path-level pacing
         self._backlog_lock = threading.Lock()
         self._route_backlog: Dict[str, int] = {}
+        self._path_backlog = [0] * len(self.paths)
+        self._path_backlog_bytes = [0] * len(self.paths)
+        self._path_bytes = [0] * len(self.paths)
+        self._path_chunk_ops = [0] * len(self.paths)
         self._closed = False
         self._stats_lock = threading.Lock()
         self._stats = {
@@ -239,6 +312,9 @@ class IOEngine:
                     self._stats["max_inflight_bytes"], self._inflight)
         req = IORequest(priority, next(self._seq), category, route, nbytes,
                         fn, self)
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            req.t_submit = time.perf_counter()
         try:
             self._front.submit(req)
         except RuntimeError:
@@ -270,23 +346,34 @@ class IOEngine:
         """Enqueue one chunk operation on a path channel. Channels are
         leaf workers: ``fn`` must not wait on other engine work.
         ``route``/``nbytes`` are accounting only — they feed the
-        per-route channel-backlog counter (:meth:`route_backlog`) the
-        adaptive lookahead throttles on."""
+        per-route and per-path channel-backlog counters
+        (:meth:`route_backlog`, ``depth()``) the adaptive lookahead
+        throttles on."""
         req = IORequest(priority, next(self._seq), "", route, nbytes, fn,
                         None)
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            req.t_submit = time.perf_counter()
         with self._stats_lock:
             self._stats["chunk_ops"] += 1
-        if route and nbytes:
-            with self._backlog_lock:
+        with self._backlog_lock:
+            if route and nbytes:
                 self._route_backlog[route] = \
                     self._route_backlog.get(route, 0) + nbytes
+            self._path_backlog[path_index] += 1
+            self._path_backlog_bytes[path_index] += nbytes
+            self._path_bytes[path_index] += nbytes
+            self._path_chunk_ops[path_index] += 1
 
-            def _done(_f, route=route, nbytes=nbytes):
-                # fires on completion, failure, AND cancellation
-                with self._backlog_lock:
+        def _done(_f, route=route, nbytes=nbytes, pi=path_index):
+            # fires on completion, failure, AND cancellation
+            with self._backlog_lock:
+                if route and nbytes:
                     self._route_backlog[route] -= nbytes
+                self._path_backlog[pi] -= 1
+                self._path_backlog_bytes[pi] -= nbytes
 
-            req.future.add_done_callback(_done)
+        req.future.add_done_callback(_done)
         self._channels[path_index].submit(req)
         return req.future
 
@@ -319,6 +406,8 @@ class IOEngine:
         ``queued_bytes_by_route`` (route -> request bytes waiting),
         ``channel_queued`` / ``channel_queued_bytes_by_route`` (chunk
         ops on the path channels, submitted and unfinished),
+        ``channel_backlog_per_path`` / ``channel_backlog_bytes_per_path``
+        (the same backlog split per SSD path, index = path),
         ``inflight_bytes`` / ``budget_bytes`` (the backpressure
         budget), and ``utilization`` (inflight / budget)."""
         with self._front._cv:
@@ -338,6 +427,8 @@ class IOEngine:
                 ch_n += len(ch._heap)
         with self._backlog_lock:
             ch_bytes = {r: n for r, n in self._route_backlog.items() if n}
+            path_backlog = list(self._path_backlog)
+            path_backlog_bytes = list(self._path_backlog_bytes)
         with self._bp_cv:
             inflight = self._inflight
         return {
@@ -345,6 +436,8 @@ class IOEngine:
             "queued_by_priority": qbp, "queued_bytes_by_route": qbr,
             "channel_queued": ch_n,
             "channel_queued_bytes_by_route": ch_bytes,
+            "channel_backlog_per_path": path_backlog,
+            "channel_backlog_bytes_per_path": path_backlog_bytes,
             "inflight_bytes": inflight, "budget_bytes": self._budget,
             "utilization": inflight / self._budget if self._budget else 0.0,
         }
@@ -355,9 +448,16 @@ class IOEngine:
         self.simulator.throttle(route, nbytes)
 
     def stats(self) -> dict:
+        """Cumulative counters (the aggregate keys are stable; the
+        ``*_per_path`` lists — cumulative chunk bytes/ops, index =
+        path — are the per-path bandwidth evidence the ROADMAP
+        multi-path pacing item reads)."""
         with self._stats_lock:
             s = {k: (dict(v) if isinstance(v, dict) else v)
                  for k, v in self._stats.items()}
+        with self._backlog_lock:
+            s["chunk_bytes_per_path"] = list(self._path_bytes)
+            s["chunk_ops_per_path"] = list(self._path_chunk_ops)
         s["inflight_bytes"] = self._inflight
         s["num_paths"] = len(self.paths)
         s["staging_oversized_allocs"] = self.staging.oversized_allocs

@@ -40,7 +40,15 @@
 
 Every coordinator counts lookahead hits/misses (``la_hits`` /
 ``la_misses``: did the consumer find a completed prefetch?) — the
-hit-rate column of the bench-smoke artifact.
+hit-rate column of the bench-smoke artifact. When the engine attaches
+its shared ``repro.obs.Tracer`` (the ``tracer`` attribute, None by
+default), each HINTED prefetch additionally records one lifecycle span
+from issue to settlement, named ``<stream>:<outcome>`` with outcome
+``hit`` (consumer found it landed), ``late`` (consumer waited on it),
+``cancelled`` (reset/teardown/queued-cancel before use) or ``unused``
+(landed but the consumer had a cheaper source) — co-located with the
+``la_hits``/``la_misses`` increments so the trace and the counters can
+never disagree.
 
 All three submit their asynchronous work to :class:`repro.io.IOEngine`
 rather than raw executors, so a parameter fetch the GPU is about to
@@ -49,6 +57,7 @@ transfer is budgeted, cancellable, and (optionally) bandwidth-paced.
 """
 from __future__ import annotations
 
+import time
 from concurrent.futures import CancelledError
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -57,8 +66,32 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.io import IOEngine, IOPriority, IORequest
+from repro.obs.tracer import CAT_HINT
 from repro.offload.stores import HostStore, SSDStore, TieredVector, TrafficMeter
 from repro.optim.cpu_adam import CpuAdam
+
+
+def _hint_issue(coord, key):
+    """Open a hint-lifecycle span: remember the issue time (only while
+    the engine's tracer is recording — one flag test otherwise)."""
+    tr = getattr(coord, "tracer", None)
+    if tr is not None and tr.enabled:
+        coord._hint_t[key] = time.perf_counter()
+
+
+def _hint_settle(coord, stream: str, key, outcome: str):
+    """Close a hint-lifecycle span with its outcome (hit / late /
+    cancelled / unused). No-op for keys never opened (consumer-driven
+    fetches, tracing off)."""
+    t0 = coord._hint_t.pop(key, None)
+    if t0 is None:
+        return
+    tr = getattr(coord, "tracer", None)
+    if tr is None or not tr.enabled:
+        return
+    l, m = key if isinstance(key, tuple) else (key, -1)
+    tr.record(f"hints/{stream}", f"{stream}:{outcome}", CAT_HINT,
+              t0, time.perf_counter(), l=int(l), m=int(m), outcome=outcome)
 
 
 def _xfer(meter: TrafficMeter, engine: IOEngine, category: str, route: str,
@@ -91,6 +124,8 @@ class ParameterCoordinator:
         self._gate_ready: Dict[int, Callable[[], bool]] = {}
         self.la_hits = 0        # get() found a completed prefetch
         self.la_misses = 0      # get() had to wait (or submit) the fetch
+        self.tracer = None      # engine-attached repro.obs.Tracer
+        self._hint_t: Dict[int, float] = {}
 
     def set_gate(self, l: int, fn: Callable[[], None],
                  ready: Optional[Callable[[], bool]] = None):
@@ -140,6 +175,8 @@ class ParameterCoordinator:
             lambda l=l: self._fetch(l),
             priority=IOPriority.PARAM_FETCH, category="param",
             route="ssd->cpu", nbytes=v.n * v.dtype.itemsize)
+        if not consumer:
+            _hint_issue(self, l)
 
     def get(self, l: int) -> jax.Array:
         if l not in self._futures:
@@ -147,8 +184,10 @@ class ParameterCoordinator:
             self.la_misses += 1
         elif self._futures[l].done():
             self.la_hits += 1
+            _hint_settle(self, "param", l, "hit")
         else:
             self.la_misses += 1
+            _hint_settle(self, "param", l, "late")
         host_arr = self._futures.pop(l).result()
         dev = jnp.asarray(host_arr)                 # "PCIe" copy
         _xfer(self.meter, self.engine, "param", "cpu->gpu", host_arr.nbytes)
@@ -158,7 +197,8 @@ class ParameterCoordinator:
         """Drop all outstanding prefetches at a schedule boundary:
         queued requests are cancelled before they touch storage; a
         running one is drained so its buffers settle."""
-        for req in self._futures.values():
+        for l, req in self._futures.items():
+            _hint_settle(self, "param", l, "cancelled")
             if not req.cancel():
                 try:
                     req.result()
@@ -184,6 +224,8 @@ class InterLayerTensorCoordinator:
         self._prefetched: Dict[Tuple[int, int], IORequest] = {}  # bwd tails
         self.la_hits = 0        # bwd tail was prefetched and had landed
         self.la_misses = 0      # bwd tail came off the SSD synchronously
+        self.tracer = None      # engine-attached repro.obs.Tracer
+        self._hint_t: Dict[Tuple[int, int], float] = {}
 
     def _key(self, kind: str, l: int, m: int) -> str:
         return f"{kind}:{l}:{m}"
@@ -255,6 +297,7 @@ class InterLayerTensorCoordinator:
             priority=IOPriority.CKPT_SPILL, category="ckpt",
             route="ssd->cpu",
             nbytes=(n - head.size) * head.dtype.itemsize)
+        _hint_issue(self, key)
 
     def get_ckpt_bwd(self, l: int, m: int) -> jax.Array:
         """Backward recompute input: CPU head + SSD tail (prefetched by
@@ -275,6 +318,7 @@ class InterLayerTensorCoordinator:
                 hit = pre.done()     # evaluate once: it can flip mid-read
                 self.la_hits += hit
                 self.la_misses += not hit
+                _hint_settle(self, "ckpt", (l, m), "hit" if hit else "late")
                 tail = pre.result()
                 pre = None
             else:
@@ -284,6 +328,7 @@ class InterLayerTensorCoordinator:
         else:
             arr = head
         if pre is not None:          # prefetched but unused (CPU-cached)
+            _hint_settle(self, "ckpt", (l, m), "unused")
             _cancel_or_drain(pre)
         _xfer(self.meter, self.engine, "ckpt", "cpu->gpu", arr.nbytes)
         return jnp.asarray(arr).reshape(shape)
@@ -312,7 +357,8 @@ class InterLayerTensorCoordinator:
                 except Exception:
                     pass
         self._pending.clear()
-        for req in list(self._prefetched.values()):
+        for key, req in list(self._prefetched.items()):
+            _hint_settle(self, "ckpt", key, "cancelled")
             _cancel_or_drain(req)
         self._prefetched.clear()
         for kind, l, m in list(self._shapes):
@@ -331,6 +377,7 @@ class InterLayerTensorCoordinator:
         self._device_kept.pop((l, m), None)
         pre = self._prefetched.pop((l, m), None)
         if pre is not None:
+            _hint_settle(self, "ckpt", (l, m), "cancelled")
             _cancel_or_drain(pre)
         req = self._pending.pop(("c", l, m), None)
         if req is not None:
@@ -395,6 +442,8 @@ class ActivationCoordinator:
         self._prefetched: Dict[Tuple[int, int], IORequest] = {}  # reads
         self.la_hits = 0        # get() found a landed tail prefetch
         self.la_misses = 0      # get() read the tail synchronously
+        self.tracer = None      # engine-attached repro.obs.Tracer
+        self._hint_t: Dict[Tuple[int, int], float] = {}
 
     def _name(self, l: int, m: int) -> str:
         return f"act:{l}:{m}"
@@ -446,6 +495,7 @@ class ActivationCoordinator:
             lambda: self.ssd.read(name, "act"),
             priority=IOPriority.ACT, category="act", route="ssd->cpu",
             nbytes=n - k)
+        _hint_issue(self, key)
 
     def get(self, l: int, m: int):
         """Residuals back on device: host head + SSD tail, rebuilt into
@@ -470,6 +520,7 @@ class ActivationCoordinator:
             hit = req.done()         # evaluate once: it can flip mid-read
             self.la_hits += hit
             self.la_misses += not hit
+            _hint_settle(self, "act", key, "hit" if hit else "late")
             tail = req.result()
         elif k < n:
             self.la_misses += 1
@@ -504,6 +555,7 @@ class ActivationCoordinator:
         (swallowing their errors — the caller is falling back) and free
         the host head."""
         key = (l, m)
+        _hint_settle(self, "act", key, "cancelled")
         for d in (self._prefetched, self._pending):
             req = d.pop(key, None)
             if req is not None:
@@ -554,6 +606,8 @@ class OptimizerStepCoordinator:
         self._late_pre: Dict[int, IORequest] = {}   # PREFETCH_OPT reads
         self.la_hits = 0        # flush_late consumed a landed prefetch
         self.la_misses = 0      # flush_late read the α-tail itself
+        self.tracer = None      # engine-attached repro.obs.Tracer
+        self._hint_t: Dict[int, float] = {}
 
     def _k_early(self, l: int) -> int:
         return int(round((1.0 - self.alpha) * self.masters[l].n))
@@ -582,6 +636,7 @@ class OptimizerStepCoordinator:
         self._late_pre[l] = self.engine.submit(
             work, priority=IOPriority.OPTIMIZER_STATE, category="opt",
             route="ssd->cpu", nbytes=3 * (n - k) * 4)
+        _hint_issue(self, l)
 
     def submit_early(self, l: int, g_dev: jax.Array, step: int):
         """After layer l's backward: transfer grads, update the (1-α)
@@ -627,17 +682,21 @@ class OptimizerStepCoordinator:
         key = f"pending_grad:{l}"
         if k >= n or key not in self.host:
             if pre is not None:
+                _hint_settle(self, "opt", l, "unused")
                 _cancel_or_drain(pre)
             return
         g_tail = self.host.pop(key)
         if pre is not None:
             if pre.done():
                 self.la_hits += 1
+                _hint_settle(self, "opt", l, "hit")
             elif pre.cancel():
                 pre = None           # never started: read synchronously
                 self.la_misses += 1
+                _hint_settle(self, "opt", l, "cancelled")
             else:
                 self.la_misses += 1  # running: its bytes are in flight
+                _hint_settle(self, "opt", l, "late")
         else:
             self.la_misses += 1
 
@@ -674,7 +733,8 @@ class OptimizerStepCoordinator:
         return f is None or f.done() or f.running()
 
     def wait_all(self):
-        for f in list(self._late_pre.values()):
+        for l, f in list(self._late_pre.items()):
+            _hint_settle(self, "opt", l, "cancelled")
             _cancel_or_drain(f)     # an orphaned hint's error is moot
         self._late_pre.clear()
         for d in (self._early_futs, self._late_futs):

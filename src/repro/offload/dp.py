@@ -85,7 +85,7 @@ class _Rank:
     rebound to that shard-local storage."""
 
     def __init__(self, index: int, world: int, root: str,
-                 iocfg: IOConfig, ocfg: OffloadConfig):
+                 iocfg: IOConfig, ocfg: OffloadConfig, tracer=None):
         self.index = index
         self.world = world
         self.root = root
@@ -95,7 +95,10 @@ class _Rank:
         # fetch may wait on an optimizer request (α-delay ordering)
         if iocfg.workers < 3:
             iocfg = dataclasses.replace(iocfg, workers=3)
-        self.ioe = IOEngine(iocfg, meter=self.meter, default_root=root)
+        # the tracer is SHARED across ranks (one timeline); the label
+        # keeps each rank's worker threads on distinct trace tracks
+        self.ioe = IOEngine(iocfg, meter=self.meter, default_root=root,
+                            tracer=tracer, label=f"rank{index}-")
         self.ssd = SSDStore(root, self.meter, engine=self.ioe)
         self.p_vecs: List[TieredVector] = []
         self.m_master: List[TieredVector] = []
@@ -148,9 +151,14 @@ class DataParallelOffloadEngine:
 
         base_io = ocfg.io if ocfg.io is not None else \
             IOConfig(workers=ocfg.io_workers)
+        from repro.obs import Tracer
+        self.tracer = Tracer()
+        if ocfg.trace:
+            self.tracer.enable()
         self.ranks: List[_Rank] = [
             _Rank(r, ranks, os.path.join(workdir, f"rank{r}"),
-                  base_io.shard_for_rank(r, ranks), ocfg)
+                  base_io.shard_for_rank(r, ranks), ocfg,
+                  tracer=self.tracer)
             for r in range(ranks)]
 
         # ---- init params layerwise, identical key-split to the
@@ -209,6 +217,8 @@ class DataParallelOffloadEngine:
             # residual payloads ride its own IOEngine + SSD path set
             rk.act_c = ActivationCoordinator(x.act, rk.host, rk.ssd,
                                              rk.meter, rk.ioe)
+        for c in self._coordinators():
+            c.tracer = self.tracer
 
         bind_block_fns(self, build_block_fns(cfg, self.kind,
                                              self._unflatten))
@@ -341,6 +351,19 @@ class DataParallelOffloadEngine:
 
     def reset_stats(self):
         reset_lookahead_stats(self, self._coordinators())
+
+    @property
+    def plan(self):
+        """The compiled DP plan this engine interprets each step
+        (what ``obs.reconcile`` joins a snapshot against)."""
+        return self._plan
+
+    def metrics_snapshot(self) -> Dict[str, object]:
+        """The versioned flat metrics registry snapshot — same schema
+        as the single-rank engine's, per-rank fields as lists; see
+        :func:`repro.obs.build_snapshot`."""
+        from repro.obs import build_snapshot
+        return build_snapshot(self)
 
     def stats(self) -> Dict[str, object]:
         return {

@@ -124,6 +124,11 @@ class OffloadConfig:
                                         # a synchronous gate-ordered
                                         # read; byte counters and
                                         # results are identical)
+    trace: bool = False                 # start with the repro.obs span
+                                        # tracer recording (it can also
+                                        # be toggled later via
+                                        # eng.tracer.enable/disable;
+                                        # off = one flag test per site)
     backpressure: float = 0.5           # adaptive-lookahead threshold:
                                         # skip hints / degrade "auto"
                                         # spills once the I/O engine's
@@ -344,10 +349,17 @@ def lookahead_stats(eng, coordinators) -> Dict[str, object]:
 
 
 def reset_lookahead_stats(eng, coordinators) -> None:
-    """Zero the stall meters and lookahead counters (bench warm-up
-    boundary; traffic meters have their own ``reset``)."""
+    """Zero EVERY measured-iteration meter — stall/phase timers,
+    adaptive-skip and fallback counters, lookahead hit/miss counts —
+    so a second measured iteration after reset reports exactly like the
+    first (bench warm-up boundary; traffic meters have their own
+    ``reset``, and the I/O engines' cumulative stats are lifetime
+    counters by design)."""
     eng.op_seconds.clear()
     eng.hint_skips = eng.act_skips = 0
+    eng.act_fallbacks = 0
+    for k in eng.phase_time:
+        eng.phase_time[k] = 0.0
     for c in coordinators:
         c.la_hits = c.la_misses = 0
 
@@ -388,7 +400,14 @@ class OffloadEngine:
             IOConfig(workers=ocfg.io_workers)
         if iocfg.workers < 3:
             iocfg = dataclasses.replace(iocfg, workers=3)
-        self.ioe = IOEngine(iocfg, meter=self.meter, default_root=workdir)
+        # one shared span tracer for every layer that touches bytes
+        # (executor, IOEngine threads, coordinators); off by default
+        from repro.obs import Tracer
+        self.tracer = Tracer()
+        if ocfg.trace:
+            self.tracer.enable()
+        self.ioe = IOEngine(iocfg, meter=self.meter, default_root=workdir,
+                            tracer=self.tracer)
         self.ssd = SSDStore(workdir, self.meter, engine=self.ioe)
         self.step_num = 0
         self._closed = False
@@ -444,6 +463,8 @@ class OffloadEngine:
             param_dtype=np.dtype(ocfg.param_dtype))
         self.act_c = ActivationCoordinator(x.act, self.host, self.ssd,
                                            self.meter, self.ioe)
+        for c in self._coordinators():
+            c.tracer = self.tracer
 
         self._build_jit_fns()
         # size the activation stream exactly (one (layer, mb) residual
@@ -527,9 +548,22 @@ class OffloadEngine:
         return lookahead_stats(self, self._coordinators())
 
     def reset_stats(self):
-        """Zero the stall meters and lookahead counters (bench warm-up
-        boundary; the traffic meter has its own ``reset``)."""
+        """Zero every measured-iteration meter (warm-up boundary; the
+        traffic meter has its own ``reset``)."""
         reset_lookahead_stats(self, self._coordinators())
+
+    @property
+    def plan(self):
+        """The compiled schedule plan this engine interprets each step
+        (what ``obs.reconcile`` joins a snapshot against)."""
+        return self._plan
+
+    def metrics_snapshot(self) -> Dict[str, object]:
+        """The versioned flat metrics registry snapshot — subsumes
+        :meth:`stats`, JSON-serializable; see
+        :func:`repro.obs.build_snapshot` for the schema."""
+        from repro.obs import build_snapshot
+        return build_snapshot(self)
 
     def stats(self) -> Dict[str, object]:
         """I/O-engine counters + host residency + phase wall-times."""

@@ -49,10 +49,22 @@ micro-batch's backward falls back to recompute — bitwise-identical by
 construction, because both policies run backward from the same vjp
 residuals.
 
-Stall metering: every op's wall-clock is accumulated into
-``eng.op_seconds[op.name]``; :func:`stall_seconds` sums the kinds the
-GPU actually blocks on (the FETCH-class ops and the waits), which is
-what the bench-smoke artifact reports and CI gates.
+Stall metering and the span lifecycle: every op's wall-clock is
+accumulated into ``eng.op_seconds[op.name]``; :func:`stall_seconds`
+sums the kinds the GPU actually blocks on (the FETCH-class ops and the
+waits), which is what the bench-smoke artifact reports and CI gates,
+and ``repro.obs.stall_by_stream`` folds into per-stream attribution.
+When the engine's shared ``repro.obs.Tracer`` is enabled, the SAME
+``t_op``/``dt`` measurement that feeds ``op_seconds`` is also recorded
+as one span per executed op on the executor's track, tagged with the
+full plan-op identity — op kind, layer ``l``, micro-batch ``m``, wave
+index (counted at the ``PHASE("fwd")`` flips), owning rank, and step —
+so a Chrome trace lines the op timeline up against the I/O channel
+tracks (queue-wait/transfer spans recorded by ``repro.io.engine``) and
+the coordinators' hint-lifecycle spans. Each backpressure skip
+(``hint_skips`` / ``act_skips``) additionally drops an instant event at
+the moment of the skip. Tracing off costs one flag test at plan start;
+the op loop is unchanged.
 
 Fault discipline: a mid-plan exception (a failed chunk op surfacing
 through a coordinator) must not leak device slots or host buffers into
@@ -76,7 +88,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.plan import Op, Plan
+from repro.obs.tracer import CAT_HINT, CAT_PLAN
 from repro.offload.coordinators import _xfer
+
+#: the executor's Chrome-trace track name (one executor thread drives
+#: all ranks; per-op rank identity rides in the span args)
+EXEC_TRACK = "exec"
 
 
 def _ranks(eng):
@@ -147,6 +164,15 @@ def execute_plan(eng, plan: Plan, tokens: np.ndarray) -> float:
     bp = getattr(eng, "backpressure", 0.5)
     act_adaptive = getattr(eng, "act_adaptive", False)
     op_seconds = eng.op_seconds
+    tracer = getattr(eng, "tracer", None)
+    rec = tracer is not None and tracer.enabled
+    wave = -1                       # becomes 0 at the first PHASE("fwd")
+
+    def skip_evt(kind: str, op):
+        """Instant event marking one backpressure skip (hint or spill)."""
+        if rec:
+            tracer.instant(EXEC_TRACK, f"skip:{kind}", CAT_HINT,
+                           op=op.op.name, l=op.l, m=op.m)
     regs = {}                       # transient device tensors
     p_dev = None                    # current layer's params
     gacc = None                     # f32 layer-gradient accumulator
@@ -195,6 +221,7 @@ def execute_plan(eng, plan: Plan, tokens: np.ndarray) -> float:
                     # it and let FETCH_ACT degrade this micro-batch to
                     # the recompute path (bitwise-identical results)
                     eng.act_skips += 1
+                    skip_evt("act_spill", op)
                     del res
                 else:
                     try:
@@ -210,12 +237,14 @@ def execute_plan(eng, plan: Plan, tokens: np.ndarray) -> float:
                 rk = rank_of(op.m)
                 if _saturated(rk.ioe, bp, "ssd->cpu"):
                     eng.hint_skips += 1
+                    skip_evt("hint", op)
                 else:
                     rk.act_c.prefetch(op.l, op.m)
             elif k is Op.PREFETCH_CKPT:
                 rk = rank_of(op.m)
                 if _saturated(rk.ioe, bp, "ssd->cpu"):
                     eng.hint_skips += 1
+                    skip_evt("hint", op)
                 else:
                     rk.ckpt_c.prefetch_bwd(op.l, op.m)
             elif k is Op.PREFETCH_OPT:
@@ -223,6 +252,7 @@ def execute_plan(eng, plan: Plan, tokens: np.ndarray) -> float:
                     for rk in ranks:
                         if _saturated(rk.ioe, bp, "ssd->cpu"):
                             eng.hint_skips += 1
+                            skip_evt("hint", op)
                         else:
                             rk.opt_c.prefetch_late(op.l)
             elif k is Op.FETCH_ACT:
@@ -271,6 +301,7 @@ def execute_plan(eng, plan: Plan, tokens: np.ndarray) -> float:
                 for rk in ranks:
                     if _saturated(rk.ioe, bp, "ssd->cpu"):
                         eng.hint_skips += 1
+                        skip_evt("hint", op)
                     else:
                         rk.params_c.prefetch(op.l)
             elif k is Op.FETCH_PARAM:
@@ -375,10 +406,20 @@ def execute_plan(eng, plan: Plan, tokens: np.ndarray) -> float:
             elif k is Op.BARRIER:
                 jax.effects_barrier()
             elif k is Op.PHASE:
+                if op.tag == "fwd":
+                    wave += 1
                 flip(op.tag)
             else:                    # pragma: no cover - compiler bug
                 raise ValueError(f"unknown plan op {op!r}")
-            op_seconds[k.name] += time.perf_counter() - t_op
+            dt = time.perf_counter() - t_op
+            op_seconds[k.name] += dt
+            if rec:
+                # the SAME measurement op_seconds accumulates, as a span
+                tracer.record(
+                    EXEC_TRACK, k.name, CAT_PLAN, t_op, t_op + dt,
+                    l=op.l, m=op.m, wave=wave,
+                    rank=(op.m // Mr if multi and op.m >= 0 else 0),
+                    step=step)
         flip(None)
     except BaseException:
         # Mid-plan failure: free the device slots and cancel in-flight
