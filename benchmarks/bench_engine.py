@@ -16,9 +16,12 @@ compiled ``repro.core.plan`` plans walked by the one executor.
 ``--smoke --json OUT`` runs the CI bench-smoke battery — all three
 schedules x activation policy on the tiny config, plus the paced-SSD
 cross-stream-lookahead A/B (interleaved engines at prefetch depth 2 vs
-0, α>0, 2 striped paths with both SSD routes token-bucket-capped) —
-and dumps per-cell throughput, stall-seconds, prefetch hit-rate, and
-the top stall stream (from ``metrics_snapshot()``) for
+0, α>0, 2 striped paths with both SSD routes token-bucket-capped) and
+the online-autotuner recovery A/B (an engine hand-tuned for a
+mis-specified machine vs the same start plus an ``AutotuneController``
+that must measure, re-solve, and swap its way back to the hand-tuned
+plan) — and dumps per-cell throughput, stall-seconds, prefetch
+hit-rate, and the top stall stream (from ``metrics_snapshot()``) for
 ``check_smoke.py`` to gate against the checked-in
 ``baseline_smoke.json``.
 
@@ -45,11 +48,12 @@ import jax
 
 try:
     from benchmarks.common import Reporter
-    from benchmarks.check_smoke import LOOKAHEAD_GAIN_GATE
+    from benchmarks.check_smoke import (AUTOTUNE_RECOVERY_GATE,
+                                        LOOKAHEAD_GAIN_GATE)
 except ImportError:     # run directly as a script: benchmarks/ not a pkg
     sys.path.insert(0, os.path.dirname(__file__))
     from common import Reporter
-    from check_smoke import LOOKAHEAD_GAIN_GATE
+    from check_smoke import AUTOTUNE_RECOVERY_GATE, LOOKAHEAD_GAIN_GATE
 from repro.configs import get_config
 from repro.core.perfmodel import StorageRatios
 from repro.data import SyntheticLM
@@ -226,6 +230,116 @@ def run_lookahead_ab(rep: Optional[Reporter] = None,
     return cells
 
 
+#: the deliberately MIS-SPECIFIED machine the autotune A/B hands its
+#: controller: compute and DRAM scaled to the gpt-tiny smoke workload,
+#: but the SSD link rates left at the A100-node datasheet numbers
+#: (6/3 GB/s) — ~25-50x faster than the paced device below. Under the
+#: datasheet rates the LP scores prefetch depth a wash (win ~1.004x),
+#: so a hand config of depth 0 is a perfectly reasonable read of this
+#: machine; under the LIVE measured ~0.125 GB/s the same LP prefers
+#: the lookahead plan by ~1.1x. The gap between those two solves is
+#: exactly what the live-rate ingestion fix recovers.
+AB_MISSPEC_MACHINE_KW = dict(gpu_flops=5e9, cpu_mem=2.5e7)
+
+
+def run_autotune_ab(rep: Optional[Reporter] = None,
+                    trace_dir: str = "") -> dict:
+    """The online-autotuner recovery A/B on the paced 2-path device:
+    a HAND-TUNED engine (prefetch depth 2, the knob the lookahead A/B
+    proves out) vs an engine started from the mis-specified machine's
+    hand config (depth 0) with an ``AutotuneController`` attached.
+    The controller gets a short adaptation phase (measured windows +
+    ``post_step``), then both engines run ``PACED_AB_ITERS``
+    INTERLEAVED timed iterations so machine drift cancels out of the
+    ratio. ``check_smoke.py`` gates adaptive/hand-tuned tokens/s at
+    ``AUTOTUNE_RECOVERY_GATE`` — the autotuner must claw back the
+    throughput the bad machine description gave away. Returns cells
+    keyed ``paced_autotune_handtuned`` / ``paced_autotune_adaptive``."""
+    from repro.core.perfmodel import MachineParams
+    from repro.io import IOConfig
+    from repro.offload import AutotuneConfig, AutotuneController
+
+    rep = rep or Reporter()
+    cfg, M, mb, s = get_config("gpt-tiny"), 4, 1, 64
+    rep.section(f"bench-smoke: paced-SSD autotune recovery A/B (alpha="
+                f"{PACED_ALPHA}, 2 paths, caps {PACED_BANDWIDTH})")
+
+    def build(root, depth):
+        paths = [os.path.join(root, "p0"), os.path.join(root, "p1")]
+        return OffloadEngine(cfg, OffloadConfig(
+            schedule="vertical", num_microbatches=M, micro_batch=mb,
+            seq_len=s, alpha=PACED_ALPHA,
+            ratios=StorageRatios(0.0, 0.0, 0.0),
+            io=IOConfig(paths=paths, bandwidth=dict(PACED_BANDWIDTH)),
+            prefetch_depth=depth), jax.random.PRNGKey(0), root)
+
+    cells = {}
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        e_ht, e_at = build(d1, 2), build(d2, 0)
+        ctl = AutotuneController(e_at, AutotuneConfig(
+            interval=1, hysteresis=0.05, cooldown=0, max_retunes=1,
+            prefetch_depths=(0, 2),
+            machine=MachineParams(name="ab-misspec",
+                                  **AB_MISSPEC_MACHINE_KW)))
+        data = SyntheticLM(cfg.vocab_size, seed=0)
+        for e in (e_ht, e_at):
+            e.train_step(data.batch(M * mb, s))     # compile warm-up
+            e.tracer.enable()
+        # --- adaptation phase: measured windows until the swap lands
+        # (bounded — a blocked/holding controller just times as-is and
+        # fails the recovery gate with its decision log in the cell) ---
+        adapt_steps = 0
+        ctl._begin_window()         # drop warm-up bytes from window 0
+        for _ in range(3):
+            e_at.train_step(data.batch(M * mb, s))
+            ctl.post_step()
+            adapt_steps += 1
+            if ctl.retunes:
+                break
+        adapted_depth = e_at.ocfg.resolved_prefetch_depth()
+        # --- interleaved timed window (no further controller windows:
+        # the retune budget is spent) ---
+        for e in (e_ht, e_at):
+            e.meter.reset()
+            e.reset_stats()
+            e.tracer.clear()
+        t = {"ht": 0.0, "at": 0.0}
+        for _ in range(PACED_AB_ITERS):
+            batch = data.batch(M * mb, s)
+            for key, e in (("ht", e_ht), ("at", e_at)):
+                t0 = time.perf_counter()
+                e.train_step(batch)
+                t[key] += time.perf_counter() - t0
+        for e in (e_ht, e_at):
+            e.finish()
+        actions = [dc["action"] for dc in ctl.decisions]
+        for key, name, e in (("ht", "paced_autotune_handtuned", e_ht),
+                             ("at", "paced_autotune_adaptive", e_at)):
+            dt = t[key] / PACED_AB_ITERS
+            cells[name] = {
+                "s_per_iter": dt,
+                "tokens_per_s": M * mb * s / dt,
+                "prefetch_depth": e.ocfg.resolved_prefetch_depth(),
+            }
+            if trace_dir:
+                e.tracer.export_chrome(
+                    os.path.join(trace_dir, f"{name}.trace.json"))
+        cells["paced_autotune_adaptive"].update(
+            retunes=ctl.retunes, adapt_steps=adapt_steps,
+            decisions=actions)
+        e_ht.close()
+        e_at.close()
+    ht, at = (cells["paced_autotune_handtuned"],
+              cells["paced_autotune_adaptive"])
+    ratio = at["tokens_per_s"] / ht["tokens_per_s"]
+    rep.add("smoke/autotune_recovery", f"{ratio:.2f}x",
+            f"adapted depth 0 -> {adapted_depth} in {adapt_steps} "
+            f"step(s), decisions {actions} (check_smoke gates this at "
+            f">= {AUTOTUNE_RECOVERY_GATE}x)")
+    return cells
+
+
 def run_smoke(rep: Optional[Reporter] = None, json_path: str = "",
               trace_dir: str = "") -> dict:
     """The CI bench-smoke battery: every schedule x activation policy
@@ -262,6 +376,10 @@ def run_smoke(rep: Optional[Reporter] = None, json_path: str = "",
 
     # --- the paced-SSD lookahead A/B (the PR-acceptance datapoint) ---
     cells.update(run_lookahead_ab(rep, trace_dir=trace_dir))
+
+    # --- the autotune recovery A/B: mis-specified machine, live-rate
+    # ingestion, mid-training plan swap (gated by check_smoke) ---
+    cells.update(run_autotune_ab(rep, trace_dir=trace_dir))
 
     # --- trace artifacts for the schedule cells, strictly AFTER every
     # measured window (see _export_cell_trace) ---

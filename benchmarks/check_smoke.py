@@ -39,6 +39,15 @@ STALL_FLOOR_S = 0.05        # absolute slack under the stall gate
 #: at α>0 must show at least this tokens/s ratio with hints on vs off
 LOOKAHEAD_GAIN_GATE = 1.10
 
+#: the online-autotuner recovery floor (absolute, on the measured
+#: run): starting from the mis-specified machine's hand config, the
+#: controller's measure -> LP re-solve -> mid-training plan swap must
+#: bring the paced-SSD smoke back to at least this fraction of the
+#: hand-tuned engine's tokens/s (they time INTERLEAVED iterations, so
+#: the ratio is drift-free; ~1.0 when the swap lands, ~0.7 when the
+#: controller fails to act)
+AUTOTUNE_RECOVERY_GATE = 0.9
+
 REFRESH_CMD = "python benchmarks/check_smoke.py --update"
 
 
@@ -91,6 +100,16 @@ def compare(measured: dict, baseline: dict, tolerance: float,
         rows.append(("lookahead_ab", "speedup_x", gain,
                      LOOKAHEAD_GAIN_GATE,
                      "ok" if gain >= LOOKAHEAD_GAIN_GATE
+                     else "REGRESSION"))
+    # the autotune recovery gate (absolute, within the measured run):
+    # the controller-adapted engine must reach the hand-tuned one
+    ht = m_cells.get("paced_autotune_handtuned", {}).get("tokens_per_s")
+    at = m_cells.get("paced_autotune_adaptive", {}).get("tokens_per_s")
+    if ht is not None and at is not None and ht > 0:
+        ratio = at / ht
+        rows.append(("autotune_ab", "recovery_x", ratio,
+                     AUTOTUNE_RECOVERY_GATE,
+                     "ok" if ratio >= AUTOTUNE_RECOVERY_GATE
                      else "REGRESSION"))
     return rows
 
@@ -152,8 +171,8 @@ def main(argv=None) -> int:
     width = max(len(r[0]) for r in rows) if rows else 10
     bad = 0
     units = {"tokens_per_s": "tok/s", "stall_s": "s/iter",
-             "speedup_x": "x (gate)", "hit_rate": "",
-             "top_stall": "(info)"}
+             "speedup_x": "x (gate)", "recovery_x": "x (gate)",
+             "hit_rate": "", "top_stall": "(info)"}
 
     def fmt(v):
         if v is None:

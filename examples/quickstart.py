@@ -2,6 +2,7 @@
 
     PYTHONPATH=src python examples/quickstart.py [--wave W]
         [--activation-policy recompute|spill|auto] [--trace out.json]
+        [--autotune]
 
 Shows the core public APIs:
   1. configs      — pick an architecture (any of the 10 assigned archs
@@ -26,6 +27,12 @@ Shows the core public APIs:
      ``obs.reconcile`` plan-vs-actual table: every (category, route)
      byte counter measured by the run against the ``plan_traffic``
      prediction, EXACT row by row, plus the stall attribution
+  8. the online autotuner — --autotune attaches an
+     ``AutotuneController``: every window it measures live route
+     rates from the chunk spans (``machine_from_snapshot``), re-runs
+     Algorithm 1 per candidate plan, and hot-swaps the engine's plan
+     between iterations when the predicted win clears hysteresis
+     (gated on the reconcile error), then prints the decision log
 """
 import argparse
 import sys
@@ -60,6 +67,11 @@ def main() -> None:
                     help="run the observability demo: export a Chrome "
                          "trace-event JSON here and print the "
                          "plan-vs-actual reconciliation table")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the online-autotuner demo: script an SSD "
+                         "slowdown into the live-rate feed and watch "
+                         "the controller re-solve Algorithm 1 and "
+                         "hot-swap the plan mid-training")
     args = ap.parse_args()
     cfg = get_config("gpt-tiny")
     print(f"model: {cfg.name}  layers={cfg.num_layers} d={cfg.d_model} "
@@ -198,6 +210,58 @@ def main() -> None:
               "(open in ui.perfetto.dev)")
         print(rec.format())
         assert rec.ok, "plan-vs-actual byte reconciliation must be exact"
+
+    # --- 7. the online autotuner (measure -> re-solve -> swap) --------
+    # The controller measures each window's live route rates from the
+    # chunk spans, re-runs Algorithm 1 per candidate plan under that
+    # machine, and hot-swaps the engine between iterations when the
+    # predicted win clears hysteresis. The demo scripts a device
+    # slowdown into the snapshot feed (a 1 MB/s SSD on a compute-bound
+    # box — the scenario where the lookahead plan genuinely wins) so
+    # the retune is deterministic; on real drifting hardware the same
+    # loop runs off the unscripted `metrics_snapshot()`.
+    if args.autotune:
+        from repro.core.perfmodel import MachineParams
+        from repro.offload import AutotuneConfig, AutotuneController
+        print("\nonline autotuner (vertical, alpha=0.3, depth 0, "
+              "scripted SSD drift; --autotune):")
+        with tempfile.TemporaryDirectory() as d:
+            eng = OffloadEngine(cfg, OffloadConfig(
+                schedule="vertical", num_microbatches=M,
+                micro_batch=1, seq_len=64, alpha=0.3,
+                ratios=StorageRatios(0.0, 0.0, 0.0),
+                prefetch_depth=0),
+                jax.random.PRNGKey(0), d)
+            real = eng.metrics_snapshot
+
+            def drifted():
+                snap = real()
+                for r in snap["trace"]["routes"].values():
+                    if r.get("bytes"):
+                        r["busy_wall_s"] = r["bytes"] / 1e6
+                        r["rate_bps"] = 1e6
+                return snap
+
+            eng.metrics_snapshot = drifted
+            ctl = AutotuneController(eng, AutotuneConfig(
+                interval=1, hysteresis=0.0, cooldown=1,
+                prefetch_depths=(0, 2),
+                machine=MachineParams(name="drift", gpu_flops=1e8,
+                                      ssd_read_bw=1e6, ssd_write_bw=1e6,
+                                      cpu_mem=2e7)))
+            tok = make_batch(cfg, M, 64, seed=2)["tokens"]
+            for _ in range(3):
+                eng.train_step(np.asarray(tok))
+                dec = ctl.post_step()        # interval=1: every step
+                reason = dec.get("reason", "")
+                print(f"  window {dec['window']}: {dec['action']:8s} "
+                      f"{reason}")
+            depth = eng.ocfg.resolved_prefetch_depth()
+            print(f"  retunes {ctl.retunes}  prefetch depth 0 -> {depth}")
+            assert ctl.retunes >= 1 and depth == 2, \
+                "the drifted LP must pick the lookahead plan"
+            eng.finish()
+            eng.close()
     print("OK")
 
 

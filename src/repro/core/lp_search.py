@@ -46,7 +46,15 @@ def solve_config(m: MachineParams, w: Workload, n: int, alpha: float,
                  wave: Optional[int] = None,
                  act_policy: str = "recompute",
                  lookahead: bool = True) -> Optional[LPSolution]:
-    """One LP solve for fixed (n, α). Returns None if infeasible.
+    """One LP solve for fixed (n, α).
+
+    Return contract (the autotuner distinguishes the two): ``None``
+    means STRICTLY "the LP is infeasible under these machine/workload
+    constraints" — a legitimate answer a controller should score as
+    "candidate unusable". Invalid ARGUMENTS (``n`` not divisible by
+    ``num_gpus``, a ``wave`` under DP, ``wave`` not a divisor of
+    ``n``, an unknown ``act_policy``) raise ``ValueError`` — a caller
+    bug, never to be silently conflated with infeasibility.
 
     With ``num_gpus=R > 1`` the LP models the R-way data-parallel
     vertical schedule: ``w`` is the FULL-model workload, each rank owns
@@ -94,16 +102,23 @@ def solve_config(m: MachineParams, w: Workload, n: int, alpha: float,
     ms_full, grad_full = w.ms, w.grad_bytes
     if R > 1:
         if n % R:
-            return None
+            raise ValueError(
+                f"solve_config: n={n} must be divisible by num_gpus={R}")
         if wave not in (None, n):
-            return None          # DP plans are vertical (W == n)
+            # DP plans are vertical (W == n)
+            raise ValueError(
+                f"solve_config: wave={wave} is invalid under "
+                f"num_gpus={R} (DP plans are vertical; pass wave=None "
+                f"or wave=n)")
         wave = None              # normalize before n is divided by R
         w = dataclasses.replace(w, ms=w.ms / R, os_bytes=w.os_bytes / R,
                                 grad_bytes=w.grad_bytes / R)
         n = n // R
     W = n if wave is None else int(wave)
     if W < 1 or n % W:
-        return None
+        raise ValueError(
+            f"solve_config: wave={W} must be a positive divisor of "
+            f"n={n}")
     nw = n // W
     t_f1, t_b1 = compute_times(w, m)
     if spill:

@@ -91,12 +91,21 @@ def machine_from_snapshot(snapshot, base: Optional[MachineParams] = None
     ``metrics_snapshot()`` — the ``repro.obs`` registry dict both
     engines export. The snapshot's ``trace.routes`` aggregates hold the
     measured chunk-span bytes and busy seconds per route (recorded by
-    the I/O channel threads while the tracer was enabled), so
-    ``bytes / busy_s`` is the effective rate the striped device
-    actually delivered under THIS workload — the ROADMAP item-3 feed:
-    ``machine_from_bench`` ingesting live meters instead of a separate
-    ``bench_io.py`` pass. Routes with no measured spans (tracing off,
-    or no traffic on that link) keep ``base``'s rates.
+    the I/O channel threads while the tracer was enabled) — the
+    ROADMAP item-3 feed: ``machine_from_bench`` ingesting live meters
+    instead of a separate ``bench_io.py`` pass. Routes with no measured
+    spans (tracing off, or no traffic on that link) keep ``base``'s
+    rates.
+
+    Measured-rate semantics: a route's rate is ``rate_bps = bytes /
+    busy_wall_s`` where ``busy_wall_s`` is the UNION of the chunk-span
+    intervals across all P concurrent path-channel threads (see
+    ``Tracer.summary``). Dividing by the plain per-channel ``busy_s``
+    sum instead would read ~1/P of the striped device's aggregate
+    bandwidth and make every consumer (the LP solver, the autotuner)
+    systematically under-provision the plan. Old snapshots without
+    ``rate_bps`` fall back to ``bytes / busy_s`` — correct only for
+    single-path engines.
 
     Takes a plain dict, so ``repro.core`` stays independent of
     ``repro.obs``."""
@@ -105,7 +114,11 @@ def machine_from_snapshot(snapshot, base: Optional[MachineParams] = None
 
     def rate(route: str, default: float) -> float:
         d = routes.get(route)
-        if not d or not d.get("busy_s") or not d.get("bytes"):
+        if not d or not d.get("bytes"):
+            return default
+        if d.get("rate_bps"):
+            return float(d["rate_bps"])
+        if not d.get("busy_s"):
             return default
         return float(d["bytes"]) / float(d["busy_s"])
 

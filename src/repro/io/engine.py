@@ -384,6 +384,31 @@ class IOEngine:
         with self._backlog_lock:
             return self._route_backlog.get(route, 0)
 
+    def least_loaded_path(self) -> int:
+        """Index of the path channel with the smallest queued chunk-byte
+        backlog — MLP-Offload's multi-path idle-level rule as a live
+        feedback signal (O(P) under one lock). Data placement is static
+        offset-striping, so this is ADVISORY: the autotune controller
+        records it per decision and the per-path-pacing follow-on
+        (ROADMAP item 3) consumes it to throttle hot paths; it does not
+        re-route committed chunks."""
+        with self._backlog_lock:
+            return min(range(len(self._path_backlog_bytes)),
+                       key=self._path_backlog_bytes.__getitem__)
+
+    def path_imbalance(self) -> float:
+        """``max/mean`` of the per-path chunk-byte backlogs (1.0 =
+        perfectly balanced; 0.0 = all paths idle). The steering-signal
+        scalar the autotuner logs alongside each decision: a sustained
+        imbalance says the striped layout is not using some path's
+        idle capacity, which per-path pacing can reclaim."""
+        with self._backlog_lock:
+            total = sum(self._path_backlog_bytes)
+            if not total:
+                return 0.0
+            return (max(self._path_backlog_bytes) * len(
+                self._path_backlog_bytes)) / total
+
     @property
     def inflight_bytes(self) -> int:
         with self._bp_cv:

@@ -154,7 +154,11 @@ def reconcile(plan, snapshot: dict, machine=None,
 
     machine = machine if machine is not None else MachineParams()
     pred_s = route_seconds(machine, agg)
-    meas_s = {route: float(d.get("busy_s", 0.0))
+    # measured route-seconds are the WALL-clock envelope of the chunk
+    # spans (union across the concurrent path channels), comparable to
+    # route_seconds' aggregate-bandwidth prediction; the per-channel
+    # busy_s sum would over-count a P-path device by up to P×
+    meas_s = {route: float(d.get("busy_wall_s", d.get("busy_s", 0.0)))
               for route, d in (snapshot.get("trace") or {})
               .get("routes", {}).items()}
     stalls = sorted(stall_by_stream(snapshot.get("op_seconds", {})).items(),

@@ -101,6 +101,12 @@ def build_snapshot(eng) -> Dict[str, object]:
         "plan_costs": costs,
         "trace": trace,
     }
+    # additive: the online autotuner's decision log (attached by
+    # repro.offload.autotune.AutotuneController) rides along so a
+    # snapshot archives WHY the plan changed mid-run
+    log = getattr(eng, "autotune_log", None)
+    if log is not None:
+        snap["autotune"] = list(log)
     return _jsonable(snap)
 
 

@@ -44,6 +44,26 @@ CAT_PLAN = "plan"              # one span per executed plan op
 CAT_HINT = "hint"              # hint lifecycle (issued -> outcome)
 
 
+def _union_seconds(intervals: List[Tuple[float, float]]) -> float:
+    """Total length of the union of ``(t0, t1)`` intervals — the
+    wall-clock envelope a set of (possibly concurrent) chunk transfers
+    actually occupied. Disjoint intervals sum; overlapping ones count
+    once."""
+    if not intervals:
+        return 0.0
+    total = 0.0
+    cur_lo = cur_hi = None
+    for lo, hi in sorted(intervals):
+        if cur_hi is None or lo > cur_hi:
+            if cur_hi is not None:
+                total += cur_hi - cur_lo
+            cur_lo, cur_hi = lo, hi
+        elif hi > cur_hi:
+            cur_hi = hi
+    total += cur_hi - cur_lo
+    return total
+
+
 class Tracer:
     """Thread-safe ring-buffered span recorder (see module docstring).
 
@@ -103,12 +123,26 @@ class Tracer:
     def summary(self) -> dict:
         """Flat aggregates for ``metrics_snapshot()``: per-route chunk
         transfer time/bytes and queue-wait time, measured from the
-        channel-thread spans. ``routes[r]["bytes"]/["busy_s"]`` is the
-        *measured* effective rate of route ``r`` — the live-meter feed
-        for ``perfmodel.machine_from_snapshot``."""
+        channel-thread spans.
+
+        Concurrency semantics (the live-rate feed contract): a striped
+        device runs P path-channel threads CONCURRENTLY, so per-route
+        ``busy_s`` (the plain sum of chunk-span durations across all
+        channels) over-counts wall time by up to P× — ``bytes /
+        busy_s`` would read ~1/P of the aggregate rate the device
+        actually delivered. ``busy_wall_s`` is therefore the measure
+        rates must divide by: the UNION of the chunk-span intervals per
+        route, which equals the summed durations when channels run
+        serially and the wall-clock envelope when they overlap (a
+        single channel reduces to ``busy_s`` exactly). ``rate_bps =
+        bytes / busy_wall_s`` is the aggregate effective rate —
+        the feed for ``perfmodel.machine_from_snapshot``. ``channels``
+        counts the distinct threads that carried the route."""
         routes: Dict[str, dict] = {}
+        intervals: Dict[str, list] = {}
+        tracks: Dict[str, set] = {}
         n_spans = 0
-        for _track, _name, cat, t0, t1, args in self.spans():
+        for track, _name, cat, t0, t1, args in self.spans():
             n_spans += 1
             if t1 is None or cat not in (CAT_IO_CHUNK, CAT_IO_QUEUE):
                 continue
@@ -121,6 +155,13 @@ class Tracer:
                 d["busy_s"] += t1 - t0
                 d["bytes"] += int((args or {}).get("nbytes", 0))
                 d["ops"] += 1
+                intervals.setdefault(route, []).append((t0, t1))
+                tracks.setdefault(route, set()).add(track)
+        for route, d in routes.items():
+            wall = _union_seconds(intervals.get(route, []))
+            d["busy_wall_s"] = wall
+            d["channels"] = len(tracks.get(route, ()))
+            d["rate_bps"] = d["bytes"] / wall if wall > 0 else 0.0
         return {"enabled": self.enabled, "spans": n_spans,
                 "dropped": self.dropped, "routes": routes}
 

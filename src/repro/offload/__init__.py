@@ -1,4 +1,7 @@
 from repro.io import IOConfig, IOEngine, IOPriority  # noqa: F401
+from repro.offload.autotune import (AutotuneConfig,  # noqa: F401
+                                    AutotuneController,
+                                    route_seconds_error)
 from repro.offload.dp import (DataParallelOffloadEngine,  # noqa: F401
                               shard_bounds)
 from repro.offload.engine import OffloadConfig, OffloadEngine  # noqa: F401

@@ -206,6 +206,17 @@ class ParameterCoordinator:
                     pass
         self._futures.clear()
 
+    def clear_gates(self):
+        """Drop every armed α gate. NOT part of :meth:`reset`: the
+        RESET_PARAMS plan op calls ``reset()`` mid-step between waves,
+        where the armed gates must survive to order the next wave's
+        fetches after their optimizer tails. Only the between-iteration
+        plan-swap seam (``apply_plan_config``) may clear them — there
+        the α tails have been flushed and waited, so a stale gate would
+        only deadlock the next plan's first fetch."""
+        self._gate.clear()
+        self._gate_ready.clear()
+
 
 class InterLayerTensorCoordinator:
     """Checkpoints: dict (layer, mb) -> (host_head, ssd_name or None).

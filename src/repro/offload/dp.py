@@ -329,6 +329,43 @@ class DataParallelOffloadEngine:
             rk.ckpt_c.wait_pending()
             rk.act_c.wait_pending()
 
+    # ------------------------------------------------------------------
+    def apply_plan_config(self, prefetch_depth: Optional[int] = None,
+                          activation_policy: Optional[str] = None):
+        """Between-iteration plan hot-swap (the autotuner seam), DP
+        variant: same quiesce-and-clear contract as
+        :meth:`OffloadEngine.apply_plan_config` applied to EVERY rank
+        stack. DP plans are vertical by construction, so there is no
+        ``wave_size`` knob here — ``lp_search.solve_config`` rejects
+        one under ``num_gpus>1`` for the same reason."""
+        changes = {}
+        if prefetch_depth is not None:
+            changes["prefetch_depth"] = int(prefetch_depth)
+        if activation_policy is not None:
+            changes["activation_policy"] = str(activation_policy)
+        trial = dataclasses.replace(self.ocfg, **changes)
+        trial.resolved_prefetch_depth()
+        if trial.activation_policy not in ("recompute", "spill", "auto"):
+            raise ValueError(
+                f"unknown activation_policy "
+                f"{trial.activation_policy!r}")
+        self.finish()
+        for rk in self.ranks:
+            rk.params_c.reset()
+            rk.params_c.clear_gates()
+            rk.ckpt_c.clear()
+            rk.act_c.clear()
+        for k, v in changes.items():
+            setattr(self.ocfg, k, v)
+        if activation_policy is not None:
+            self.act_policy = resolve_activation_policy(
+                self.ocfg, self.cfg, self.P, self.dtype.itemsize,
+                self.act_nbytes)
+            self.act_adaptive = (self.ocfg.activation_policy == "auto"
+                                 and self.act_policy == "spill")
+        self._plan = self._compile_plan()
+        return self._plan
+
     def read_params(self, l: int) -> np.ndarray:
         """The full low-precision param vector of layer l, assembled from
         the rank shards (validation/checkpointing)."""

@@ -82,7 +82,7 @@ from repro.optim.cpu_adam import CpuAdam
 __all__ = ["OffloadConfig", "OffloadEngine", "build_block_fns",
            "bind_block_fns", "mb_order", "split_microbatches",
            "shifted_labels", "act_residual_nbytes",
-           "resolve_activation_policy"]
+           "resolve_activation_policy", "engine_workload"]
 
 
 @dataclasses.dataclass
@@ -305,18 +305,34 @@ def resolve_activation_policy(ocfg: OffloadConfig, cfg, P: int,
         return pol
     if pol != "auto":
         raise ValueError(f"unknown activation_policy {pol!r}")
-    from repro.core.perfmodel import (Workload, machine_from_bandwidth,
+    from repro.core.perfmodel import (machine_from_bandwidth,
                                       pick_activation_policy)
     m = ocfg.machine
     if m is None:
         bw = ocfg.io.bandwidth if ocfg.io is not None else None
         m = machine_from_bandwidth(bw) if bw else MachineParams()
+    w = engine_workload(ocfg, cfg, P, itemsize, act_nbytes)
+    M = ocfg.num_microbatches
+    return pick_activation_policy(w, m, M, ocfg.resolved_wave_size(),
+                                  ocfg.alpha, ocfg.ratios,
+                                  lookahead=ocfg.resolved_prefetch_depth()
+                                  > 0)
+
+
+def engine_workload(ocfg: OffloadConfig, cfg, P: int, itemsize: int,
+                    act_nbytes: int):
+    """The ENGINE-accurate :class:`repro.core.perfmodel.Workload`: the
+    FLOP model comes from the one place it is maintained
+    (``Workload.from_config``); only the byte fields are overridden
+    with this engine's actual sizes — its dtype, its flat layer
+    vector, its measured residual payload. The one workload both the
+    "auto" activation-policy pricing and the online autotuner solve
+    against (an autotuner solving the paper's bf16 defaults would
+    retune the wrong machine)."""
+    from repro.core.perfmodel import Workload
     L = cfg.num_layers
     tokens = ocfg.micro_batch * ocfg.seq_len
-    # the FLOP model comes from the one place it is maintained; only
-    # the byte fields are overridden with this engine's actual sizes
-    # (its dtype, its flat layer vector, its measured residual payload)
-    w = dataclasses.replace(
+    return dataclasses.replace(
         Workload.from_config(cfg, ocfg.micro_batch, ocfg.seq_len),
         ms=L * P * itemsize,
         cs=L * tokens * cfg.d_model * itemsize,
@@ -324,11 +340,6 @@ def resolve_activation_policy(ocfg: OffloadConfig, cfg, P: int,
         grad_bytes=L * P * 4,
         as_bytes=L * act_nbytes,
     )
-    M = ocfg.num_microbatches
-    return pick_activation_policy(w, m, M, ocfg.resolved_wave_size(),
-                                  ocfg.alpha, ocfg.ratios,
-                                  lookahead=ocfg.resolved_prefetch_depth()
-                                  > 0)
 
 
 def lookahead_stats(eng, coordinators) -> Dict[str, object]:
@@ -535,6 +546,71 @@ class OffloadEngine:
         self.opt_c.wait_all()
         self.ckpt_c.wait_pending()
         self.act_c.wait_pending()
+
+    # ------------------------------------------------------------------
+    def apply_plan_config(self, wave_size: Optional[int] = None,
+                          prefetch_depth: Optional[int] = None,
+                          activation_policy: Optional[str] = None):
+        """Hot-swap the compiled plan BETWEEN iterations — the
+        autotuner's retune seam. Changes any subset of the tunable
+        knobs (``wave_size`` retargets the schedule to the wave hybrid
+        with that W; ``prefetch_depth``; ``activation_policy``) and
+        recompiles; the next ``train_step`` interprets the new plan.
+
+        The seam must not leak per-plan state, in either direction:
+
+        * α tails are flushed and waited (``finish()`` semantics —
+          identical to what a prologue plan would apply at the next
+          step's start, so the flush is trajectory-neutral for both
+          the epilogue and prologue OPT_LATE placements);
+        * outstanding param prefetches are cancelled and the armed α
+          gates dropped (:meth:`ParameterCoordinator.clear_gates` —
+          the tails just settled, so a surviving gate could only
+          deadlock the new plan's first fetch);
+        * checkpoint device-kept slots / pending spills / bwd-tail
+          prefetches and activation residue are cleared — the new plan
+          re-derives its own working set.
+
+        Knobs are validated on a throwaway config copy BEFORE anything
+        mutates, so a bad value raises ``ValueError`` and leaves the
+        engine running its current plan. ``prefetch_depth`` and
+        ``activation_policy`` swaps are bitwise trajectory-neutral by
+        the PR-4/5 invariants; a ``wave_size`` swap is exact w.r.t. an
+        engine compiled with the new plan from the same checkpointed
+        state (the satellite pin), though the W axis itself regroups
+        the f32 gradient fold across waves."""
+        changes = {}
+        if wave_size is not None:
+            changes.update(schedule="wave", wave_size=int(wave_size))
+        if prefetch_depth is not None:
+            changes["prefetch_depth"] = int(prefetch_depth)
+        if activation_policy is not None:
+            changes["activation_policy"] = str(activation_policy)
+        trial = dataclasses.replace(self.ocfg, **changes)
+        trial.resolved_wave_size()          # raises on a bad W
+        trial.resolved_prefetch_depth()     # raises on a bad depth
+        if trial.activation_policy not in ("recompute", "spill", "auto"):
+            raise ValueError(
+                f"unknown activation_policy "
+                f"{trial.activation_policy!r}")
+        # quiesce: flush + wait the α tails, drain ckpt/act streams
+        self.finish()
+        # drop per-plan residue on every coordinator
+        self.params_c.reset()
+        self.params_c.clear_gates()
+        self.ckpt_c.clear()
+        self.act_c.clear()
+        # commit the knobs and recompile
+        for k, v in changes.items():
+            setattr(self.ocfg, k, v)
+        if activation_policy is not None:
+            self.act_policy = resolve_activation_policy(
+                self.ocfg, self.cfg, self.P, self.dtype.itemsize,
+                self.act_nbytes)
+            self.act_adaptive = (self.ocfg.activation_policy == "auto"
+                                 and self.act_policy == "spill")
+        self._plan = self._compile_plan()
+        return self._plan
 
     def traffic(self) -> Dict[str, int]:
         out = self.meter.snapshot()

@@ -263,7 +263,9 @@ def test_dp_perfmodel_and_lp():
     assert sol is not None
     assert sol.t_f >= 0.5 * w.ms / m.interconnect_bw - 1e-9
     assert sol.t_b >= 0.5 * (w.ms + w.grad_bytes) / m.interconnect_bw - 1e-9
-    assert solve_config(m, w, 7, 0.2, num_gpus=2) is None  # n % R != 0
+    with pytest.raises(ValueError, match="divisible"):
+        solve_config(m, w, 7, 0.2, num_gpus=2)   # n % R != 0 is an
+    # argument error now — None strictly means LP-infeasible
     best = find_optimal_config(m, w, alphas=[0.0, 0.2], max_n=16,
                                num_gpus=2)
     assert best is not None and best.n % 2 == 0

@@ -1,5 +1,8 @@
 """Algorithm 1 behaviour tests."""
+import dataclasses
+
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.core.lp_search import find_optimal_config, solve_config
@@ -90,3 +93,40 @@ def test_delay_ratio_helps_small_batch_and_converges():
     assert tp(tiny_n, 0.3) <= tp(tiny_n, 0.0) * 1.01
     big_n = 48
     assert abs(tp(big_n, 0.3) - tp(big_n, 0.0)) / tp(big_n, 0.0) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# the solve_config return contract: None is STRICTLY "LP-infeasible";
+# caller bugs (malformed arguments) raise ValueError instead of being
+# silently swallowed as "no plan" — the autotuner holds on None, so a
+# silent None would mask a bug forever
+# ---------------------------------------------------------------------------
+
+def test_solve_config_invalid_args_raise_value_error():
+    w = _w65()
+    with pytest.raises(ValueError, match="divisible"):
+        solve_config(M65, w, 9, 0.2, num_gpus=2)
+    with pytest.raises(ValueError, match="wave"):
+        solve_config(M65, w, 8, 0.2, num_gpus=2, wave=4)
+    with pytest.raises(ValueError, match="divisor"):
+        solve_config(M65, w, 8, 0.2, wave=3)
+    with pytest.raises(ValueError, match="act_policy"):
+        solve_config(M65, w, 8, 0.2, act_policy="levitate")
+
+
+def test_solve_config_none_means_infeasible_only():
+    w = _w65()
+    # valid args, valid workload, but a host too small to cache anything
+    # AND too little headroom for the delayed-grad buffers: the LP has
+    # no feasible point — that (and only that) returns None
+    tiny = dataclasses.replace(M65, cpu_mem=1e6)
+    assert solve_config(tiny, w, 8, 0.5) is None
+    # same args on the real machine solve fine (guards the test against
+    # drifting into the ValueError regime)
+    assert solve_config(M65, w, 8, 0.5) is not None
+    # act_policy="auto" recurses over the concrete policies, so it
+    # composes with the strict contract: feasible machine -> solution
+    # (never an exception), infeasible machine -> None (min over an
+    # empty candidate set), and its inner calls pass valid args only
+    assert solve_config(M65, w, 8, 0.2, act_policy="auto") is not None
+    assert solve_config(tiny, w, 8, 0.5, act_policy="auto") is None

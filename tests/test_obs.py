@@ -28,7 +28,7 @@ from repro.configs.base import ArchConfig
 from repro.core.perfmodel import (MachineParams, StorageRatios,
                                   machine_from_snapshot)
 from repro.data import SyntheticLM
-from repro.io import IOConfig, IOEngine, IOPriority
+from repro.io import IOConfig, IOEngine, IOPriority, StripedFiles
 from repro.obs import (SNAPSHOT_VERSION, Tracer, reconcile, stall_by_stream,
                        top_stall_stream)
 from repro.offload import (DataParallelOffloadEngine, OffloadConfig,
@@ -129,6 +129,81 @@ def test_tracer_summary_aggregates_chunk_spans():
     assert d["bytes"] == 100 and d["ops"] == 1
     assert d["busy_s"] == pytest.approx(2.0)
     assert d["queue_s"] == pytest.approx(1.0)
+    # single channel: the wall-clock envelope IS the busy sum
+    assert d["channels"] == 1
+    assert d["busy_wall_s"] == pytest.approx(2.0)
+    assert d["rate_bps"] == pytest.approx(50.0)
+
+
+def test_tracer_summary_concurrent_channels_union_rate():
+    """The concurrency-blindness regression: two path channels moving
+    chunks in the SAME wall-clock window must report the device's
+    aggregate rate (bytes / union-of-intervals), not the ~1/P figure
+    that dividing by the summed per-channel busy seconds yields."""
+    tr = Tracer()
+    tr.enable()
+    # two channels, fully overlapped: each moves 100 B over [0, 2]
+    tr.record("p0", "ssd->cpu", "io.chunk", 0.0, 2.0,
+              route="ssd->cpu", nbytes=100)
+    tr.record("p1", "ssd->cpu", "io.chunk", 0.0, 2.0,
+              route="ssd->cpu", nbytes=100)
+    d = tr.summary()["routes"]["ssd->cpu"]
+    assert d["channels"] == 2
+    assert d["busy_s"] == pytest.approx(4.0)         # per-thread sum
+    assert d["busy_wall_s"] == pytest.approx(2.0)    # union
+    # aggregate device rate: 200 B / 2 s — exactly 2x the single-path
+    # rate, where bytes/busy_s would have read half of it
+    assert d["rate_bps"] == pytest.approx(100.0)
+    assert d["bytes"] / d["busy_s"] == pytest.approx(50.0)
+
+    # serialized channels (no overlap): union degrades to the sum, so
+    # the estimator is exact for devices that don't really parallelize
+    tr.clear()
+    tr.record("p0", "cpu->ssd", "io.chunk", 0.0, 1.0,
+              route="cpu->ssd", nbytes=50)
+    tr.record("p1", "cpu->ssd", "io.chunk", 1.0, 2.0,
+              route="cpu->ssd", nbytes=50)
+    d = tr.summary()["routes"]["cpu->ssd"]
+    assert d["channels"] == 2
+    assert d["busy_wall_s"] == pytest.approx(d["busy_s"]) == pytest.approx(2.0)
+    assert d["rate_bps"] == pytest.approx(50.0)
+
+
+def test_machine_from_snapshot_recovers_paced_two_path_rate(tmp_path):
+    """Live-rate ingestion end-to-end on a token-bucket paced 2-path
+    device: ``machine_from_snapshot`` must recover approximately the
+    configured aggregate cap. Before the union fix it read ~1/2 of it
+    (both path channels sleep against the shared bucket, so their busy
+    seconds double-count the same pacing window)."""
+    cap = 16e6          # small enough that burst (= cap/64) << payload
+    tr = Tracer()
+    tr.enable()
+    cfg = IOConfig(paths=[str(tmp_path / "p0"), str(tmp_path / "p1")],
+                   bandwidth={"cpu->ssd": cap, "ssd->cpu": cap},
+                   chunk_bytes=1 << 16)
+    eng = IOEngine(cfg, tracer=tr)
+    sf = StripedFiles(eng)
+    data = np.random.default_rng(0).integers(
+        0, 255, size=2_000_000, dtype=np.uint8)
+    sf.write("x", data, 0, IOPriority.CKPT_SPILL)
+    out = np.empty_like(data)
+    sf.readinto("x", out, 0, IOPriority.PARAM_FETCH)
+    sf.close()
+    eng.shutdown()
+    assert np.array_equal(out, data)
+    snap = {"trace": tr.summary()}
+    routes = snap["trace"]["routes"]
+    for route in ("cpu->ssd", "ssd->cpu"):
+        d = routes[route]
+        assert d["channels"] == 2
+        # the paced aggregate: within a band of the cap (burst credit
+        # lets it land slightly above; scheduling jitter slightly below)
+        assert 0.6 * cap < d["rate_bps"] < 2.0 * cap, (route, d)
+        # and strictly above the concurrency-blind estimate
+        assert d["rate_bps"] > d["bytes"] / d["busy_s"]
+    m = machine_from_snapshot(snap, MachineParams())
+    assert m.ssd_write_bw == pytest.approx(routes["cpu->ssd"]["rate_bps"])
+    assert m.ssd_read_bw == pytest.approx(routes["ssd->cpu"]["rate_bps"])
 
 
 # ---------------------------------------------------------------------------

@@ -342,7 +342,10 @@ def test_wave_traffic_endpoints_match_paper_schedules():
     dp_none = solve_config(m, w, 8, 0.2, num_gpus=2)
     dp_wave = solve_config(m, w, 8, 0.2, num_gpus=2, wave=8)
     assert dp_none is not None and dp_wave == dp_none
-    assert solve_config(m, w, 8, 0.2, num_gpus=2, wave=2) is None
+    # a true wave under DP is an argument error, not infeasibility
+    # (None strictly means the LP has no feasible point)
+    with pytest.raises(ValueError, match="wave"):
+        solve_config(m, w, 8, 0.2, num_gpus=2, wave=2)
 
 
 def test_shard_bounds_cover_contiguously():
