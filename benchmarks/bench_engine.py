@@ -20,7 +20,11 @@ cross-stream-lookahead A/B (interleaved engines at prefetch depth 2 vs
 the online-autotuner recovery A/B (an engine hand-tuned for a
 mis-specified machine vs the same start plus an ``AutotuneController``
 that must measure, re-solve, and swap its way back to the hand-tuned
-plan) — and dumps per-cell throughput, stall-seconds, prefetch
+plan) and the heterogeneous-path placement A/B (static ``i % P``
+striping vs backlog-aware chunk placement on a 2-path device whose
+per-path token buckets sit at a 4:1 rate split, with per-path achieved
+rates and the ``obs.reconcile`` byte-conservation flag in the cells)
+— and dumps per-cell throughput, stall-seconds, prefetch
 hit-rate, and the top stall stream (from ``metrics_snapshot()``) for
 ``check_smoke.py`` to gate against the checked-in
 ``baseline_smoke.json``.
@@ -49,11 +53,13 @@ import jax
 try:
     from benchmarks.common import Reporter
     from benchmarks.check_smoke import (AUTOTUNE_RECOVERY_GATE,
-                                        LOOKAHEAD_GAIN_GATE)
+                                        LOOKAHEAD_GAIN_GATE,
+                                        PATH_PLACEMENT_GAIN_GATE)
 except ImportError:     # run directly as a script: benchmarks/ not a pkg
     sys.path.insert(0, os.path.dirname(__file__))
     from common import Reporter
-    from check_smoke import AUTOTUNE_RECOVERY_GATE, LOOKAHEAD_GAIN_GATE
+    from check_smoke import (AUTOTUNE_RECOVERY_GATE, LOOKAHEAD_GAIN_GATE,
+                             PATH_PLACEMENT_GAIN_GATE)
 from repro.configs import get_config
 from repro.core.perfmodel import StorageRatios
 from repro.data import SyntheticLM
@@ -230,6 +236,113 @@ def run_lookahead_ab(rep: Optional[Reporter] = None,
     return cells
 
 
+#: the heterogeneous-path regime for the placement A/B: two striped
+#: paths with PER-PATH token buckets at a 4:1 rate split and NO route
+#: caps — the device the autotuner's ``path_policy`` axis exists for.
+#: Static ``i % P`` striping puts half the chunk bytes on the slow
+#: path, so its roofline is 2x the slow cap (0.05 GB/s here); backlog
+#: placement weights the fast path 4:1 and drains toward sum-of-caps
+#: (0.125 GB/s) — the same split ``machine_for_path_policy`` prices
+#: for the LP. The small chunk size keeps every gpt-tiny layer blob
+#: many full chunks long, so placement has real freedom per write.
+PATH_AB_CAPS = (0.1e9, 0.025e9)
+PATH_AB_CHUNK = 256 << 10
+
+
+def run_path_ab(rep: Optional[Reporter] = None,
+                trace_dir: str = "") -> dict:
+    """The heterogeneous-path placement A/B (the PR-acceptance
+    datapoint): identical engines on a 2-path device with per-path
+    token buckets at a 4:1 rate split, one pinned to the static
+    ``i % P`` layout, one scheduling every full-chunk write with
+    ``path_policy="backlog"``. Iterations are INTERLEAVED so machine
+    drift cancels out of the ratio, and both engines measure with span
+    tracing ENABLED — the per-path achieved rates in the cells come
+    from the tracer, and each cell's ``path_sum_ok`` asserts the
+    ``obs.reconcile`` conservation check (per-path chunk meters sum
+    byte-exactly to route totals). Returns cells keyed
+    ``paced_path_static`` / ``paced_path_backlog``."""
+    from repro.io import IOConfig
+    from repro.obs import reconcile, top_stall_stream
+
+    rep = rep or Reporter()
+    cfg, M, mb, s = get_config("gpt-tiny"), 4, 1, 64
+    rep.section(f"bench-smoke: heterogeneous-path placement A/B (alpha="
+                f"{PACED_ALPHA}, 2 paths, per-path caps {PATH_AB_CAPS})")
+
+    def build(root, policy):
+        paths = [os.path.join(root, "p0"), os.path.join(root, "p1")]
+        return OffloadEngine(cfg, OffloadConfig(
+            schedule="vertical", num_microbatches=M, micro_batch=mb,
+            seq_len=s, alpha=PACED_ALPHA,
+            ratios=StorageRatios(0.0, 0.0, 0.0),
+            io=IOConfig(paths=paths, chunk_bytes=PATH_AB_CHUNK,
+                        path_bandwidth=PATH_AB_CAPS, path_policy=policy),
+            prefetch_depth=2), jax.random.PRNGKey(0), root)
+
+    cells = {}
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        e_st, e_bl = build(d1, "static"), build(d2, "backlog")
+        data = SyntheticLM(cfg.vocab_size, seed=0)
+        for e in (e_st, e_bl):
+            e.train_step(data.batch(M * mb, s))     # compile warm-up
+            e.finish()          # flush the warm-up alpha-tail so the
+            e.meter.reset()     # measured window reconciles byte-exact
+            e.reset_stats()
+            e.tracer.clear()
+            e.tracer.enable()   # per-path rates come from the tracer
+        t = {"st": 0.0, "bl": 0.0}
+        for _ in range(PACED_AB_ITERS):
+            batch = data.batch(M * mb, s)
+            for key, e in (("st", e_st), ("bl", e_bl)):
+                t0 = time.perf_counter()
+                e.train_step(batch)
+                t[key] += time.perf_counter() - t0
+        for e in (e_st, e_bl):
+            e.finish()
+        for key, name, e in (("st", "paced_path_static", e_st),
+                             ("bl", "paced_path_backlog", e_bl)):
+            snap = e.metrics_snapshot()
+            look = snap["lookahead"]
+            rec = reconcile(e.plan, snap, steps=PACED_AB_ITERS)
+            assert not rec.path_sum_mismatches, rec.format()
+            routes = (snap.get("trace") or {}).get("routes", {})
+            per_path = {
+                route: {p: {"bytes": d["bytes"],
+                            "rate_bps": d["rate_bps"]}
+                        for p, d in routes[route]["per_path"].items()}
+                for route in ("ssd->cpu", "cpu->ssd") if route in routes}
+            dt = t[key] / PACED_AB_ITERS
+            cells[name] = {
+                "s_per_iter": dt,
+                "tokens_per_s": M * mb * s / dt,
+                "stall_s_per_iter": look["stall_s"] / PACED_AB_ITERS,
+                "prefetch_hit_rate": look["hit_rate"],
+                "top_stall_stream": top_stall_stream(snap["op_seconds"]),
+                "per_path": per_path,
+                "path_sum_ok": not rec.path_sum_mismatches,
+            }
+            if trace_dir:
+                e.tracer.export_chrome(
+                    os.path.join(trace_dir, f"{name}.trace.json"))
+            split = {route: [d["bytes"] for _, d in sorted(pp.items())]
+                     for route, pp in per_path.items()}
+            rep.add(f"smoke/{name}_tokens_per_s",
+                    f"{cells[name]['tokens_per_s']:.0f}",
+                    f"per-path bytes {split}, "
+                    f"stall {cells[name]['stall_s_per_iter']:.3f} s/iter")
+        e_st.close()
+        e_bl.close()
+    st, bl = cells["paced_path_static"], cells["paced_path_backlog"]
+    gain = bl["tokens_per_s"] / st["tokens_per_s"]
+    rep.add("smoke/path_placement_speedup", f"{gain:.2f}x",
+            f"stall {st['stall_s_per_iter']:.3f} -> "
+            f"{bl['stall_s_per_iter']:.3f} s/iter "
+            f"(check_smoke gates this at >= {PATH_PLACEMENT_GAIN_GATE}x)")
+    return cells
+
+
 #: the deliberately MIS-SPECIFIED machine the autotune A/B hands its
 #: controller: compute and DRAM scaled to the gpt-tiny smoke workload,
 #: but the SSD link rates left at the A100-node datasheet numbers
@@ -380,6 +493,11 @@ def run_smoke(rep: Optional[Reporter] = None, json_path: str = "",
     # --- the autotune recovery A/B: mis-specified machine, live-rate
     # ingestion, mid-training plan swap (gated by check_smoke) ---
     cells.update(run_autotune_ab(rep, trace_dir=trace_dir))
+
+    # --- the heterogeneous-path placement A/B: static i%P layout vs
+    # backlog-aware chunk placement on a 4:1 per-path paced device
+    # (gated by check_smoke, with the per-path conservation check) ---
+    cells.update(run_path_ab(rep, trace_dir=trace_dir))
 
     # --- trace artifacts for the schedule cells, strictly AFTER every
     # measured window (see _export_cell_trace) ---

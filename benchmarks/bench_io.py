@@ -1,16 +1,24 @@
 """Benchmark the `repro.io` transfer engine.
 
-Three measurements on the real filesystem of this container:
+Four measurements on the real filesystem of this container:
 
 1. **Striping** — single-path vs multi-path chunked writes/reads of one
    large tensor (MLP-Offload's lever: once one path saturates, add
    paths). On a 2-core container the win comes from overlapping the
-   per-path channel threads' memcpy+syscall work.
+   per-path channel threads' memcpy+syscall work. Every config runs
+   with a span tracer attached, so the report (and ``--json``) carries
+   per-path ACHIEVED rates — bytes over channel-busy seconds, the same
+   columns ``machine_from_snapshot`` ingests for the autotuner.
 2. **Bandwidth simulation** — a token-bucket cap on ``cpu->ssd`` /
    ``ssd->cpu`` must reproduce the configured rate in wall-clock
    (the knob that makes perfmodel rooflines testable here).
 3. **Perf-model plumbing** — ``machine_from_bandwidth`` +
    ``transfer_seconds`` predictions vs the measured capped transfers.
+4. **Heterogeneous paths** — a 2-path device with PER-PATH token
+   buckets at a 4:1 rate split, written/read under
+   ``path_policy="static"`` (the ``i % P`` layout pays 2x the slow
+   cap) vs ``"backlog"`` (placement drains toward sum-of-caps). The
+   per-path byte split and achieved rates land in the report + JSON.
 
     PYTHONPATH=src python benchmarks/bench_io.py [--size-mb 256]
         [--paths 1 2 4] [--chunk-kb 1024] [--cap-mbs 150] [--csv out.csv]
@@ -30,14 +38,38 @@ from common import Reporter, gb  # noqa: E402
 
 from repro.core.perfmodel import machine_from_bandwidth, transfer_seconds
 from repro.io import IOConfig, IOEngine
+from repro.obs import Tracer
 from repro.offload.stores import SSDStore, TrafficMeter
 
 
-def _store(root: str, n_paths: int, chunk: int, bandwidth=None) -> SSDStore:
+def _store(root: str, n_paths: int, chunk: int, bandwidth=None,
+           path_bandwidth=None, path_policy: str = "static",
+           tracer=None) -> SSDStore:
     paths = [os.path.join(root, f"nvme{i}") for i in range(n_paths)]
     eng = IOEngine(IOConfig(paths=paths, chunk_bytes=chunk,
-                            bandwidth=bandwidth or {}))
+                            bandwidth=bandwidth or {},
+                            path_bandwidth=path_bandwidth,
+                            path_policy=path_policy), tracer=tracer)
     return SSDStore(paths[0], TrafficMeter(), engine=eng)
+
+
+def _per_path_rates(tracer: Tracer) -> dict:
+    """{route: {path: {bytes, rate_bps}}} from the tracer's chunk spans
+    — achieved rate while the single-thread path channel was busy."""
+    out = {}
+    for route, d in tracer.summary().get("routes", {}).items():
+        pp = d.get("per_path") or {}
+        if pp:
+            out[route] = {p: {"bytes": v["bytes"],
+                              "rate_bps": v["rate_bps"]}
+                          for p, v in pp.items()}
+    return out
+
+
+def _fmt_rates(per_path: dict, route: str) -> str:
+    pp = per_path.get(route, {})
+    return "/".join(f"{pp[p]['rate_bps'] / 1e6:.0f}"
+                    for p in sorted(pp, key=int)) or "-"
 
 
 def _timed_write(ssd: SSDStore, name: str, arr: np.ndarray, reps: int = 3
@@ -82,14 +114,19 @@ def main() -> None:
     # ---- 1. striping ----
     rep.section(f"striped writes/reads, {args.size_mb} MB, "
                 f"chunk {args.chunk_kb} KB")
-    t_write, t_read = {}, {}
+    t_write, t_read, path_rates = {}, {}, {}
     with tempfile.TemporaryDirectory(prefix="bench_io_") as root:
         for P in args.paths:
-            ssd = _store(os.path.join(root, f"P{P}"), P, chunk)
+            tr = Tracer()
+            tr.enable()
+            ssd = _store(os.path.join(root, f"P{P}"), P, chunk, tracer=tr)
             t_write[P] = _timed_write(ssd, "x", arr)
             t_read[P] = _timed_read(ssd, "x", nbytes)
-            rep.add(f"write_GBps_paths{P}", f"{nbytes / t_write[P] / 1e9:.2f}")
-            rep.add(f"read_GBps_paths{P}", f"{nbytes / t_read[P] / 1e9:.2f}")
+            path_rates[P] = _per_path_rates(tr)
+            rep.add(f"write_GBps_paths{P}", f"{nbytes / t_write[P] / 1e9:.2f}",
+                    f"per-path MB/s {_fmt_rates(path_rates[P], 'cpu->ssd')}")
+            rep.add(f"read_GBps_paths{P}", f"{nbytes / t_read[P] / 1e9:.2f}",
+                    f"per-path MB/s {_fmt_rates(path_rates[P], 'ssd->cpu')}")
             ssd.close()
     base = args.paths[0]
     multi = [p for p in args.paths if p > 1]
@@ -125,6 +162,37 @@ def main() -> None:
                 f"{t_meas / t_pred:.3f}",
                 "measured/predicted seconds; target within +-20%")
 
+    # ---- 4. heterogeneous paths: static i%P vs backlog placement ----
+    hcaps = (args.cap_mbs * 1e6, args.cap_mbs / 4 * 1e6)
+    rep.section(f"heterogeneous 2-path device, per-path caps "
+                f"{hcaps[0] / 1e6:.0f}/{hcaps[1] / 1e6:.0f} MB/s (4:1)")
+    het_bytes = min(nbytes, 32 << 20)
+    hsub = arr[:het_bytes]
+    hetero = {}
+    for policy in ("static", "backlog"):
+        with tempfile.TemporaryDirectory(prefix="bench_io_het_") as root:
+            tr = Tracer()
+            tr.enable()
+            ssd = _store(root, 2, chunk, path_bandwidth=hcaps,
+                         path_policy=policy, tracer=tr)
+            htw = _timed_write(ssd, "het", hsub, reps=2)
+            htr = _timed_read(ssd, "het", het_bytes, reps=2)
+            ssd.close()
+        pp = _per_path_rates(tr)
+        hetero[policy] = {"write_s": htw, "read_s": htr,
+                          "write_bps": het_bytes / htw,
+                          "read_bps": het_bytes / htr,
+                          "per_path": pp}
+        rep.add(f"hetero_{policy}_write_MBps",
+                f"{het_bytes / htw / 1e6:.1f}",
+                f"per-path MB/s {_fmt_rates(pp, 'cpu->ssd')}")
+        rep.add(f"hetero_{policy}_read_MBps",
+                f"{het_bytes / htr / 1e6:.1f}",
+                f"per-path MB/s {_fmt_rates(pp, 'ssd->cpu')}")
+    rep.add("hetero_backlog_vs_static_write",
+            f"{hetero['static']['write_s'] / hetero['backlog']['write_s']:.2f}",
+            "x; static pays 2x the slow cap, backlog drains to sum-of-caps")
+
     rep.section("summary")
     rep.add("bytes_benchmarked", gb(nbytes), "GB per striping config")
     if args.csv:
@@ -135,8 +203,11 @@ def main() -> None:
             "size_bytes": nbytes,
             "chunk_bytes": chunk,
             "paths": {str(P): {"write_bps": nbytes / t_write[P],
-                               "read_bps": nbytes / t_read[P]}
+                               "read_bps": nbytes / t_read[P],
+                               "per_path": path_rates[P]}
                       for P in args.paths},
+            "hetero": {"path_bandwidth": list(hcaps),
+                       "size_bytes": het_bytes, **hetero},
         }
         with open(args.json, "w") as f:
             json.dump(results, f, indent=2)

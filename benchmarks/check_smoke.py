@@ -48,6 +48,20 @@ LOOKAHEAD_GAIN_GATE = 1.10
 #: controller fails to act)
 AUTOTUNE_RECOVERY_GATE = 0.9
 
+#: the dynamic-placement floor (absolute, on the measured run): on the
+#: heterogeneous 2-path device (per-path token buckets at a 4:1 rate
+#: split, NO route caps) the ``path_policy="backlog"`` engine must beat
+#: the static ``i % P`` layout by at least this tokens/s ratio. Static
+#: stripes half the bytes onto the slow path, so the device degrades
+#: toward 2x the slow cap; backlog placement drains toward the
+#: sum-of-caps roofline (the perfmodel prices exactly this split, see
+#: ``machine_for_path_policy``). The cells also carry ``path_sum_ok``:
+#: per-path chunk meters must sum byte-exactly to their route totals
+#: (``obs.reconcile``'s conservation check) — a False anywhere fails
+#: the build even if the speedup holds, because a placement layer that
+#: leaks bytes between meters is wrong no matter how fast it is.
+PATH_PLACEMENT_GAIN_GATE = 1.3
+
 REFRESH_CMD = "python benchmarks/check_smoke.py --update"
 
 
@@ -91,6 +105,13 @@ def compare(measured: dict, baseline: dict, tolerance: float,
         bt = b_cells.get(cell, {}).get("top_stall_stream")
         if mt is not None:
             rows.append((cell, "top_stall", mt, bt, "ok"))
+        # per-path byte conservation: cells that carry the flag must
+        # carry it True (the bench computes it from obs.reconcile —
+        # sum of per-path chunk meters == route totals, byte-exact)
+        mp = m_cells.get(cell, {}).get("path_sum_ok")
+        if mp is not None:
+            rows.append((cell, "path_sum_ok", str(bool(mp)), "True",
+                         "ok" if mp else "REGRESSION"))
     # the lookahead A/B acceptance gate (absolute, within the measured
     # run): hints on must beat hints off on the paced-SSD cells
     la = m_cells.get("paced_alpha_lookahead", {}).get("tokens_per_s")
@@ -110,6 +131,17 @@ def compare(measured: dict, baseline: dict, tolerance: float,
         rows.append(("autotune_ab", "recovery_x", ratio,
                      AUTOTUNE_RECOVERY_GATE,
                      "ok" if ratio >= AUTOTUNE_RECOVERY_GATE
+                     else "REGRESSION"))
+    # the dynamic-placement gate (absolute, within the measured run):
+    # backlog placement must beat the static stripe layout on the
+    # heterogeneous (4:1 per-path paced) device
+    st = m_cells.get("paced_path_static", {}).get("tokens_per_s")
+    bl = m_cells.get("paced_path_backlog", {}).get("tokens_per_s")
+    if st is not None and bl is not None and st > 0:
+        gain = bl / st
+        rows.append(("path_placement_ab", "speedup_x", gain,
+                     PATH_PLACEMENT_GAIN_GATE,
+                     "ok" if gain >= PATH_PLACEMENT_GAIN_GATE
                      else "REGRESSION"))
     return rows
 
@@ -172,7 +204,8 @@ def main(argv=None) -> int:
     bad = 0
     units = {"tokens_per_s": "tok/s", "stall_s": "s/iter",
              "speedup_x": "x (gate)", "recovery_x": "x (gate)",
-             "hit_rate": "", "top_stall": "(info)"}
+             "hit_rate": "", "top_stall": "(info)",
+             "path_sum_ok": "(gate)"}
 
     def fmt(v):
         if v is None:

@@ -23,7 +23,12 @@ from scipy.optimize import linprog
 
 from repro.core import traffic as tr
 from repro.core.perfmodel import (MachineParams, StorageRatios, Workload,
-                                  compute_times)
+                                  compute_times, machine_for_path_policy)
+
+#: chunk->path placement policies the LP can price (must mirror
+#: ``repro.io.config.PATH_POLICIES``; duplicated so ``repro.core``
+#: stays independent of ``repro.io``)
+PATH_POLICIES = ("static", "weighted", "backlog")
 
 REG = 1e-12  # SSD-traffic regulariser (s/byte): Alg. 1's "minimise SSD
              # traffic when possible" tie-breaker
@@ -35,6 +40,7 @@ class LPSolution:
     t_f: float
     t_b: float
     act_policy: str = "recompute"
+    path_policy: str = "static"
 
     @property
     def iteration_time(self) -> float:
@@ -45,7 +51,8 @@ def solve_config(m: MachineParams, w: Workload, n: int, alpha: float,
                  num_gpus: int = 1,
                  wave: Optional[int] = None,
                  act_policy: str = "recompute",
-                 lookahead: bool = True) -> Optional[LPSolution]:
+                 lookahead: bool = True,
+                 path_policy: str = "static") -> Optional[LPSolution]:
     """One LP solve for fixed (n, α).
 
     Return contract (the autotuner distinguishes the two): ``None``
@@ -88,10 +95,21 @@ def solve_config(m: MachineParams, w: Workload, n: int, alpha: float,
     the per-micro-batch checkpoint/residual tails ahead of each
     backward fetch — join the GPU-compute rows as serialized stall
     terms (with their x coefficients) instead of hiding under the
-    stage max, mirroring ``perfmodel._lookahead_stalls``."""
+    stage max, mirroring ``perfmodel._lookahead_stalls``.
+
+    ``path_policy`` prices the SSD tier's chunk-placement policy when
+    ``m`` carries per-path rates (``ssd_path_read_bw`` /
+    ``ssd_path_write_bw``): "static" striping runs the stripe at
+    ``P x min(path_rate)``; "weighted"/"backlog" placement reaches
+    ``sum(path_rates)`` (:func:`machine_for_path_policy`). Without
+    per-path evidence every policy prices identically."""
+    if path_policy not in PATH_POLICIES:
+        raise ValueError(f"unknown path_policy {path_policy!r}")
+    m = machine_for_path_policy(m, path_policy)
     if act_policy == "auto":
         sols = [solve_config(m, w, n, alpha, num_gpus=num_gpus, wave=wave,
-                             act_policy=p, lookahead=lookahead)
+                             act_policy=p, lookahead=lookahead,
+                             path_policy=path_policy)
                 for p in ("recompute", "spill")]
         sols = [s for s in sols if s is not None]
         return min(sols, key=lambda s: s.iteration_time, default=None)
@@ -211,7 +229,7 @@ def solve_config(m: MachineParams, w: Workload, n: int, alpha: float,
     x_c, x_p, x_o, t_f, t_b = res.x
     return LPSolution(StorageRatios(ckpt=float(x_c), param=float(x_p),
                                     opt=float(x_o)), float(t_f), float(t_b),
-                      act_policy=act_policy)
+                      act_policy=act_policy, path_policy=path_policy)
 
 
 @dataclasses.dataclass(frozen=True)

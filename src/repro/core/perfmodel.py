@@ -13,14 +13,21 @@ Algorithm 1 builds its LP around, and it draws the roofline of Fig. 3:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 from repro.core import traffic as tr
 
 
 @dataclasses.dataclass(frozen=True)
 class MachineParams:
-    """Benchmark results packed as system parameters (Alg. 1's  M)."""
+    """Benchmark results packed as system parameters (Alg. 1's  M).
+
+    ``ssd_path_read_bw`` / ``ssd_path_write_bw`` optionally record the
+    PER-PATH achieved rates of a multi-path SSD tier (index = path).
+    The aggregate ``ssd_read_bw`` / ``ssd_write_bw`` stay the rates the
+    time model divides by; how a heterogeneous path set folds into that
+    aggregate depends on the chunk-placement policy — apply
+    :func:`machine_for_path_policy` before pricing a plan."""
     name: str = "a100-cloud"
     gpu_flops: float = 140e12          # sustained matmul FLOP/s (bf16)
     pcie_bw: float = 24e9              # GPU<->CPU, bytes/s
@@ -32,6 +39,37 @@ class MachineParams:
     num_gpus: int = 1
     interconnect_bw: float = 16e9      # DP fabric, bytes/s per rank
                                        # (ring all-gather/reduce-scatter)
+    ssd_path_read_bw: Optional[Tuple[float, ...]] = None
+    ssd_path_write_bw: Optional[Tuple[float, ...]] = None
+
+
+def machine_for_path_policy(m: MachineParams, path_policy: str = "static"
+                            ) -> MachineParams:
+    """Fold the per-path SSD rates into the aggregate ``ssd_read_bw`` /
+    ``ssd_write_bw`` under a chunk-placement policy:
+
+    * ``"static"`` — round-robin striping moves every tensor through
+      every path in equal byte shares, so the slowest device paces the
+      whole stripe: aggregate = ``P x min(path_rates)``.
+    * ``"weighted"`` / ``"backlog"`` — placement splits bytes in
+      proportion to what each path absorbs, so the devices drain
+      together: aggregate = ``sum(path_rates)``.
+
+    A machine without per-path rates is returned unchanged — the
+    aggregate numbers already are the measurement."""
+    def eff(per_path, fallback: float) -> float:
+        rates = [float(r) for r in (per_path or ()) if r and r > 0]
+        if not rates:
+            return fallback
+        if path_policy == "static":
+            return len(rates) * min(rates)
+        return sum(rates)
+
+    rd = eff(m.ssd_path_read_bw, m.ssd_read_bw)
+    wr = eff(m.ssd_path_write_bw, m.ssd_write_bw)
+    if rd == m.ssd_read_bw and wr == m.ssd_write_bw:
+        return m
+    return dataclasses.replace(m, ssd_read_bw=rd, ssd_write_bw=wr)
 
 
 def machine_from_bandwidth(bandwidth, base: Optional[MachineParams] = None
@@ -107,6 +145,14 @@ def machine_from_snapshot(snapshot, base: Optional[MachineParams] = None
     ``rate_bps`` fall back to ``bytes / busy_s`` — correct only for
     single-path engines.
 
+    Per-path rates: when the trace carries a route's ``per_path`` split
+    (one single-threaded channel per SSD path, so each path's ``bytes /
+    busy_s`` is that DEVICE's achieved rate), the result also fills
+    ``ssd_path_read_bw`` / ``ssd_path_write_bw`` — the evidence
+    :func:`machine_for_path_policy` folds into policy-dependent
+    aggregates so the LP can price "static" vs "backlog" placement on a
+    heterogeneous path set.
+
     Takes a plain dict, so ``repro.core`` stays independent of
     ``repro.obs``."""
     base = base or MachineParams()
@@ -122,10 +168,23 @@ def machine_from_snapshot(snapshot, base: Optional[MachineParams] = None
             return default
         return float(d["bytes"]) / float(d["busy_s"])
 
+    def path_rates(route: str):
+        pp = (routes.get(route) or {}).get("per_path") or {}
+        rates = []
+        for k in sorted(pp, key=int):
+            v = pp[k] or {}
+            r = v.get("rate_bps") or (
+                float(v["bytes"]) / float(v["busy_s"])
+                if v.get("bytes") and v.get("busy_s") else 0.0)
+            rates.append(float(r))
+        return tuple(rates) if any(rates) else None
+
     return dataclasses.replace(
         base, name=f"{base.name}-live",
         ssd_read_bw=rate("ssd->cpu", base.ssd_read_bw),
-        ssd_write_bw=rate("cpu->ssd", base.ssd_write_bw))
+        ssd_write_bw=rate("cpu->ssd", base.ssd_write_bw),
+        ssd_path_read_bw=path_rates("ssd->cpu"),
+        ssd_path_write_bw=path_rates("cpu->ssd"))
 
 
 def transfer_seconds(m: MachineParams, route: str, nbytes: float) -> float:

@@ -121,17 +121,32 @@ How plan ops map to request priorities
   future supporting cancellation
   (:meth:`~repro.io.engine.IORequest.cancel`).
 * :class:`~repro.io.backend.StripedFiles` — chunk-level executor:
-  tensors are cut into ``chunk_bytes`` chunks striped round-robin over
-  N configured paths (MLP-Offload-style multi-path), one channel
-  thread per path, positioned I/O on cached fds. On this container's
-  2 cores, 2-path striping already beats single-path writes by ~1.5x
-  (see ``benchmarks/bench_io.py``).
-* :class:`~repro.io.bandwidth.BandwidthSimulator` — optional per-route
-  token buckets (``gpu<->cpu``, ``cpu<->ssd``) so the roofline/LP
-  predictions of :mod:`repro.core.perfmodel` can be checked in
-  wall-clock on hardware much faster than the paper's SSDs
+  tensors are cut into ``chunk_bytes`` chunks over N configured paths
+  (MLP-Offload-style multi-path), one channel thread per path,
+  positioned I/O on cached fds. Chunk -> path assignment is a
+  SCHEDULED decision, not a layout constant: under
+  ``IOConfig.path_policy="static"`` chunk ``i`` lives at the classic
+  ``i % P`` stripe (bit-for-bit the pre-policy layout, zero placement
+  state); under ``"weighted"``/``"backlog"`` every full-chunk write
+  asks :meth:`~repro.io.engine.IOEngine.choose_path` where to land —
+  rate-proportional spreading, or MLP-Offload's idle-level feedback
+  (least normalized backlog) — and records the decision in a
+  per-tensor chunk-location table persisted as a JSON sidecar next to
+  the stripe files. On the paced 4:1 two-path device in
+  ``benchmarks/bench_io.py``, backlog placement writes at ~sum-of-caps
+  where static pays 2x the slow cap; ``check_smoke.py`` gates the
+  engine-level A/B at >= 1.3x tokens/s.
+* :class:`~repro.io.bandwidth.BandwidthSimulator` — optional token
+  buckets per route (``gpu<->cpu``, ``cpu<->ssd``) AND per path
+  (``IOConfig.path_bandwidth``, heterogeneous device caps), so the
+  roofline/LP predictions of :mod:`repro.core.perfmodel` can be
+  checked in wall-clock on hardware much faster than the paper's SSDs
   (``repro.core.perfmodel.machine_from_bandwidth`` builds the matching
-  ``MachineParams``).
+  ``MachineParams``; ``machine_from_snapshot`` ingests the tracer's
+  per-path achieved rates, and ``machine_for_path_policy`` prices a
+  heterogeneous device as P x min(rates) under static striping vs
+  sum-of-rates under dynamic placement — the spread the autotuner's
+  ``path_policy`` candidate axis steers by).
 * :class:`~repro.io.staging.StagingPool` — double-buffered host staging
   for asynchronous spills; ``acquire`` blocking when both buffers are
   in flight is the second backpressure layer.
@@ -147,8 +162,10 @@ Per-rank engine layering (data parallelism)
 The data-parallel offload engine (``repro.offload.dp``) instantiates
 the WHOLE stack above once per rank: rank r gets its own ``IOEngine``
 over its own path subset (:meth:`~repro.io.config.IOConfig.
-shard_for_rank`: paths ``r, r+R, ...``), its own meter/host/staging
-state, and shard-length tiered vectors. Nothing above this package is
+shard_for_rank`: paths ``r, r+R, ...``, with the matching
+``path_bandwidth`` caps sliced alongside so a rank's placement policy
+sees its own devices' rates), its own meter/host/staging state, and
+shard-length tiered vectors. Nothing above this package is
 shared between ranks, so R rank engines drive R disjoint path sets
 concurrently — that is the N-GPUs-×-N-SSD-paths aggregate-bandwidth
 lever (``benchmarks/bench_dp.py``).
@@ -172,10 +189,16 @@ future (``IORequest.result``), releases the in-flight byte budget and
 its staging buffer, and never kills a worker thread — the
 fault-injection suite (``tests/test_io_faults.py``) drives these paths
 through an on-demand-failing backend (``StripedFiles._pread/_pwrite``
-are the designated override points).
+are the designated override points). Faults are additionally isolated
+PER PATH under the dynamic placement policies: a path at
+``PATH_FAIL_DRAIN_THRESHOLD`` consecutive chunk failures stops
+receiving NEW chunk placements (a dead device fails fast, so its
+backlog alone would make it look attractively idle) while reads of
+chunks already placed there keep failing loudly — no silent reroute.
 
 Follow-ons this unlocks are tracked in ROADMAP.md (NCCL-backed
-collectives, uneven-rank sharding, an io_uring backend, NVMe-oF paths,
+collectives, uneven-rank sharding, an io_uring backend, NVMe-oF remote
+path entries riding the per-path pacing/placement machinery,
 serving-time KV-cache reuse).
 """
 from repro.io.backend import StripedFiles  # noqa: F401

@@ -1,23 +1,58 @@
-"""Chunked, striped flat-tensor files across N SSD paths.
+"""Chunked, striped flat-tensor files across N SSD paths, with a
+per-tensor chunk-location table so chunk->path assignment is a
+scheduled decision, not a layout constant.
 
-Layout (MLP-Offload-style round robin): a tensor of ``nbytes`` is cut
-into chunks of ``chunk_bytes``; chunk ``i`` lives on path ``i % P`` at
-file offset ``(i // P) * chunk_bytes`` of that path's stripe file
-(``<path>/<name>.s<p>.bin``). Only the globally-last chunk may be short,
-and it is the last chunk of its stripe file, so offsets never shift.
+Baseline layout (MLP-Offload-style round robin): a tensor of
+``nbytes`` is cut into chunks of ``chunk_bytes``; chunk ``i`` DEFAULTS
+to path ``i % P`` at slot ``i // P`` of that path's stripe file
+(``<path>/<name>.s<p>.bin``, file offset = slot * chunk_bytes). Under
+``path_policy="static"`` that default is the whole story — the layout
+is bit-for-bit the classic static striping and no placement state is
+ever created.
+
+Under the dynamic policies ("weighted"/"backlog") every FULL-chunk
+write asks :meth:`IOEngine.choose_path` where the chunk should land
+*now* (rate-weighted / least-backlogged path) and records the decision
+in the tensor's chunk-location table: ``chunk -> (path, slot)``. Reads
+and partial writes follow the recorded map, falling back to the static
+default for chunks never dynamically placed — so a tensor written
+under "static" stays readable after a policy flip and vice versa.
+Slots for re-placed chunks come from a per-(tensor, path) allocation
+cursor that starts past the stripe file's current end and only ever
+moves forward, and a claims map tracks slot ownership so a dynamic
+allocation can never collide with a chunk still on its static slot.
+Slots vacated by a re-placement are deliberately NEVER reused: an op
+targeting the old slot may still be in flight (chunk ops from
+overlapping writes of one tensor interleave on the path channels), so
+handing the slot to another chunk would let that stale op corrupt the
+new tenant after the fact. Orphaning the slot instead means a stale op
+can only ever touch bytes its own chunk used to own — the worst case
+degrades to the same-offset version race static striping always had,
+at the cost of stripe-file growth when placement flips a chunk between
+paths. Only full-chunk writes re-place: a short last chunk or a ranged
+partial write sticks to wherever the chunk already lives (moving it
+would require a read-modify-write of bytes the caller didn't provide).
+
+The table is persisted as a JSON sidecar next to the first path's
+stripe file (``<paths[0]>/<name>.map.json``, written atomically via
+temp + rename after the chunk writes it describes have completed) and
+lazily reloaded on reopen, so placement survives process restarts.
+Static-only runs produce zero sidecars.
 
 All byte movement is positioned I/O (``pread``/``pwritev`` on cached
-fds), submitted as one chunk op per chunk on the owning path's channel —
-so a P-path store keeps P threads busy in parallel, and a
-higher-priority tensor's chunks overtake a lower-priority one's in each
-channel's heap. Bandwidth pacing (``cpu->ssd`` / ``ssd->cpu``) applies
-per chunk before the syscall.
+fds), submitted as one chunk op per chunk on the owning path's channel
+— so a P-path store keeps P threads busy in parallel, and a
+higher-priority tensor's chunks overtake a lower-priority one's in
+each channel's heap. Bandwidth pacing applies per chunk before the
+syscall: the route cap (``cpu->ssd`` / ``ssd->cpu``) and the owning
+path's device cap (``IOConfig.path_bandwidth``) both, when configured.
 """
 from __future__ import annotations
 
+import json
 import os
 import threading
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -35,6 +70,20 @@ class StripedFiles:
         self.chunk = int(engine.chunk_bytes)
         self._fds: Dict[Tuple[str, int], int] = {}
         self._fd_lock = threading.Lock()
+        # placement state, all guarded by _map_lock:
+        #   _tables[name]: chunk -> (path, slot) overrides (absent chunk
+        #       = static default); _claims[name]: (path, slot) -> chunk
+        #       for every slot a write has claimed THIS process — the
+        #       collision guard between static-default slots and
+        #       allocated ones; _cursors[name][p]: next never-used slot
+        #       (init lazily from stripe file size + live claims).
+        #       Slots vacated by re-placement are orphaned, never
+        #       recycled (see the module docstring).
+        self._map_lock = threading.Lock()
+        self._tables: Dict[str, Dict[int, Tuple[int, int]]] = {}
+        self._claims: Dict[str, Dict[Tuple[int, int], int]] = {}
+        self._cursors: Dict[str, List[Optional[int]]] = {}
+        self._map_checked: Set[str] = set()
 
     # ---------------- fd cache ----------------
     def _fd(self, name: str, p: int) -> int:
@@ -59,36 +108,172 @@ class StripedFiles:
     def _pread(self, fd: int, mv: memoryview, off: int) -> int:
         return os.preadv(fd, [mv], off)
 
-    def _chunk_spans(self, byte_lo: int, byte_hi: int):
-        """Yield (path, file_offset, lo, hi) per chunk overlapping
-        [byte_lo, byte_hi) — lo/hi are tensor-relative byte offsets."""
+    # ---------------- chunk-location table ----------------
+    def _map_path(self, name: str) -> str:
+        return os.path.join(self.paths[0], _mangle(name) + ".map.json")
+
+    def _table(self, name: str) -> Optional[Dict[int, Tuple[int, int]]]:
+        """The tensor's placement table, lazily loading the sidecar the
+        first time the tensor is touched. Caller holds _map_lock."""
+        t = self._tables.get(name)
+        if t is None and name not in self._map_checked:
+            self._map_checked.add(name)
+            try:
+                with open(self._map_path(name)) as f:
+                    doc = json.load(f)
+            except FileNotFoundError:
+                return None
+            if (doc.get("chunk_bytes") != self.chunk
+                    or doc.get("n_paths") != len(self.paths)):
+                raise ValueError(
+                    f"stale chunk map for {name!r}: written with "
+                    f"chunk_bytes={doc.get('chunk_bytes')} over "
+                    f"{doc.get('n_paths')} path(s), reopened with "
+                    f"chunk_bytes={self.chunk} over "
+                    f"{len(self.paths)} path(s)")
+            t = {int(c): (int(p), int(s))
+                 for c, (p, s) in doc["map"].items()}
+            self._tables[name] = t
+            self._claims[name] = {ps: c for c, ps in t.items()}
+        return t
+
+    def _persist(self, name: str):
+        """Atomically write the sidecar (temp + rename). Called after
+        the chunk writes a table mutation describes have completed, so
+        a persisted slot always has its bytes on disk."""
+        with self._map_lock:
+            t = self._tables.get(name)
+            if not t:
+                return
+            doc = {"chunk_bytes": self.chunk, "n_paths": len(self.paths),
+                   "map": {str(c): list(ps) for c, ps in sorted(t.items())}}
+        target = self._map_path(name)
+        tmp = target + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f)
+        os.replace(tmp, target)
+
+    def _alloc_slot(self, name: str, p: int) -> int:
+        """An unclaimed, never-dynamically-used slot on path ``p`` from
+        the monotonic allocation cursor. The cursor initializes past
+        the stripe file's current end (data from earlier processes /
+        completed writes; in-flight slots are covered by the claims
+        skip below) and never moves backward — vacated slots are never
+        recycled. At EVERY allocation the cursor additionally skips
+        slots claimed since it was initialized: a chunk that kept its
+        static default ``(c % P, c // P)`` after the cursor passed that
+        slot would otherwise be silently overwritten by the next
+        dynamic placement on its path. Caller holds _map_lock."""
+        cur = self._cursors.setdefault(name, [None] * len(self.paths))
+        if cur[p] is None:
+            fd = self._fd(name, p)
+            cur[p] = (os.fstat(fd).st_size + self.chunk - 1) // self.chunk
+        claims = self._claims.get(name) or {}
+        slot = cur[p]
+        while (p, slot) in claims:
+            slot += 1
+        cur[p] = slot + 1
+        return slot
+
+    def placement(self, name: str, c: int) -> Tuple[int, int]:
+        """Where chunk ``c`` of tensor ``name`` lives: the recorded
+        table entry, else the static default ``(c % P, c // P)``."""
+        with self._map_lock:
+            t = self._table(name)
+            if t is not None:
+                e = t.get(c)
+                if e is not None:
+                    return e
+        P = len(self.paths)
+        return c % P, c // P
+
+    def _place_for_write(self, name: str, c: int, full: bool
+                         ) -> Tuple[int, int, bool]:
+        """Placement decision for one chunk about to be WRITTEN.
+        Returns (path, slot, table_mutated).
+
+        A full chunk under a dynamic policy is re-placed via
+        :meth:`IOEngine.choose_path`; anything else sticks to its
+        recorded/static location. Either way, a static-default slot
+        already owned by a re-placed chunk forces a fresh allocation
+        (the collision guard: the cursor starts from the file size, so
+        a first-ever dynamic write can hand out slots the tensor's
+        *later* chunks would map to statically)."""
+        eng = self.engine
         P, C = len(self.paths), self.chunk
+        dynamic = full and P > 1 and eng.path_policy != "static"
+        new_p = eng.choose_path(C) if dynamic else None
+        with self._map_lock:
+            t = self._table(name)
+            entry = t.get(c) if t is not None else None
+            old = entry if entry is not None else (c % P, c // P)
+            claims = self._claims.setdefault(name, {})
+            # "ours": unclaimed, or claimed by this very chunk
+            ours = claims.get(old, c) == c
+            if new_p is None or (new_p == old[0] and ours):
+                if ours:
+                    if claims.get(old) != c:
+                        # record the static claim so the allocation
+                        # cursor can never hand this slot out
+                        claims[old] = c
+                    return old[0], old[1], False
+                # static slot stolen by a re-placed chunk: convert this
+                # chunk to a fresh slot on its own (static) path
+                new_p = old[0]
+            slot = self._alloc_slot(name, new_p)
+            if t is None:
+                t = self._tables[name] = {}
+            t[c] = (new_p, slot)
+            claims[(new_p, slot)] = c
+            if ours:
+                # the old slot is orphaned, never recycled: a stale op
+                # from an overlapping write may still land there
+                claims.pop(old, None)
+            return new_p, slot, True
+
+    # ---------------- bulk ops ----------------
+    def _chunk_spans(self, byte_lo: int, byte_hi: int):
+        """Yield (chunk_index, lo, hi) per chunk overlapping
+        [byte_lo, byte_hi) — lo/hi are tensor-relative byte offsets."""
+        C = self.chunk
         for c in range(byte_lo // C, (byte_hi + C - 1) // C):
             lo = max(byte_lo, c * C)
             hi = min(byte_hi, (c + 1) * C)
             if lo < hi:
-                yield c % P, (c // P) * C + (lo - c * C), lo, hi
+                yield c, lo, hi
 
-    # ---------------- bulk ops ----------------
     def _positioned(self, name: str, data_u8: np.ndarray, byte_lo: int,
                     write: bool, route: str, priority: IOPriority):
         """Chunked read into / write from ``data_u8`` (a uint8 view) that
         occupies tensor bytes [byte_lo, byte_lo + data_u8.nbytes).
         One channel op per chunk, so a higher-priority transfer's chunks
-        can overtake this one's mid-flight."""
+        can overtake this one's mid-flight. Placement is resolved here,
+        in the submitting thread (deterministic decision order), before
+        the ops fan out to the path channels."""
         nbytes = data_u8.nbytes
         if nbytes == 0:
             self._fd(name, 0)        # ensure the tensor exists on disk
             return
         byte_hi = byte_lo + nbytes
         eng = self.engine
+        C = self.chunk
         futs: List = []
-        for p, off, lo, hi in self._chunk_spans(byte_lo, byte_hi):
+        mutated = False
+        for c, lo, hi in self._chunk_spans(byte_lo, byte_hi):
+            n = hi - lo
+            if write:
+                p, slot, changed = self._place_for_write(name, c,
+                                                         full=(n == C))
+                mutated = mutated or changed
+            else:
+                p, slot = self.placement(name, c)
+            off = slot * C + (lo - c * C)
             mv = memoryview(data_u8[lo - byte_lo:hi - byte_lo])
 
-            def op(p=p, off=off, mv=mv, n=hi - lo):
+            def op(p=p, off=off, mv=mv, n=n):
                 fd = self._fd(name, p)
                 eng.throttle(route, n)
+                eng.throttle_path(p, n)
                 if write:
                     self._pwrite(fd, mv, off)
                 else:
@@ -98,9 +283,19 @@ class StripedFiles:
                             f"short read on {name!r} path {p}: "
                             f"{got}/{n} bytes at offset {off}")
             futs.append(eng.submit_chunk(p, op, priority, route=route,
-                                         nbytes=hi - lo))
+                                         nbytes=n))
+        err = None
         for f in futs:
-            f.result()
+            try:
+                f.result()
+            except BaseException as e:
+                err = err or e
+        if mutated:
+            # persist even on partial failure: the table describes where
+            # the bytes were SENT, and surviving chunks did land there
+            self._persist(name)
+        if err is not None:
+            raise err
 
     def write(self, name: str, data_u8: np.ndarray, byte_lo: int,
               priority: IOPriority):
@@ -123,6 +318,15 @@ class StripedFiles:
                 os.unlink(path)
             except FileNotFoundError:
                 pass
+        with self._map_lock:
+            self._tables.pop(name, None)
+            self._claims.pop(name, None)
+            self._cursors.pop(name, None)
+            self._map_checked.discard(name)
+        try:
+            os.unlink(self._map_path(name))
+        except FileNotFoundError:
+            pass
 
     def close(self):
         with self._fd_lock:

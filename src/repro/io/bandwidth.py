@@ -1,16 +1,30 @@
-"""Token-bucket bandwidth pacing per transfer route.
+"""Token-bucket bandwidth pacing, per transfer route and per SSD path.
 
 The container's filesystem is far faster than the SSDs the paper models,
 so byte counters alone cannot validate the perf model's *time*
-predictions. The simulator paces each configured route to a target
-bytes/s, turning `repro.core.perfmodel` rooflines into wall-clock
-observables (bench_io measures the achieved rate against the cap).
+predictions. Two independent simulators pace the chunk stream:
+
+* :class:`BandwidthSimulator` — one bucket per ROUTE
+  (``IOConfig.bandwidth``): models a shared link (the PCIe/NVMe fabric
+  every path rides).
+* :class:`PathBandwidthSimulator` — one bucket per PATH
+  (``IOConfig.path_bandwidth``, index = path), shared by that path's
+  reads and writes: models per-DEVICE speed, including heterogeneous
+  path sets (a fast and a slow NVMe behind one stripe). This is the
+  regime where chunk->path placement (``IOConfig.path_policy``)
+  matters: static striping pins the aggregate at P x min(cap), while
+  backlog-aware placement approaches sum(caps).
+
+Both apply per chunk, before the syscall; a chunk pays each configured
+cap it crosses. `bench_io` measures the achieved rates against the
+caps, turning `repro.core.perfmodel` rooflines into wall-clock
+observables.
 """
 from __future__ import annotations
 
 import threading
 import time
-from typing import Dict, Mapping, Optional
+from typing import Dict, List, Mapping, Optional, Sequence
 
 
 class TokenBucket:
@@ -63,3 +77,39 @@ class BandwidthSimulator:
 
     def __bool__(self) -> bool:
         return bool(self._buckets)
+
+
+class PathBandwidthSimulator:
+    """Per-path token buckets built from an ``IOConfig.path_bandwidth``
+    sequence (index = path; ``None`` = no per-path pacing). Each path's
+    bucket is shared by its reads and writes — a device cap, not a
+    route cap. Doubles as the rate-weight source for the
+    "weighted"/"backlog" placement policies (:meth:`weights`)."""
+
+    def __init__(self, caps: Optional[Sequence[float]], n_paths: int):
+        caps = list(caps) if caps else []
+        if caps and len(caps) != n_paths:
+            raise ValueError(
+                f"path_bandwidth has {len(caps)} cap(s) for "
+                f"{n_paths} path(s)")
+        self._caps = [float(c) for c in caps]
+        self._buckets: List[Optional[TokenBucket]] = [
+            TokenBucket(c) for c in self._caps] if caps else \
+            [None] * n_paths
+
+    def throttle(self, path_index: int, nbytes: int):
+        b = self._buckets[path_index]
+        if b is not None:
+            b.consume(nbytes)
+
+    def cap(self, path_index: int) -> Optional[float]:
+        return self._caps[path_index] if self._caps else None
+
+    def weights(self) -> List[float]:
+        """Relative placement weights, one per path: the configured
+        caps, or all-equal when no per-path pacing is set."""
+        return list(self._caps) if self._caps \
+            else [1.0] * len(self._buckets)
+
+    def __bool__(self) -> bool:
+        return bool(self._caps)

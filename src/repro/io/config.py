@@ -11,15 +11,24 @@ import dataclasses
 import os
 from typing import Mapping, Optional, Sequence
 
+#: The chunk->path placement policies (``IOConfig.path_policy``).
+#: "static" is the layout constant (chunk i -> path i % P, bit-for-bit
+#: the pre-placement-scheduling behavior); "weighted" spreads chunk
+#: bytes proportionally to the per-path bandwidth caps; "backlog" is
+#: MLP-Offload's idle-level rule — each chunk goes to the path whose
+#: queued bytes drain soonest under its rate.
+PATH_POLICIES = ("static", "weighted", "backlog")
+
 
 @dataclasses.dataclass(frozen=True)
 class IOConfig:
     """Knobs of the transfer engine.
 
     * ``paths`` — SSD mount points (directories). More than one enables
-      MLP-Offload-style striping: chunk *i* of every tensor lands on path
-      ``i % len(paths)``, and each path has its own worker thread, so
-      transfers proceed in parallel across paths.
+      MLP-Offload-style striping across per-path channel threads, so
+      transfers proceed in parallel across paths. WHERE a chunk lands
+      is the ``path_policy`` decision (default: chunk *i* on path
+      ``i % len(paths)``).
     * ``chunk_bytes`` — stripe unit; also the staging-buffer size.
     * ``inflight_bytes`` — backpressure budget: ``IOEngine.submit``
       blocks while the bytes of queued+running requests would exceed it
@@ -35,6 +44,20 @@ class IOConfig:
       :mod:`repro.core.perfmodel` rooflines in wall-clock.
     * ``staging_buffers`` — host staging pool depth for asynchronous
       spills (2 = classic double buffering).
+    * ``path_policy`` — chunk->path placement (:data:`PATH_POLICIES`):
+      ``"static"`` reproduces the round-robin layout constant
+      bit-for-bit; ``"weighted"`` splits chunk bytes proportionally to
+      the per-path caps; ``"backlog"`` places each chunk on the path
+      whose queued bytes drain soonest (live feedback). Placement
+      moves bytes BETWEEN paths only — per-(category, route) traffic
+      is policy-invariant.
+    * ``path_bandwidth`` — optional per-path simulated caps, bytes/s,
+      index = path (e.g. ``(0.2e9, 0.05e9)`` models a 4:1 fast/slow
+      pair). Each path gets its own token bucket, shared by its reads
+      and writes — a per-DEVICE cap, where ``bandwidth`` caps a
+      ROUTE across all paths. Also the rate weights of the
+      "weighted"/"backlog" policies. Must match ``len(paths)`` when
+      both are given.
     """
 
     paths: Optional[Sequence[str]] = None
@@ -43,6 +66,23 @@ class IOConfig:
     workers: int = 4
     bandwidth: Mapping[str, float] = dataclasses.field(default_factory=dict)
     staging_buffers: int = 2
+    path_policy: str = "static"
+    path_bandwidth: Optional[Sequence[float]] = None
+
+    def __post_init__(self):
+        if self.path_policy not in PATH_POLICIES:
+            raise ValueError(
+                f"path_policy {self.path_policy!r} not in {PATH_POLICIES}")
+        if self.path_bandwidth is not None:
+            caps = tuple(float(c) for c in self.path_bandwidth)
+            if any(c <= 0 for c in caps):
+                raise ValueError(
+                    f"path_bandwidth caps must be > 0, got {caps}")
+            if self.paths is not None and len(caps) != len(self.paths):
+                raise ValueError(
+                    f"path_bandwidth has {len(caps)} cap(s) for "
+                    f"{len(self.paths)} path(s)")
+            object.__setattr__(self, "path_bandwidth", caps)
 
     def resolved_paths(self, default_root: str) -> Sequence[str]:
         """The stripe directories, falling back to a single default."""
@@ -55,14 +95,21 @@ class IOConfig:
         With fewer paths than ranks, ranks share a device through
         per-rank subdirectories (disjoint stripe namespaces — correct,
         but those ranks contend for the device's bandwidth). With no
-        paths configured the caller's per-rank ``default_root`` applies.
-        """
+        paths configured the caller's per-rank ``default_root``
+        applies. ``path_bandwidth`` caps follow their paths through
+        the slice, so a rank's placement policy weighs exactly the
+        devices it drives."""
         if not (0 <= rank < world):
             raise ValueError(f"rank {rank} outside world of {world}")
         if not self.paths:
             return self
+        caps = self.path_bandwidth
         mine = list(self.paths)[rank::world]
+        mine_caps = None if caps is None else tuple(caps[rank::world])
         if not mine:
-            base = list(self.paths)[rank % len(self.paths)]
-            mine = [os.path.join(base, f"rank{rank}")]
-        return dataclasses.replace(self, paths=mine)
+            base_i = rank % len(self.paths)
+            mine = [os.path.join(list(self.paths)[base_i], f"rank{rank}")]
+            # the shared device's cap applies to the subdirectory too
+            mine_caps = None if caps is None else (caps[base_i],)
+        return dataclasses.replace(self, paths=mine,
+                                   path_bandwidth=mine_caps)

@@ -65,8 +65,8 @@ import time
 from concurrent.futures import Future
 from typing import Callable, Dict, List, Optional, Sequence
 
-from repro.io.bandwidth import BandwidthSimulator
-from repro.io.config import IOConfig
+from repro.io.bandwidth import BandwidthSimulator, PathBandwidthSimulator
+from repro.io.config import PATH_POLICIES, IOConfig
 from repro.io.staging import StagingPool
 from repro.obs.tracer import (CAT_IO_CHUNK, CAT_IO_QUEUE, CAT_IO_REQ,
                               CAT_IO_REQ_QUEUE)
@@ -86,6 +86,14 @@ class IOPriority(enum.IntEnum):
     CKPT_SPILL = 3
     ACT = 4
 
+
+#: Consecutive chunk failures on one path before the "backlog"/
+#: "weighted" placement policies stop choosing it for NEW chunks (a
+#: persistently failing device errors out fast, so its byte backlog
+#: alone would make it look attractively idle). Reads/overwrites of
+#: chunks already placed there still run — and still fail loudly.
+#: One later success on the path zeroes the count.
+PATH_FAIL_DRAIN_THRESHOLD = 3
 
 #: Default priority for a given traffic-meter category.
 CATEGORY_PRIORITY: Dict[str, IOPriority] = {
@@ -260,6 +268,12 @@ class IOEngine:
         self.tracer = tracer
         self.chunk_bytes = int(config.chunk_bytes)
         self.simulator = BandwidthSimulator(config.bandwidth)
+        self.path_simulator = PathBandwidthSimulator(config.path_bandwidth,
+                                                    len(self.paths))
+        # chunk->path placement policy: mutable at runtime (the
+        # autotuner's `apply_plan_config(path_policy=...)` actuates
+        # here); StripedFiles consults it per write
+        self.path_policy = config.path_policy
         self.staging = StagingPool(config.staging_buffers,
                                    max(self.chunk_bytes, 1 << 20))
         self._seq = itertools.count()
@@ -282,6 +296,17 @@ class IOEngine:
         self._path_backlog_bytes = [0] * len(self.paths)
         self._path_bytes = [0] * len(self.paths)
         self._path_chunk_ops = [0] * len(self.paths)
+        # cumulative chunk bytes per route and split per (route, path) —
+        # the split must SUM to the total exactly (placement moves
+        # bytes between paths, never between routes; obs.reconcile
+        # checks it)
+        self._route_bytes: Dict[str, int] = {}
+        self._route_path_bytes: Dict[str, List[int]] = {}
+        # placement state: bytes the dynamic policies have assigned per
+        # path (the deterministic "weighted" criterion and the backlog
+        # tie-break), and consecutive failures per path (fault drain)
+        self._placed_bytes = [0] * len(self.paths)
+        self._path_failures = [0] * len(self.paths)
         self._closed = False
         self._stats_lock = threading.Lock()
         self._stats = {
@@ -360,18 +385,30 @@ class IOEngine:
             if route and nbytes:
                 self._route_backlog[route] = \
                     self._route_backlog.get(route, 0) + nbytes
+                self._route_bytes[route] = \
+                    self._route_bytes.get(route, 0) + nbytes
+                per_path = self._route_path_bytes.get(route)
+                if per_path is None:
+                    per_path = self._route_path_bytes[route] = \
+                        [0] * len(self.paths)
+                per_path[path_index] += nbytes
             self._path_backlog[path_index] += 1
             self._path_backlog_bytes[path_index] += nbytes
             self._path_bytes[path_index] += nbytes
             self._path_chunk_ops[path_index] += 1
 
-        def _done(_f, route=route, nbytes=nbytes, pi=path_index):
+        def _done(f, route=route, nbytes=nbytes, pi=path_index):
             # fires on completion, failure, AND cancellation
             with self._backlog_lock:
                 if route and nbytes:
                     self._route_backlog[route] -= nbytes
                 self._path_backlog[pi] -= 1
                 self._path_backlog_bytes[pi] -= nbytes
+                if not f.cancelled():
+                    if f.exception() is not None:
+                        self._path_failures[pi] += 1
+                    else:
+                        self._path_failures[pi] = 0
 
         req.future.add_done_callback(_done)
         self._channels[path_index].submit(req)
@@ -387,11 +424,11 @@ class IOEngine:
     def least_loaded_path(self) -> int:
         """Index of the path channel with the smallest queued chunk-byte
         backlog — MLP-Offload's multi-path idle-level rule as a live
-        feedback signal (O(P) under one lock). Data placement is static
-        offset-striping, so this is ADVISORY: the autotune controller
-        records it per decision and the per-path-pacing follow-on
-        (ROADMAP item 3) consumes it to throttle hot paths; it does not
-        re-route committed chunks."""
+        feedback signal (O(P) under one lock). Under the dynamic
+        ``path_policy`` values this is no longer advisory:
+        :meth:`choose_path` consumes the same backlog (rate-normalized)
+        to place each newly written chunk; committed chunks keep their
+        recorded placement until a full overwrite."""
         with self._backlog_lock:
             return min(range(len(self._path_backlog_bytes)),
                        key=self._path_backlog_bytes.__getitem__)
@@ -400,14 +437,63 @@ class IOEngine:
         """``max/mean`` of the per-path chunk-byte backlogs (1.0 =
         perfectly balanced; 0.0 = all paths idle). The steering-signal
         scalar the autotuner logs alongside each decision: a sustained
-        imbalance says the striped layout is not using some path's
-        idle capacity, which per-path pacing can reclaim."""
+        imbalance says the current layout is not using some path's idle
+        capacity — the ``"backlog"`` placement policy is the actuator
+        that reclaims it."""
         with self._backlog_lock:
             total = sum(self._path_backlog_bytes)
             if not total:
                 return 0.0
             return (max(self._path_backlog_bytes) * len(
                 self._path_backlog_bytes)) / total
+
+    # ---------------- chunk placement ----------------
+    def set_path_policy(self, policy: str):
+        """Switch the chunk->path placement policy at runtime (the
+        autotuner's actuation point). Placement decisions already
+        recorded in chunk-location tables are untouched — the policy
+        governs where the NEXT full-chunk writes land."""
+        if policy not in PATH_POLICIES:
+            raise ValueError(
+                f"path_policy {policy!r} not in {PATH_POLICIES}")
+        self.path_policy = str(policy)
+
+    def choose_path(self, nbytes: int = 0) -> int:
+        """Pick the path for one chunk about to be written under the
+        active dynamic policy (``StripedFiles`` calls this per placed
+        chunk; meaningless under "static", which computes its layout).
+
+        * "weighted" — deterministic rate-proportional spreading:
+          argmin of (bytes this policy has placed there + nbytes) /
+          path weight, weights from the per-path caps (all-equal when
+          unpaced).
+        * "backlog" — MLP-Offload's idle-level feedback: argmin of the
+          path's queued-but-unfinished chunk bytes normalized by its
+          rate weight (the time until the path drains), with the
+          weighted criterion as the tie-break so an idle engine
+          degrades to rate-proportional spreading.
+
+        Paths at :data:`PATH_FAIL_DRAIN_THRESHOLD` consecutive chunk
+        failures are excluded (a dead path fails fast and would
+        otherwise look idle) unless every path is failing."""
+        backlog = self.path_policy == "backlog"
+        w = self.path_simulator.weights()
+        with self._backlog_lock:
+            live = [p for p in range(len(self.paths))
+                    if self._path_failures[p] < PATH_FAIL_DRAIN_THRESHOLD]
+            if not live:
+                live = list(range(len(self.paths)))
+
+            def score(p):
+                placed = (self._placed_bytes[p] + nbytes) / w[p]
+                if backlog:
+                    return ((self._path_backlog_bytes[p] + nbytes) / w[p],
+                            placed, p)
+                return (placed, p)
+
+            p = min(live, key=score)
+            self._placed_bytes[p] += nbytes
+            return p
 
     @property
     def inflight_bytes(self) -> int:
@@ -472,17 +558,34 @@ class IOEngine:
         route has no configured cap)."""
         self.simulator.throttle(route, nbytes)
 
+    def throttle_path(self, path_index: int, nbytes: int):
+        """Pace a chunk against its SSD path's simulated device cap
+        (no-op without ``IOConfig.path_bandwidth``). Applied in
+        addition to the route cap — a chunk pays every cap it
+        crosses."""
+        self.path_simulator.throttle(path_index, nbytes)
+
     def stats(self) -> dict:
         """Cumulative counters (the aggregate keys are stable; the
-        ``*_per_path`` lists — cumulative chunk bytes/ops, index =
-        path — are the per-path bandwidth evidence the ROADMAP
-        multi-path pacing item reads)."""
+        ``*_per_path`` lists — index = path — are the per-path
+        bandwidth evidence the placement policies and the perf model's
+        snapshot ingestion read). ``chunk_bytes_by_route_per_path``
+        splits each route's cumulative chunk bytes across paths;
+        placement only moves bytes BETWEEN paths, so each list must sum
+        exactly to the route's total (``obs.reconcile`` checks this)."""
         with self._stats_lock:
             s = {k: (dict(v) if isinstance(v, dict) else v)
                  for k, v in self._stats.items()}
         with self._backlog_lock:
             s["chunk_bytes_per_path"] = list(self._path_bytes)
             s["chunk_ops_per_path"] = list(self._path_chunk_ops)
+            s["chunk_bytes_by_route"] = dict(self._route_bytes)
+            s["chunk_bytes_by_route_per_path"] = {
+                r: list(v) for r, v in self._route_path_bytes.items()}
+            s["path_failures"] = list(self._path_failures)
+        s["path_policy"] = self.path_policy
+        s["path_bandwidth"] = [self.path_simulator.cap(i)
+                               for i in range(len(self.paths))]
         s["inflight_bytes"] = self._inflight
         s["num_paths"] = len(self.paths)
         s["staging_oversized_allocs"] = self.staging.oversized_allocs

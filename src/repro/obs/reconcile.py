@@ -79,11 +79,18 @@ class Reconciliation:
     route_seconds_measured: Dict[str, float]   # {} when tracing was off
     stalls: List[Tuple[str, float]]            # worst-first
     steps: int
+    #: per-path conservation violations (chunk placement moves bytes
+    #: between paths, never between routes, so every per-path split in
+    #: the snapshot must sum EXACTLY to its route total); one
+    #: human-readable line per violation, empty when exact
+    path_sum_mismatches: List[str] = dataclasses.field(default_factory=list)
 
     @property
     def ok(self) -> bool:
-        """Every byte row exact (the plan_traffic invariant)."""
-        return all(r.match for r in self.rows)
+        """Every byte row exact (the plan_traffic invariant) and every
+        per-path split summing exactly to its route total."""
+        return all(r.match for r in self.rows) \
+            and not self.path_sum_mismatches
 
     def format(self) -> str:
         """The human-readable table ``quickstart.py --trace`` prints."""
@@ -112,6 +119,11 @@ class Reconciliation:
                 lines.append(f"  {stream:<10} {s:.4f}")
         else:
             lines.append("stall attribution: no stalls metered")
+        if self.path_sum_mismatches:
+            lines.append("")
+            lines.append("per-path conservation VIOLATED:")
+            for msg in self.path_sum_mismatches:
+                lines.append(f"  {msg}")
         return "\n".join(lines)
 
 
@@ -165,4 +177,38 @@ def reconcile(plan, snapshot: dict, machine=None,
                     key=lambda kv: -kv[1])
     return Reconciliation(rows=rows, route_seconds_predicted=pred_s,
                           route_seconds_measured=meas_s, stalls=stalls,
-                          steps=n_steps)
+                          steps=n_steps,
+                          path_sum_mismatches=_check_path_sums(snapshot))
+
+
+def _check_path_sums(snapshot: dict) -> List[str]:
+    """Byte-exact conservation of the per-path splits (see
+    ``Reconciliation.path_sum_mismatches``). Two independent sources:
+
+    * the trace summary's per-route ``per_path`` bytes must sum to the
+      route's traced ``bytes``;
+    * each rank's engine ``chunk_bytes_by_route_per_path`` split must
+      sum to the engine's own ``chunk_bytes_by_route`` total.
+
+    Both pairs are incremented at different aggregation levels, so an
+    inexact sum means chunk placement created or lost bytes between
+    paths — the invariant the dynamic ``path_policy`` must preserve."""
+    out: List[str] = []
+    for route, d in (snapshot.get("trace") or {}).get("routes", {}).items():
+        per_path = d.get("per_path") or {}
+        if per_path:
+            s = sum(int(pp.get("bytes", 0)) for pp in per_path.values())
+            if s != int(d.get("bytes", 0)):
+                out.append(f"trace {route}: per-path bytes {s} != "
+                           f"route bytes {d.get('bytes')}")
+    io = snapshot.get("io") or []
+    for rank, st in enumerate(io if isinstance(io, list) else [io]):
+        by_route = (st or {}).get("chunk_bytes_by_route_per_path") or {}
+        totals = (st or {}).get("chunk_bytes_by_route") or {}
+        for route, per_path in by_route.items():
+            s = sum(int(b) for b in per_path)
+            total = int(totals.get(route, 0))
+            if s != total:
+                out.append(f"rank {rank} {route}: per-path chunk bytes "
+                           f"{s} != route chunk bytes {total}")
+    return out

@@ -137,7 +137,18 @@ class Tracer:
         single channel reduces to ``busy_s`` exactly). ``rate_bps =
         bytes / busy_wall_s`` is the aggregate effective rate —
         the feed for ``perfmodel.machine_from_snapshot``. ``channels``
-        counts the distinct threads that carried the route."""
+        counts the distinct threads that carried the route.
+
+        Per-path splits: chunk spans on channel threads carry the SSD
+        path index, so each route also reports ``per_path`` (path ->
+        bytes/busy_s/ops/rate_bps, keys stringified for JSON
+        round-trip). A path channel is a single thread, so its spans
+        never overlap and per-(route, path) ``busy_s`` IS that path's
+        wall occupancy — ``rate_bps = bytes / busy_s`` measures the
+        DEVICE's achieved rate no matter how few chunks placement sent
+        it. Per-path bytes sum exactly to the route's ``bytes``
+        (placement moves bytes between paths, never between routes);
+        ``obs.reconcile`` asserts that invariant."""
         routes: Dict[str, dict] = {}
         intervals: Dict[str, list] = {}
         tracks: Dict[str, set] = {}
@@ -148,7 +159,8 @@ class Tracer:
                 continue
             route = (args or {}).get("route") or "?"
             d = routes.setdefault(route, {"bytes": 0, "busy_s": 0.0,
-                                          "queue_s": 0.0, "ops": 0})
+                                          "queue_s": 0.0, "ops": 0,
+                                          "per_path": {}})
             if cat == CAT_IO_QUEUE:
                 d["queue_s"] += t1 - t0
             else:
@@ -157,11 +169,21 @@ class Tracer:
                 d["ops"] += 1
                 intervals.setdefault(route, []).append((t0, t1))
                 tracks.setdefault(route, set()).add(track)
+                path = (args or {}).get("path")
+                if path is not None:
+                    pp = d["per_path"].setdefault(
+                        str(path), {"bytes": 0, "busy_s": 0.0, "ops": 0})
+                    pp["bytes"] += int((args or {}).get("nbytes", 0))
+                    pp["busy_s"] += t1 - t0
+                    pp["ops"] += 1
         for route, d in routes.items():
             wall = _union_seconds(intervals.get(route, []))
             d["busy_wall_s"] = wall
             d["channels"] = len(tracks.get(route, ()))
             d["rate_bps"] = d["bytes"] / wall if wall > 0 else 0.0
+            for pp in d["per_path"].values():
+                pp["rate_bps"] = (pp["bytes"] / pp["busy_s"]
+                                  if pp["busy_s"] > 0 else 0.0)
         return {"enabled": self.enabled, "spans": n_spans,
                 "dropped": self.dropped, "routes": routes}
 

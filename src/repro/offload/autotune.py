@@ -41,18 +41,23 @@ Why each guard exists:
   ``cooldown``), and ``max_retunes`` caps the total.
 
 Trajectory neutrality: the candidate axes are the knobs proven
-bitwise-invariant (``prefetch_depth``, ``act_policy``) plus —
-explicit opt-in via ``wave_sizes`` — the wave axis, which is exact
-w.r.t. a fresh engine compiled with the new W from the same state
-(the plan-swap satellite pin) but regroups the cross-wave f32 fold.
-A retune therefore never changes what the model learns, only when
-its bytes move.
+bitwise-invariant (``prefetch_depth``, ``act_policy``,
+``path_policy`` — chunk placement moves bytes between paths, never
+changes what any tensor holds) plus — explicit opt-in via
+``wave_sizes`` — the wave axis, which is exact w.r.t. a fresh engine
+compiled with the new W from the same state (the plan-swap satellite
+pin) but regroups the cross-wave f32 fold. A retune therefore never
+changes what the model learns, only when its bytes move.
 
 Each decision also records the per-path steering signal
 (``IOEngine.least_loaded_path`` / ``path_imbalance`` — MLP-Offload's
-multi-path idle-level rule as live feedback): striping is static, so
-today the signal is surfaced for the per-path-pacing follow-on rather
-than re-routing committed chunks.
+multi-path idle-level rule as live feedback). With ``path_policies``
+configured the signal is no longer merely advisory: the snapshot's
+per-path achieved rates flow into ``machine_from_snapshot``, the LP
+prices "static" (``P x min(rate)``) against "backlog"/"weighted"
+(``sum(rates)``) via ``machine_for_path_policy``, and a retune
+actuates ``IOEngine.set_path_policy`` — closing the steering gap on
+heterogeneous or degraded path sets.
 """
 from __future__ import annotations
 
@@ -103,6 +108,7 @@ class AutotuneConfig:
     wave_sizes: Optional[Sequence[int]] = None
     prefetch_depths: Optional[Sequence[int]] = None
     act_policies: Optional[Sequence[str]] = None
+    path_policies: Optional[Sequence[str]] = None
     machine: Optional[MachineParams] = None  # base for unmeasured links
 
     def __post_init__(self):
@@ -185,19 +191,20 @@ class AutotuneController:
         self._window += 1
 
     # ---------------- the decision ----------------
-    def _current_knobs(self) -> Tuple[int, int, str]:
+    def _current_knobs(self) -> Tuple[int, int, str, str]:
         ocfg = self.eng.ocfg
         return (ocfg.resolved_wave_size(),
                 ocfg.resolved_prefetch_depth(),
-                self.eng.act_policy)
+                self.eng.act_policy,
+                self._ranks()[0].ioe.path_policy)
 
-    def _candidates(self) -> List[Tuple[int, int, str]]:
+    def _candidates(self) -> List[Tuple[int, int, str, str]]:
         """The candidate knob product. Axes not configured stay at
         their current value; wave candidates must divide M and are
         dropped under DP (DP plans are vertical — ``solve_config``
         rejects a wave there for the same reason)."""
         a = self.acfg
-        W_cur, d_cur, pol_cur = self._current_knobs()
+        W_cur, d_cur, pol_cur, pp_cur = self._current_knobs()
         M = self.eng.ocfg.num_microbatches
         dp = hasattr(self.eng, "ranks")
         waves = [W_cur] if (a.wave_sizes is None or dp) else \
@@ -207,32 +214,36 @@ class AutotuneController:
             [int(d) for d in a.prefetch_depths]
         pols = [pol_cur] if a.act_policies is None else \
             [str(p) for p in a.act_policies]
+        paths = [pp_cur] if a.path_policies is None else \
+            [str(p) for p in a.path_policies]
         # the current knobs always lead the list, so `decide` can tell
         # "current plan infeasible" from "current plan merely not best"
-        out = [(W_cur, d_cur, pol_cur)]
+        out = [(W_cur, d_cur, pol_cur, pp_cur)]
         for w in waves or [W_cur]:
             for d in depths or [d_cur]:
                 for p in pols or [pol_cur]:
-                    if (w, d, p) not in out:
-                        out.append((w, d, p))
+                    for pp in paths or [pp_cur]:
+                        if (w, d, p, pp) not in out:
+                            out.append((w, d, p, pp))
         return out
 
     def _score(self, machine: MachineParams,
-               knobs: Tuple[int, int, str]) -> Optional[float]:
+               knobs: Tuple[int, int, str, str]) -> Optional[float]:
         """Predicted iteration seconds of one candidate under the live
         machine — ``None`` strictly means the LP is infeasible there
         (the candidate is unusable), never an argument error: invalid
         knob combinations were filtered in ``_candidates`` and
         ``solve_config`` raises ``ValueError`` on the rest."""
         eng = self.eng
-        W, depth, pol = knobs
+        W, depth, pol, path_pol = knobs
         R = getattr(eng, "R", 1)
         w = engine_workload(eng.ocfg, eng.cfg, eng.P,
                             eng.dtype.itemsize, eng.act_nbytes)
         sol = solve_config(machine, w, eng.ocfg.num_microbatches,
                            eng.ocfg.alpha, num_gpus=R,
                            wave=None if R > 1 else W,
-                           act_policy=pol, lookahead=depth > 0)
+                           act_policy=pol, lookahead=depth > 0,
+                           path_policy=path_pol)
         return None if sol is None else float(sol.iteration_time)
 
     def decide(self, snapshot: dict, steps: Optional[int] = None) -> dict:
@@ -278,7 +289,8 @@ class AutotuneController:
         scored = [(knobs, self._score(live, knobs))
                   for knobs in self._candidates()]
         decision["candidates"] = [
-            {"wave": k[0], "depth": k[1], "act": k[2], "pred_s": s}
+            {"wave": k[0], "depth": k[1], "act": k[2], "path": k[3],
+             "pred_s": s}
             for k, s in scored]
         feasible = [(k, s) for k, s in scored if s is not None]
         t_cur = dict(scored).get(cur)
@@ -289,9 +301,11 @@ class AutotuneController:
             return decision
         best, t_best = min(feasible, key=lambda ks: ks[1])
         decision["current"] = {"wave": cur[0], "depth": cur[1],
-                               "act": cur[2], "pred_s": t_cur}
+                               "act": cur[2], "path": cur[3],
+                               "pred_s": t_cur}
         decision["best"] = {"wave": best[0], "depth": best[1],
-                            "act": best[2], "pred_s": t_best}
+                            "act": best[2], "path": best[3],
+                            "pred_s": t_best}
         if best == cur:
             decision.update(action="hold",
                             reason="current plan is the predicted best")
@@ -311,6 +325,8 @@ class AutotuneController:
             changes["prefetch_depth"] = best[1]
         if best[2] != cur[2]:
             changes["activation_policy"] = best[2]
+        if best[3] != cur[3]:
+            changes["path_policy"] = best[3]
         decision.update(
             action="retune", changes=changes,
             reason=("current plan LP-infeasible under the live machine"
@@ -319,11 +335,13 @@ class AutotuneController:
         return decision
 
     def _steering(self) -> List[dict]:
-        """The per-rank multi-path steering signal (advisory — see the
+        """The per-rank multi-path steering signal (the same backlog
+        the "backlog" placement policy consumes per chunk — see the
         module header)."""
         out = []
         for rk in self._ranks():
             ioe = rk.ioe
             out.append({"least_loaded_path": ioe.least_loaded_path(),
-                        "imbalance": ioe.path_imbalance()})
+                        "imbalance": ioe.path_imbalance(),
+                        "path_policy": ioe.path_policy})
         return out

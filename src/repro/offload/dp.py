@@ -59,6 +59,7 @@ import numpy as np
 from repro.core.plan import (PlanSpec, compile_vertical, insert_prefetch,
                              mb_order, shard_bounds)
 from repro.io import IOConfig, IOEngine
+from repro.io.config import PATH_POLICIES
 from repro.models import blocks as blk
 from repro.offload.coordinators import (ActivationCoordinator,
                                         InterLayerTensorCoordinator,
@@ -331,13 +332,16 @@ class DataParallelOffloadEngine:
 
     # ------------------------------------------------------------------
     def apply_plan_config(self, prefetch_depth: Optional[int] = None,
-                          activation_policy: Optional[str] = None):
+                          activation_policy: Optional[str] = None,
+                          path_policy: Optional[str] = None):
         """Between-iteration plan hot-swap (the autotuner seam), DP
         variant: same quiesce-and-clear contract as
         :meth:`OffloadEngine.apply_plan_config` applied to EVERY rank
-        stack. DP plans are vertical by construction, so there is no
-        ``wave_size`` knob here — ``lp_search.solve_config`` rejects
-        one under ``num_gpus>1`` for the same reason."""
+        stack (``path_policy`` actuates every rank's I/O engine — each
+        rank places chunks over its own path shard). DP plans are
+        vertical by construction, so there is no ``wave_size`` knob
+        here — ``lp_search.solve_config`` rejects one under
+        ``num_gpus>1`` for the same reason."""
         changes = {}
         if prefetch_depth is not None:
             changes["prefetch_depth"] = int(prefetch_depth)
@@ -349,7 +353,13 @@ class DataParallelOffloadEngine:
             raise ValueError(
                 f"unknown activation_policy "
                 f"{trial.activation_policy!r}")
+        if path_policy is not None and path_policy not in PATH_POLICIES:
+            raise ValueError(
+                f"path_policy {path_policy!r} not in {PATH_POLICIES}")
         self.finish()
+        if path_policy is not None:
+            for rk in self.ranks:
+                rk.ioe.set_path_policy(path_policy)
         for rk in self.ranks:
             rk.params_c.reset()
             rk.params_c.clear_gates()

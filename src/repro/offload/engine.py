@@ -68,6 +68,7 @@ from repro.core.perfmodel import MachineParams, StorageRatios
 from repro.core.plan import (PlanSpec, compile_wave, insert_prefetch,
                              mb_order)
 from repro.io import IOConfig, IOEngine
+from repro.io.config import PATH_POLICIES
 from repro.models import blocks as blk
 from repro.models.common import rms_norm
 from repro.models.model import _xent_chunk
@@ -550,12 +551,17 @@ class OffloadEngine:
     # ------------------------------------------------------------------
     def apply_plan_config(self, wave_size: Optional[int] = None,
                           prefetch_depth: Optional[int] = None,
-                          activation_policy: Optional[str] = None):
+                          activation_policy: Optional[str] = None,
+                          path_policy: Optional[str] = None):
         """Hot-swap the compiled plan BETWEEN iterations — the
         autotuner's retune seam. Changes any subset of the tunable
         knobs (``wave_size`` retargets the schedule to the wave hybrid
-        with that W; ``prefetch_depth``; ``activation_policy``) and
-        recompiles; the next ``train_step`` interprets the new plan.
+        with that W; ``prefetch_depth``; ``activation_policy``;
+        ``path_policy`` actuates the I/O engine's chunk->path
+        placement — no plan-shape change, so no recompile needed for
+        it alone, but the same quiesce applies so the policy flips at
+        an iteration boundary) and recompiles; the next ``train_step``
+        interprets the new plan.
 
         The seam must not leak per-plan state, in either direction:
 
@@ -593,8 +599,13 @@ class OffloadEngine:
             raise ValueError(
                 f"unknown activation_policy "
                 f"{trial.activation_policy!r}")
+        if path_policy is not None and path_policy not in PATH_POLICIES:
+            raise ValueError(
+                f"path_policy {path_policy!r} not in {PATH_POLICIES}")
         # quiesce: flush + wait the α tails, drain ckpt/act streams
         self.finish()
+        if path_policy is not None:
+            self.ioe.set_path_policy(path_policy)
         # drop per-plan residue on every coordinator
         self.params_c.reset()
         self.params_c.clear_gates()

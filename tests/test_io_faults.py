@@ -14,6 +14,7 @@ import numpy as np
 import pytest
 
 from repro.io import IOConfig, IOEngine, IOPriority, StripedFiles
+from repro.io.engine import PATH_FAIL_DRAIN_THRESHOLD
 from repro.offload.stores import SSDStore, TrafficMeter
 
 T = 5.0  # every blocking call in this file is bounded by this
@@ -53,12 +54,51 @@ class FaultyFiles(StripedFiles):
         return super()._pread(fd, mv, off)
 
 
+class DeadPathFiles(FaultyFiles):
+    """FaultyFiles modelling one persistently dead DEVICE: every chunk
+    op landing on ``dead_path`` fails, ops on other paths run clean."""
+
+    def __init__(self, engine):
+        super().__init__(engine)
+        self.dead_path = None
+
+    def _fd_path(self, fd):
+        with self._fd_lock:
+            for (_, p), f in self._fds.items():
+                if f == fd:
+                    return p
+        return None
+
+    def _pwrite(self, fd, mv, off):
+        if self.dead_path is not None \
+                and self._fd_path(fd) == self.dead_path:
+            raise OSError(errno.EIO, "injected dead-path write fault")
+        super()._pwrite(fd, mv, off)
+
+    def _pread(self, fd, mv, off):
+        if self.dead_path is not None \
+                and self._fd_path(fd) == self.dead_path:
+            raise OSError(errno.EIO, "injected dead-path read fault")
+        return super()._pread(fd, mv, off)
+
+
 def _faulty_store(root, **cfg_kw):
     cfg_kw.setdefault("chunk_bytes", 1 << 10)
     eng = IOEngine(IOConfig(paths=[os.path.join(root, "nvme0")], **cfg_kw))
     ssd = SSDStore(eng.paths[0], TrafficMeter(), engine=eng)
     ssd.files.close()
     ssd.files = FaultyFiles(eng)          # swap in the faulting backend
+    return eng, ssd
+
+
+def _dead_path_store(root, n_paths=2, **cfg_kw):
+    cfg_kw.setdefault("chunk_bytes", 1 << 10)
+    cfg_kw.setdefault("path_policy", "backlog")
+    paths = [os.path.join(root, f"nvme{i}") for i in range(n_paths)]
+    eng = IOEngine(IOConfig(paths=paths, **cfg_kw))
+    ssd = SSDStore(paths[0], TrafficMeter(), engine=eng)
+    ssd.files.close()
+    ssd.files = DeadPathFiles(eng)
     return eng, ssd
 
 
@@ -173,6 +213,74 @@ def test_worker_threads_survive_fault_storm():
         s = eng.stats()
         assert s["completed"] == s["submitted"]
         assert s["inflight_bytes"] == 0
+        ssd.close()
+
+
+# ---------------------------------------------------------------------------
+# per-path fault isolation under dynamic placement
+# ---------------------------------------------------------------------------
+
+def test_dead_path_drains_placement_to_survivors():
+    """One persistently failing path under ``path_policy="backlog"``:
+    after PATH_FAIL_DRAIN_THRESHOLD consecutive chunk failures the
+    policy stops choosing the path for NEW chunks, so writes drain to
+    the survivors and round-trip cleanly — while reads of chunks
+    already placed on the dead path keep failing loudly, and none of
+    the failures leak backpressure budget or staging slots."""
+    with tempfile.TemporaryDirectory() as d:
+        eng, ssd = _dead_path_store(d, staging_buffers=2)
+        pre = np.arange(2048, dtype=np.float32)       # 8 chunks, spread
+        ssd.write("pre", pre, "opt")                  # over both paths
+        assert any(ssd.files.placement("pre", c)[0] == 1 for c in range(8))
+        ssd.files.dead_path = 1
+
+        # already-placed chunks on the dead path: reads fail loudly,
+        # they are NOT silently rerouted
+        with pytest.raises(OSError, match="dead-path read fault"):
+            ssd.read("pre", "opt")
+
+        # keep writing; every chunk still sent to the dead path fails
+        # the whole write, until the drain threshold excludes the path
+        survivor = None
+        for i in range(4 * PATH_FAIL_DRAIN_THRESHOLD):
+            arr = np.full(1024, i, dtype=np.float32)  # 4 full chunks
+            try:
+                ssd.write(f"t{i}", arr, "opt")
+                survivor = (f"t{i}", arr)
+                break
+            except OSError:
+                pass
+        assert survivor is not None, \
+            "placement never drained off the dead path"
+        assert eng.stats()["path_failures"][1] >= PATH_FAIL_DRAIN_THRESHOLD
+
+        # the surviving write landed wholly on path 0 and round-trips;
+        # so does everything written afterwards (sync and async)
+        name, arr = survivor
+        assert all(ssd.files.placement(name, c)[0] == 0 for c in range(4))
+        np.testing.assert_array_equal(ssd.read(name, "opt"), arr)
+        after = np.arange(1024, dtype=np.float32)
+        ssd.write_async("after", after, "ckpt").result(timeout=T)
+        np.testing.assert_array_equal(ssd.read("after", "ckpt"), after)
+
+        # no leaks from the failure storm: budget drained and the full
+        # staging pool is still acquirable
+        s = eng.stats()
+        assert s["inflight_bytes"] == 0
+        assert s["completed"] == s["submitted"]
+        got = threading.Event()
+
+        def drain_pool():
+            a = eng.staging.acquire(64)
+            b = eng.staging.acquire(64)
+            got.set()
+            a.release()
+            b.release()
+
+        t = threading.Thread(target=drain_pool, daemon=True)
+        t.start()
+        assert got.wait(T), "dead-path failures leaked a staging buffer"
+        t.join(T)
         ssd.close()
 
 
