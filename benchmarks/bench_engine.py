@@ -24,7 +24,11 @@ plan) and the heterogeneous-path placement A/B (static ``i % P``
 striping vs backlog-aware chunk placement on a 2-path device whose
 per-path token buckets sit at a 4:1 rate split, with per-path achieved
 rates and the ``obs.reconcile`` byte-conservation flag in the cells)
-— and dumps per-cell throughput, stall-seconds, prefetch
+and the continuous-batching serve smoke (a ``repro.serve.ServeEngine``
+on the paced 2-path device: >= 2 concurrent requests under a KV budget
+below the total KV footprint, a mid-generation preempt/resume round
+trip, and the three-way KV byte invariant as the ``serve_ok`` boolean
+gate) — and dumps per-cell throughput, stall-seconds, prefetch
 hit-rate, and the top stall stream (from ``metrics_snapshot()``) for
 ``check_smoke.py`` to gate against the checked-in
 ``baseline_smoke.json``.
@@ -343,6 +347,111 @@ def run_path_ab(rep: Optional[Reporter] = None,
     return cells
 
 
+def run_serve_smoke(rep: Optional[Reporter] = None,
+                    trace_dir: str = "") -> dict:
+    """The continuous-batching serve smoke (the PR-acceptance
+    datapoint): a ``repro.serve.ServeEngine`` on the paced 2-path
+    device (per-path token buckets at the 4:1 ``PATH_AB_CAPS`` split,
+    backlog placement), serving more requests than the KV budget holds
+    at once — so admission queues, >= 2 requests run concurrently, and
+    an explicit mid-generation preempt exercises the full
+    SPILL_KV -> tiers -> FETCH_KV round trip. The cell carries decode
+    tokens/s (gated against the baseline like every cell), the KV tier
+    hit-rate (warm fraction of fetched KV bytes, informational), and
+    ``serve_ok`` — the three-way byte invariant (per-step
+    ``plan_traffic`` predictions == measured meters ==
+    ``traffic.kv_traffic`` closed form), gated as a boolean like
+    ``path_sum_ok``."""
+    import numpy as np
+
+    import jax.numpy as jnp
+
+    from repro.core.traffic import kv_blocks, kv_traffic
+    from repro.io import IOConfig
+    from repro.models import model as mdl
+    from repro.serve import ServeConfig, ServeEngine
+
+    rep = rep or Reporter()
+    cfg = get_config("gpt-tiny")
+    n_req, prompt_len, gen, max_len, bb = 4, 6, 6, 16, 4096
+    rep.section(f"bench-smoke: continuous-batching serve ({cfg.name}, "
+                f"{n_req} requests, paced 2-path caps {PATH_AB_CAPS})")
+    with tempfile.TemporaryDirectory() as root:
+        paths = [os.path.join(root, "p0"), os.path.join(root, "p1")]
+        template = mdl.init_caches(cfg, 1, max_len, dtype=jnp.float32)
+        bpr = sum(kv_blocks(nb, bb)
+                  for nb in mdl.cache_unit_nbytes(cfg, template))
+        scfg = ServeConfig(
+            max_len=max_len, kv_block_bytes=bb,
+            kv_budget_bytes=2 * bpr * bb,       # half the submitted load
+            io=IOConfig(paths=paths, chunk_bytes=PATH_AB_CHUNK,
+                        path_bandwidth=PATH_AB_CAPS,
+                        path_policy="backlog"),
+            trace=bool(trace_dir))
+        eng = ServeEngine(cfg, scfg, jax.random.PRNGKey(0), root)
+        rng = np.random.default_rng(0)
+        prompts = [[int(t) for t in
+                    rng.integers(0, cfg.vocab_size, prompt_len)]
+                   for _ in range(n_req)]
+        # compile warm-up on a throwaway request, then reset the timed
+        # counters (NOT the byte meters — the invariant is cumulative)
+        warm = eng.submit(prompts[0], 2)
+        while eng.pending():
+            eng.step()
+        assert len(eng.result(warm)) == 2
+        eng.phase_time.clear()
+        eng.tokens_decoded = 0
+
+        rids = [eng.submit(p, gen) for p in prompts]
+        assert eng.capacity_blocks < n_req * eng.blocks_per_request
+        eng.step()
+        eng.preempt(next(r for r in rids
+                         if eng.requests[r].state == "running"))
+        max_conc, steps = 0, 1
+        while eng.pending():
+            eng.step()
+            steps += 1
+            max_conc = max(max_conc, sum(
+                1 for r in eng.requests.values() if r.state == "running"))
+            assert steps < 200, "serve smoke did not converge"
+        assert max_conc >= 2, f"only {max_conc} concurrent request(s)"
+        assert all(len(eng.result(r)) == gen for r in rids)
+
+        measured = {k: int(v) for k, v in eng.meter.bytes.items()}
+        predicted = {k: int(v) for k, v in eng.predicted_traffic.items()}
+        kt = kv_traffic(eng.kv_unit_nbytes, bb, scfg.kv_x_host,
+                        eng.kv_spills, eng.kv_fetches)
+        serve_ok = all(
+            measured.get(k, 0) == predicted.get(k, 0)
+            for k in set(measured) | set(predicted)) and \
+            measured.get(("kv", "gpu->cpu"), 0) == kt.spill and \
+            measured.get(("kv", "cpu->ssd"), 0) == kt.ssd_spill and \
+            measured.get(("kv", "cpu->gpu"), 0) == kt.fetch and \
+            measured.get(("kv", "ssd->cpu"), 0) == kt.ssd_fetch
+        snap = eng.metrics_snapshot()
+        decode_s = max(eng.phase_time.get("decode", 0.0), 1e-9)
+        cell = {
+            "tokens_per_s": eng.tokens_decoded / decode_s,
+            "kv_hit_rate": snap["kv"]["hit_rate"],
+            "serve_ok": bool(serve_ok),
+            "max_concurrent": max_conc,
+            "preempted": int(eng.preempted),
+            "steps": steps,
+            "kv_bytes": sum(v for (c, _), v in eng.meter.bytes.items()
+                            if c == "kv"),
+        }
+        if trace_dir:
+            eng.tracer.export_chrome(
+                os.path.join(trace_dir, "serve_paced_2path.trace.json"))
+        eng.close()
+    rep.add("smoke/serve_paced_2path_tokens_per_s",
+            f"{cell['tokens_per_s']:.0f}",
+            f"decode; kv hit-rate {cell['kv_hit_rate']:.2f}, "
+            f"{cell['max_concurrent']} concurrent, "
+            f"3-way bytes {'exact' if cell['serve_ok'] else 'MISMATCH'}")
+    return {"serve_paced_2path": cell}
+
+
 #: the deliberately MIS-SPECIFIED machine the autotune A/B hands its
 #: controller: compute and DRAM scaled to the gpt-tiny smoke workload,
 #: but the SSD link rates left at the A100-node datasheet numbers
@@ -498,6 +607,12 @@ def run_smoke(rep: Optional[Reporter] = None, json_path: str = "",
     # backlog-aware chunk placement on a 4:1 per-path paced device
     # (gated by check_smoke, with the per-path conservation check) ---
     cells.update(run_path_ab(rep, trace_dir=trace_dir))
+
+    # --- the continuous-batching serve smoke: >= 2 concurrent requests
+    # under a KV budget below the total KV footprint on the paced
+    # 2-path device, with the three-way KV byte invariant as a boolean
+    # gate (serve_ok) next to the decode tokens/s ---
+    cells.update(run_serve_smoke(rep, trace_dir=trace_dir))
 
     # --- trace artifacts for the schedule cells, strictly AFTER every
     # measured window (see _export_cell_trace) ---

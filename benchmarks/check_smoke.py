@@ -6,7 +6,9 @@ micro-stalls cannot flap CI) — fails the build. Offload systems regress
 silently unless per-route traffic, throughput, AND stall numbers are
 checked on every push (MLP-Offload's lesson). Cells present in only one
 file are reported but do not fail (a new schedule/policy lands before
-its baseline). Two informational columns from ``metrics_snapshot()``
+its baseline). Boolean flags a cell carries (``path_sum_ok`` byte
+conservation, the serve cell's ``serve_ok`` three-way KV invariant)
+gate absolutely: False anywhere fails the build. Two informational columns from ``metrics_snapshot()``
 ride along ungated: the prefetch hit rate and the top stall stream
 (which plan stream owns the blocked seconds), so a stall-gate failure
 arrives with its attribution in the same table.
@@ -112,6 +114,19 @@ def compare(measured: dict, baseline: dict, tolerance: float,
         if mp is not None:
             rows.append((cell, "path_sum_ok", str(bool(mp)), "True",
                          "ok" if mp else "REGRESSION"))
+        # the serve three-way byte invariant: cells that carry the flag
+        # must carry it True (per-step plan_traffic predictions ==
+        # measured meters == traffic.kv_traffic closed form, exact) —
+        # and the KV tier hit-rate rides along informational, so a
+        # serve throughput regression arrives with its tier mix
+        mso = m_cells.get(cell, {}).get("serve_ok")
+        if mso is not None:
+            rows.append((cell, "serve_ok", str(bool(mso)), "True",
+                         "ok" if mso else "REGRESSION"))
+        mk = m_cells.get(cell, {}).get("kv_hit_rate")
+        if mk is not None:
+            rows.append((cell, "kv_hit_rate", mk,
+                         b_cells.get(cell, {}).get("kv_hit_rate"), "ok"))
     # the lookahead A/B acceptance gate (absolute, within the measured
     # run): hints on must beat hints off on the paced-SSD cells
     la = m_cells.get("paced_alpha_lookahead", {}).get("tokens_per_s")
@@ -205,7 +220,8 @@ def main(argv=None) -> int:
     units = {"tokens_per_s": "tok/s", "stall_s": "s/iter",
              "speedup_x": "x (gate)", "recovery_x": "x (gate)",
              "hit_rate": "", "top_stall": "(info)",
-             "path_sum_ok": "(gate)"}
+             "path_sum_ok": "(gate)", "serve_ok": "(gate)",
+             "kv_hit_rate": "(info)"}
 
     def fmt(v):
         if v is None:

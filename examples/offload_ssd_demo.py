@@ -85,8 +85,8 @@ def main() -> None:
         print(f"\npaper closed form (params+grads, per step): "
               f"load {pred.param_load / 1e9:.3f} GB + "
               f"grad {pred.grad_swap / 1e9:.3f} GB")
-        st = eng.stats()
-        io = st["io"]
+        st = eng.metrics_snapshot()
+        io = st["io"][0]                  # per-rank list; single rank here
         print(f"\nio engine: {io['submitted']} requests "
               f"({io['cancelled']} cancelled), {io['chunk_ops']} chunk ops "
               f"over {io['num_paths']} path(s), "
@@ -94,7 +94,8 @@ def main() -> None:
         print("  bytes by priority:",
               {k: f"{v / 1e9:.3f} GB"
                for k, v in io["bytes_by_priority"].items() if v})
-        print(f"host residency peak: {st['host_peak_nbytes'] / 1e6:.1f} MB")
+        print(f"host residency peak: "
+              f"{st['host_peak_nbytes'][0] / 1e6:.1f} MB")
         print("phase seconds:",
               {k: round(v, 2) for k, v in eng.phase_time.items()})
         eng.close()

@@ -133,7 +133,7 @@ def main() -> None:
                     for _ in range(steps)][-1]
             eng.finish()
             b, pol = eng.meter.bytes, eng.act_policy
-            look = eng.stats()["lookahead"]
+            look = eng.metrics_snapshot()["lookahead"]
             eng.close()
         return loss, b, pol, look
 

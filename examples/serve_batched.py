@@ -1,13 +1,20 @@
-"""Batched serving: prefill a prompt batch, then greedy-decode tokens
-with the per-architecture KV / SSM / sliding-window caches — the same
-``prefill`` / ``decode_step`` entry points the decode_32k / long_500k
-dry-run shapes lower.
+"""Continuous-batching serving through ``repro.serve.ServeEngine``:
+requests stream through admission control, per-step compiled serve
+plans (tiered param fetches + KV block spill/fetch at
+``IOPriority.KV``), and iteration-level batched decode — with a
+preempt-to-SSD / bitwise-resume round trip in the middle.
 
     PYTHONPATH=src python examples/serve_batched.py --arch gpt-tiny
     PYTHONPATH=src python examples/serve_batched.py \
-        --arch falcon-mamba-7b --smoke     # O(1)-state SSM decode
+        --arch gpt-tiny --no-offload      # pure-jit in-memory path
+
+``--no-offload`` runs the seed-era pure-jit B=1 loop — the bitwise f32
+reference: with ``--check`` both paths run and every request's greedy
+tokens must agree exactly. Non-dense families (SSM/VLM/enc-dec) only
+support the ``--no-offload`` path.
 """
 import argparse
+import tempfile
 import time
 
 import jax
@@ -19,57 +26,94 @@ from repro.data import SyntheticLM
 from repro.models import model as mdl
 
 
+def reference_decode(cfg, key, prompts, gen, max_len):
+    """Pure-jit in-memory decode, one request at a time at B=1 (the
+    bitwise f32 reference the offloaded path must match exactly)."""
+    params = mdl.init_params(cfg, key, dtype=jnp.float32)
+    prefill = jax.jit(lambda p, b, c: mdl.prefill(p, cfg, b, c))
+    decode = jax.jit(lambda p, t, pos, c: mdl.decode_step(p, cfg, t, pos, c))
+    outs = []
+    for pr in prompts:
+        caches = mdl.init_caches(cfg, 1, max_len, dtype=jnp.float32)
+        batch = {"tokens": jnp.asarray([pr], jnp.int32)}
+        if cfg.family == "encdec":
+            batch["enc_embeds"] = jnp.zeros(
+                (1, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+        if cfg.family == "vlm":
+            batch["image_embeds"] = jnp.zeros(
+                (1, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+        logits, caches = prefill(params, batch, caches)
+        toks = [int(jnp.argmax(logits[0]))]
+        pos0 = len(pr) + (cfg.frontend_tokens if cfg.family == "vlm" else 0)
+        for i in range(gen - 1):
+            logits, caches = decode(
+                params, jnp.asarray([[toks[-1]]], jnp.int32),
+                jnp.asarray(pos0 + i, jnp.int32), caches)
+            toks.append(int(jnp.argmax(logits[0])))
+        outs.append(toks)
+    return outs
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="gpt-tiny")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=8)
+    ap.add_argument("--no-offload", action="store_true",
+                    help="pure-jit in-memory decode (the bitwise ref)")
+    ap.add_argument("--check", action="store_true",
+                    help="run BOTH paths; assert token-exact agreement")
     args = ap.parse_args()
 
     cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
     max_len = args.prompt_len + args.gen
-    params = mdl.init_params(cfg, jax.random.PRNGKey(0))
-    caches = mdl.init_caches(cfg, args.batch, max_len)
+    key = jax.random.PRNGKey(0)
     data = SyntheticLM(cfg.vocab_size, seed=0)
-    prompts = jnp.asarray(data.batch(args.batch, args.prompt_len))
-    batch = {"tokens": prompts}
-    if cfg.family == "encdec":
-        batch["enc_embeds"] = jnp.zeros(
-            (args.batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
-    if cfg.family == "vlm":
-        batch["image_embeds"] = jnp.zeros(
-            (args.batch, cfg.frontend_tokens, cfg.d_model), jnp.bfloat16)
+    prompts = [list(map(int, row)) for row in
+               np.asarray(data.batch(args.batch, args.prompt_len))]
 
-    prefill = jax.jit(lambda p, b, c: mdl.prefill(p, cfg, b, c))
-    decode = jax.jit(lambda p, t, pos, c: mdl.decode_step(p, cfg, t, pos, c))
+    if args.no_offload or cfg.family != "dense":
+        if cfg.family != "dense" and not args.no_offload:
+            print(f"{cfg.name}: family {cfg.family!r} serves in-memory "
+                  "only (ServeEngine is dense-stack)")
+        t0 = time.perf_counter()
+        outs = reference_decode(cfg, key, prompts, args.gen, max_len)
+        dt = time.perf_counter() - t0
+        print(f"{cfg.name}: in-memory decode "
+              f"{args.batch * args.gen / dt:.1f} tok/s")
+        print("first sequence:", outs[0])
+        print("OK")
+        return
 
-    t0 = time.perf_counter()
-    logits, caches = prefill(params, batch, caches)
-    jax.block_until_ready(logits)
-    t_prefill = time.perf_counter() - t0
-    print(f"{cfg.name}: prefill {args.batch}x{args.prompt_len} "
-          f"in {t_prefill:.2f}s  (family={cfg.family})")
+    from repro.serve import ServeConfig, ServeEngine
+    with tempfile.TemporaryDirectory(prefix="repro_serve_") as workdir:
+        scfg = ServeConfig(max_len=max_len, kv_block_bytes=16 << 10,
+                           kv_x_host=0.5, param_x_host=0.5)
+        eng = ServeEngine(cfg, scfg, key, workdir)
+        rids = [eng.submit(p, args.gen) for p in prompts]
+        eng.step()                       # prefill wave
+        if args.gen > 2 and len(rids) > 1:
+            eng.step()
+            eng.preempt(rids[0])         # exercise spill -> bitwise resume
+        t0 = time.perf_counter()
+        while eng.pending():
+            eng.step()
+        dt = time.perf_counter() - t0
+        snap = eng.metrics_snapshot()
+        outs = [eng.result(r) for r in rids]
+        print(f"{cfg.name}: served {len(rids)} requests, "
+              f"{snap['tokens_decoded']} decode tokens, "
+              f"kv hit-rate {snap['kv']['hit_rate']:.2f}, "
+              f"{snap['tokens_decoded'] / max(dt, 1e-9):.1f} tok/s")
+        print("first sequence:", outs[0])
+        eng.close()
 
-    tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-    out = [tok]
-    pos0 = args.prompt_len + (cfg.frontend_tokens
-                              if cfg.family == "vlm" else 0)
-    t0 = time.perf_counter()
-    for i in range(args.gen - 1):
-        logits, caches = decode(params, tok,
-                                jnp.asarray(pos0 + i, jnp.int32), caches)
-        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        out.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.perf_counter() - t0
-    gen = np.concatenate([np.asarray(t) for t in out], axis=1)
-    assert gen.shape == (args.batch, args.gen)
-    assert not np.isnan(np.asarray(logits)).any()
-    print(f"decoded {args.gen} tokens/seq: "
-          f"{args.batch * (args.gen - 1) / dt:.1f} tok/s")
-    print("first sequence:", gen[0].tolist())
+    if args.check:
+        ref = reference_decode(cfg, key, prompts, args.gen, max_len)
+        assert outs == ref, (outs, ref)
+        print("offloaded == in-memory (token-exact)")
     print("OK")
 
 

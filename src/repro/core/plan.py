@@ -115,7 +115,27 @@ ALLREDUCE_HEAD        DP: ring all-reduce cost of the replicated head
 HEAD_ADAM             device Adam on embedding / unembed / final norm
 WAIT_OPT              α=0: drain the overlapped optimizer requests
 BARRIER               jax.effects_barrier() at the fwd/bwd boundary
+PREFETCH_KV(l, m)     hint: start request m's unit-l KV tail SSD read now
+                      (maps to IOPriority.KV; bytes accounted at FETCH_KV)
+FETCH_KV(l, m)        serving: await request m's unit-l KV blocks on
+                      device (kv ssd->cpu cold blocks + cpu->gpu all,
+                      block-padded)
+SPILL_KV(l, m)        serving: evict request m's unit-l KV blocks to the
+                      warm/cold tiers (kv gpu->cpu all + cpu->ssd cold
+                      blocks, block-padded); also the eviction barrier
+                      KV hints never cross
+APPEND_KV(l, m)       serving: record the tokens request m appended to
+                      its unit-l device-resident block table (HBM write
+                      — moves no offload bytes; occupancy accounting)
 ====================  =====================================================
+
+Serving plans (``repro.serve``) are compiled per engine step directly
+into this IR with ``schedule="serve"``: per-unit ``FETCH_PARAM`` ops
+(the same lookahead pass places their ``PREFETCH`` hints), the KV ops
+above, and ``PHASE`` markers tagged ``prefill``/``decode`` carrying the
+request id in ``m`` for the compute. :func:`plan_traffic` prices them
+through the same abstract interpreter (see the ``kv_*`` /
+``param_unit_nbytes`` fields of :class:`PlanCosts`).
 
 Plans are compiled ONCE per engine (the schedule depends only on
 (L, M, W, R, α) and the micro-batch order function) and executed every
@@ -192,6 +212,10 @@ class Op(enum.Enum):
     HEAD_ADAM = "head_adam"
     WAIT_OPT = "wait_opt"
     BARRIER = "barrier"
+    PREFETCH_KV = "prefetch_kv"
+    FETCH_KV = "fetch_kv"
+    SPILL_KV = "spill_kv"
+    APPEND_KV = "append_kv"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -444,15 +468,16 @@ HINT_FOR_FETCH: Dict[Op, Op] = {
     Op.FETCH_CKPT_BWD: Op.PREFETCH_CKPT,
     Op.FETCH_ACT: Op.PREFETCH_ACT,
     Op.OPT_LATE: Op.PREFETCH_OPT,
+    Op.FETCH_KV: Op.PREFETCH_KV,
 }
 
 #: every hint op kind (executor: submit the fetch early; moves no bytes)
 HINT_KINDS = (Op.PREFETCH, Op.PREFETCH_OPT, Op.PREFETCH_CKPT,
-              Op.PREFETCH_ACT)
+              Op.PREFETCH_ACT, Op.PREFETCH_KV)
 
 
 def _hint_pass(ops: List[PlanOp], fetch_kinds, hint_kind: Op,
-               depth: int) -> List[PlanOp]:
+               depth: int, barrier_kinds=(None,)) -> List[PlanOp]:
     """One stream's lookahead pass: every op whose kind is in
     ``fetch_kinds`` gets exactly one ``hint_kind`` hint, placed right
     after the ``depth``-th previous same-stream fetch in the same
@@ -462,7 +487,10 @@ def _hint_pass(ops: List[PlanOp], fetch_kinds, hint_kind: Op,
     leading ``OPT_LATE`` prefix: a hint before the α gates are armed
     would fetch parameters the late optimizer segment is still
     writing), or the segment's ``RESET_PARAMS``. Hints never cross a
-    ``RESET_PARAMS``."""
+    ``RESET_PARAMS`` — nor any extra ``barrier_kinds`` the stream
+    declares (the KV stream's ``SPILL_KV`` evictions: a hint hoisted
+    above an eviction would fetch blocks the eviction is still
+    writing)."""
     lead = -1
     for i, op in enumerate(ops):
         if op.op is Op.PHASE:
@@ -475,7 +503,7 @@ def _hint_pass(ops: List[PlanOp], fetch_kinds, hint_kind: Op,
     anchor = lead
     recent: List[int] = []           # last <= depth same-stream fetches
     for i, op in enumerate(ops):
-        if op.op is Op.RESET_PARAMS:
+        if op.op is Op.RESET_PARAMS or op.op in barrier_kinds:
             anchor = i
             recent = []
         elif op.op in fetch_kinds:
@@ -570,6 +598,12 @@ def insert_prefetch(plan: Plan, depth: int = 1) -> Plan:
     else:
         ops = _hint_pass(ops, (Op.FETCH_CKPT_BWD,), Op.PREFETCH_CKPT,
                          depth)
+    if any(o.op is Op.FETCH_KV for o in ops):
+        # the KV stream (serving plans): one PREFETCH_KV per FETCH_KV,
+        # never hoisted across a SPILL_KV — an eviction is the barrier
+        # that makes the tiers the source of truth for those blocks
+        ops = _hint_pass(ops, (Op.FETCH_KV,), Op.PREFETCH_KV, depth,
+                         barrier_kinds=(Op.SPILL_KV,))
     ops = _opt_hint_pass(ops)
     return dataclasses.replace(plan, ops=tuple(ops))
 
@@ -593,6 +627,19 @@ class PlanCosts:
     act_res_bytes: int = 0      # one (layer, micro-batch) vjp-residual
                                 # payload — what SPILL_ACT/FETCH_ACT move
                                 # (engines size it via jax.eval_shape)
+    # ---- serving (schedule="serve" plans; repro.serve) ----
+    kv_block_bytes: int = 0     # fixed KV block size (0 = no KV stream)
+    kv_x_host: float = 0.0      # fraction of evicted KV blocks kept
+                                # host-warm (rest go cold to SSD)
+    kv_unit_nbytes: Tuple[int, ...] = ()    # per cache-unit KV payload
+                                # bytes for ONE request (index = the
+                                # FETCH_KV/SPILL_KV op's ``l``); block
+                                # padding is applied by the analyzer
+    param_unit_nbytes: Tuple[int, ...] = ()  # serve per-unit param blob
+                                # bytes — when non-empty, FETCH_PARAM(l)
+                                # is priced per unit instead of by ``P``
+    param_x_host: float = 0.0   # serve param tier split (byte fraction
+                                # host-resident, TieredVector rounding)
 
     @staticmethod
     def from_engine(eng) -> "PlanCosts":
@@ -671,6 +718,13 @@ def plan_traffic(plan: Plan, costs: PlanCosts):
     for op in plan.ops:
         k = op.op
         if k is Op.FETCH_PARAM:
+            if costs.param_unit_nbytes:
+                # serving: per-unit param blob, tiered by byte fraction
+                nb = costs.param_unit_nbytes[op.l]
+                add(0, "param", "ssd->cpu",
+                    nb - _khost(costs.param_x_host, nb))
+                add(0, "param", "cpu->gpu", nb)
+                continue
             add(0, "param", "ssd->cpu", (P - _khost(x.param, P)) * ps)
             add(0, "param", "cpu->gpu", P * ps)
         elif k is Op.ALLGATHER:
@@ -775,7 +829,28 @@ def plan_traffic(plan: Plan, costs: PlanCosts):
             for r in range(R):
                 add(r, "head_grad", "gpu->net", ring)
                 add(r, "head_grad", "net->gpu", ring)
-        # every other op moves no bytes
+        elif k is Op.SPILL_KV:
+            # eviction: ALL of the unit's blocks leave the device
+            # (block-padded), the host-warm head stays in DRAM, the
+            # cold tail goes to SSD — the TieredVector split applied
+            # at BLOCK granularity (repro.core.traffic.kv_blocks)
+            from repro.core.traffic import kv_blocks
+            bb = costs.kv_block_bytes
+            nbk = kv_blocks(costs.kv_unit_nbytes[op.l], bb)
+            kb = _khost(costs.kv_x_host, nbk)
+            add(0, "kv", "gpu->cpu", nbk * bb)
+            add(0, "kv", "cpu->ssd", (nbk - kb) * bb)
+        elif k is Op.FETCH_KV:
+            # resume: the cold tail re-reads from SSD, then every block
+            # (warm head + tail) lands back on device
+            from repro.core.traffic import kv_blocks
+            bb = costs.kv_block_bytes
+            nbk = kv_blocks(costs.kv_unit_nbytes[op.l], bb)
+            kb = _khost(costs.kv_x_host, nbk)
+            add(0, "kv", "ssd->cpu", (nbk - kb) * bb)
+            add(0, "kv", "cpu->gpu", nbk * bb)
+        # every other op moves no bytes (APPEND_KV is a device-HBM
+        # block-table write — occupancy accounting, no offload traffic)
 
     dicts = [dict(d) for d in out]
     return dicts[0] if R == 1 else dicts

@@ -184,6 +184,58 @@ def act_spill_traffic(A: float, M: int, L: int,
     )
 
 
+def kv_blocks(nbytes: int, block_bytes: int) -> int:
+    """Number of fixed-size KV blocks one payload occupies (ceil) — the
+    ONE rounding the serve block tables, :func:`kv_traffic`, and
+    ``repro.core.plan.plan_traffic`` all share."""
+    if block_bytes <= 0:
+        raise ValueError(f"block_bytes must be > 0, got {block_bytes}")
+    return -(-int(nbytes) // int(block_bytes))
+
+
+@dataclasses.dataclass(frozen=True)
+class KVTraffic:
+    """EXACT engine-level counters of the serving KV-block stream
+    (``repro.serve``): evictions (``SPILL_KV``) move ALL of a cache
+    unit's blocks off device and write the cold tail to SSD; resumes
+    (``FETCH_KV``) re-read the cold tail and restore every block.
+    ``x_host`` is the warm (host-resident) BLOCK fraction — the
+    TieredVector split applied at block granularity, so all four
+    counters are multiples of the block size. ``APPEND_KV`` ops move no
+    offload bytes (device-HBM block-table writes)."""
+    spill: int          # kv gpu->cpu: all blocks of every evicted unit
+    ssd_spill: int      # kv cpu->ssd: the cold (1 - x_host) block tails
+    fetch: int          # kv cpu->gpu: all blocks of every resumed unit
+    ssd_fetch: int      # kv ssd->cpu: the cold tails re-read on resume
+
+    @property
+    def total(self) -> int:
+        return self.spill + self.ssd_spill + self.fetch + self.ssd_fetch
+
+
+def kv_traffic(unit_nbytes, block_bytes: int, x_host: float,
+               spills, fetches) -> KVTraffic:
+    """Closed-form KV-stream counters: ``spills[i]`` / ``fetches[i]``
+    are how many times cache unit ``i`` (payload ``unit_nbytes[i]``)
+    was evicted / resumed this window. Each event moves the unit's full
+    block-padded payload across the device boundary and its cold block
+    tail across the SSD boundary, with ``k = round(x_host · blocks)``
+    warm blocks held in host DRAM (the same rounding the coordinator
+    and ``plan_traffic`` apply) — the third leg of the serve three-way
+    byte invariant."""
+    spill = ssd_spill = fetch = ssd_fetch = 0
+    for nb, ns, nf in zip(unit_nbytes, spills, fetches):
+        blocks = kv_blocks(nb, block_bytes)
+        cold = (blocks - int(round(x_host * blocks))) * block_bytes
+        padded = blocks * block_bytes
+        spill += ns * padded
+        ssd_spill += ns * cold
+        fetch += nf * padded
+        ssd_fetch += nf * cold
+    return KVTraffic(spill=spill, ssd_spill=ssd_spill, fetch=fetch,
+                     ssd_fetch=ssd_fetch)
+
+
 def wave_ckpt_traffic(cs: float, M: int, W: int, L: int,
                       act_spill: bool = False) -> CkptTraffic:
     """Exact per-iteration checkpoint / inter-layer-gradient counters of

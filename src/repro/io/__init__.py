@@ -96,6 +96,23 @@ How plan ops map to request priorities
   ``FETCH_CKPT_BWD`` actually needs them — whose ``PREFETCH_CKPT``
   hint streams the tail back in behind the previous micro-batch's
   backward instead of blocking the executor at the fetch.
+* ``SPILL_KV``/``FETCH_KV`` — the serving-time KV-block stream
+  (``repro.serve``) — run at ``KV``, between the optimizer-state and
+  ckpt-spill classes: a resumed request's next decode step blocks on
+  its ``FETCH_KV`` (so KV outranks the deferrable spill tails), but a
+  training-style param fetch sharing the paths must still win (mixed
+  tenancy). KV payloads move as fixed ``kv_block_bytes`` blocks — a
+  unit's cache padded to whole blocks, the warm ``round(x_host *
+  blocks)`` head held in host DRAM and only the cold tail touching
+  SSD (TieredVector's split at block granularity) — and
+  ``PREFETCH_KV`` hints come from the SAME lookahead pass as training
+  hints, with every ``SPILL_KV`` acting as a hint barrier so no read
+  is queued across the eviction that makes the tiers authoritative.
+  ``APPEND_KV`` is a device-HBM block-table write: zero offload
+  bytes. The closed form is ``repro.core.traffic.kv_traffic``;
+  ``plan_traffic`` and the serve meters must agree with it exactly
+  (the ``tests/test_serve.py`` three-way sweep and the bench-smoke
+  ``serve_ok`` gate pin this).
 * ``SPILL_ACT``/``FETCH_ACT`` — the SSDTrain-style activation stream
   (``OffloadConfig.activation_policy="spill"``) — run at ``ACT``, the
   bottom class: each layer's vjp residuals ride out after its forward
@@ -198,8 +215,9 @@ chunks already placed there keep failing loudly — no silent reroute.
 
 Follow-ons this unlocks are tracked in ROADMAP.md (NCCL-backed
 collectives, uneven-rank sharding, an io_uring backend, NVMe-oF remote
-path entries riding the per-path pacing/placement machinery,
-serving-time KV-cache reuse).
+path entries riding the per-path pacing/placement machinery).
+Serving-time KV-cache reuse landed as ``repro.serve`` (the ``KV``
+priority class above).
 """
 from repro.io.backend import StripedFiles  # noqa: F401
 from repro.io.bandwidth import BandwidthSimulator, TokenBucket  # noqa: F401

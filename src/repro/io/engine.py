@@ -75,6 +75,12 @@ from repro.obs.tracer import (CAT_IO_CHUNK, CAT_IO_QUEUE, CAT_IO_REQ,
 class IOPriority(enum.IntEnum):
     """Lower value = more urgent (GreedySnake's critical-path order).
 
+    ``KV`` (serving-time KV-cache block stream, ``repro.serve``) sits
+    right below the optimizer state: a late ``FETCH_KV`` stalls a whole
+    request's next decode step — user-visible latency — but it must
+    never starve the training-critical param/grad/opt streams when the
+    two workloads share a device.
+
     ``ACT`` (SSDTrain-style activation spill/fetch) sits BELOW ckpt
     spills: the stream is opportunistic — it exists to soak up spare
     write bandwidth, and a late activation fetch only delays one
@@ -83,8 +89,9 @@ class IOPriority(enum.IntEnum):
     PARAM_FETCH = 0
     INTER_LAYER_GRAD = 1
     OPTIMIZER_STATE = 2
-    CKPT_SPILL = 3
-    ACT = 4
+    KV = 3
+    CKPT_SPILL = 4
+    ACT = 5
 
 
 #: Consecutive chunk failures on one path before the "backlog"/
@@ -101,6 +108,7 @@ CATEGORY_PRIORITY: Dict[str, IOPriority] = {
     "inter_grad": IOPriority.INTER_LAYER_GRAD,
     "grad": IOPriority.INTER_LAYER_GRAD,
     "opt": IOPriority.OPTIMIZER_STATE,
+    "kv": IOPriority.KV,
     "ckpt": IOPriority.CKPT_SPILL,
     "act": IOPriority.ACT,
 }
@@ -565,7 +573,7 @@ class IOEngine:
         crosses."""
         self.path_simulator.throttle(path_index, nbytes)
 
-    def stats(self) -> dict:
+    def _collect_stats(self) -> dict:
         """Cumulative counters (the aggregate keys are stable; the
         ``*_per_path`` lists — index = path — are the per-path
         bandwidth evidence the placement policies and the perf model's
@@ -590,6 +598,23 @@ class IOEngine:
         s["num_paths"] = len(self.paths)
         s["staging_oversized_allocs"] = self.staging.oversized_allocs
         return s
+
+    def metrics_snapshot(self) -> dict:
+        """Versioned counter snapshot — the one supported metrics
+        surface (same schema as :func:`_collect_stats` plus a
+        ``version`` key tracking ``repro.obs.SNAPSHOT_VERSION``)."""
+        from repro.obs.registry import SNAPSHOT_VERSION
+        return {"version": SNAPSHOT_VERSION, **self._collect_stats()}
+
+    def stats(self) -> dict:
+        """Deprecated alias for :func:`metrics_snapshot` (without the
+        ``version`` key). Will be removed after the deprecation window
+        noted in CHANGES.md."""
+        import warnings
+        warnings.warn(
+            "IOEngine.stats() is deprecated; use metrics_snapshot()",
+            DeprecationWarning, stacklevel=2)
+        return self._collect_stats()
 
     # ---------------- lifecycle ----------------
     def shutdown(self, wait: bool = True):

@@ -298,6 +298,62 @@ def init_caches(cfg, batch: int, seq_len: int, dtype=jnp.bfloat16):
     return caches
 
 
+def cache_units(cfg) -> list:
+    """The cache BLOCK LAYOUT seam ``repro.serve`` spills/fetches at:
+    one unit per (prefix block | period-i sub-j | suffix block), in
+    stack order. A unit is the smallest cache granule that round-trips
+    through :func:`get_cache_unit`/:func:`set_cache_unit` bitwise — for
+    a plain dense stack (no prefix/suffix, period length 1) this is
+    exactly one unit per layer."""
+    plan = blk.build_plan(cfg)
+    units = [("prefix", j) for j in range(len(plan.prefix))]
+    units += [("period", i, j) for i in range(plan.n_periods)
+              for j in range(len(plan.period))]
+    units += [("suffix", j) for j in range(len(plan.suffix))]
+    return units
+
+
+def cache_unit_nbytes(cfg, caches) -> list:
+    """Per-unit payload bytes (shape metadata only — no device reads),
+    aligned with :func:`cache_units` order. The serve engine's KV block
+    tables and ``plan_traffic``'s ``kv_unit_nbytes`` both come from
+    here, so the three-way byte invariant shares one source."""
+    return [sum(int(l.size) * l.dtype.itemsize
+                for l in jax.tree.leaves(get_cache_unit(caches, u)))
+            for u in cache_units(cfg)]
+
+
+def get_cache_unit(caches, unit):
+    """One unit's cache pytree (period units slice the scan stack)."""
+    if unit[0] == "prefix":
+        return caches["prefix"][unit[1]]
+    if unit[0] == "suffix":
+        return caches["suffix"][unit[1]]
+    _, i, j = unit
+    return jax.tree.map(lambda a: a[i], caches["periods"][f"sub{j}"])
+
+
+def set_cache_unit(caches, unit, value):
+    """Functionally replace one unit; returns the new caches pytree."""
+    new = dict(caches)
+    if unit[0] == "prefix":
+        t = list(new["prefix"])
+        t[unit[1]] = value
+        new["prefix"] = tuple(t)
+        return new
+    if unit[0] == "suffix":
+        t = list(new["suffix"])
+        t[unit[1]] = value
+        new["suffix"] = tuple(t)
+        return new
+    _, i, j = unit
+    periods = dict(new["periods"])
+    periods[f"sub{j}"] = jax.tree.map(lambda a, x: a.at[i].set(x),
+                                      periods[f"sub{j}"], value)
+    new["periods"] = periods
+    return new
+
+
 def prefill(params, cfg, batch, caches, *, scan_impl="jnp"):
     """Process the prompt; fill caches; return (last_logits, caches)."""
     plan = blk.build_plan(cfg)

@@ -23,7 +23,8 @@ Three pieces, layered bottom-up:
 from repro.obs.reconcile import (Reconciliation, ReconRow, STALL_STREAM,
                                  reconcile, stall_by_stream,
                                  top_stall_stream)
-from repro.obs.registry import SNAPSHOT_VERSION, build_snapshot, traffic_maps
+from repro.obs.registry import (SNAPSHOT_VERSION, build_serve_snapshot,
+                                build_snapshot, traffic_maps)
 from repro.obs.tracer import (CAT_HINT, CAT_IO_CHUNK, CAT_IO_QUEUE,
                               CAT_IO_REQ, CAT_IO_REQ_QUEUE, CAT_PLAN,
                               Tracer)
@@ -31,7 +32,8 @@ from repro.obs.tracer import (CAT_HINT, CAT_IO_CHUNK, CAT_IO_QUEUE,
 __all__ = [
     "Tracer", "CAT_PLAN", "CAT_HINT", "CAT_IO_CHUNK", "CAT_IO_QUEUE",
     "CAT_IO_REQ", "CAT_IO_REQ_QUEUE",
-    "SNAPSHOT_VERSION", "build_snapshot", "traffic_maps",
+    "SNAPSHOT_VERSION", "build_snapshot", "build_serve_snapshot",
+    "traffic_maps",
     "Reconciliation", "ReconRow", "STALL_STREAM", "reconcile",
     "stall_by_stream", "top_stall_stream",
 ]

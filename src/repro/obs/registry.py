@@ -58,7 +58,7 @@ def build_snapshot(eng) -> Dict[str, object]:
       (completed train steps), ``act_policy``
     * bytes — ``traffic`` (per-rank list of ``"category:route" ->
       bytes`` meter snapshots, the measured side of the reconciliation)
-    * storage — ``io`` / ``io_depth`` (per-rank ``IOEngine.stats()`` /
+    * storage — ``io`` / ``io_depth`` (per-rank ``IOEngine.metrics_snapshot()`` /
       ``depth()``, including the per-path counters),
       ``host_peak_nbytes`` / ``host_nbytes``, ``bounds`` (DP shard
       ranges, ``None`` single-rank)
@@ -86,7 +86,7 @@ def build_snapshot(eng) -> Dict[str, object]:
         "steps": int(eng.step_num),
         "act_policy": eng.act_policy,
         "traffic": [dict(rk.meter.snapshot()) for rk in rks],
-        "io": [rk.ioe.stats() for rk in rks],
+        "io": [rk.ioe._collect_stats() for rk in rks],
         "io_depth": [rk.ioe.depth() for rk in rks],
         "host_peak_nbytes": [rk.host.peak_nbytes for rk in rks],
         "host_nbytes": [rk.host.nbytes() for rk in rks],
@@ -107,6 +107,69 @@ def build_snapshot(eng) -> Dict[str, object]:
     log = getattr(eng, "autotune_log", None)
     if log is not None:
         snap["autotune"] = list(log)
+    return _jsonable(snap)
+
+
+def build_serve_snapshot(eng) -> Dict[str, object]:
+    """The serve-engine counterpart of :func:`build_snapshot` — same
+    versioning and JSON discipline, serve-shaped keys:
+
+    * identity — ``version``, ``schedule`` (``"serve"``), ``steps``
+    * bytes — ``traffic`` (per-rank list, single rank), ``predicted``
+      (the accumulated per-step ``plan_traffic`` predictions — the
+      plan side of the three-way KV invariant), ``plan_costs``
+    * kv — block table state (``block_bytes``, ``capacity_blocks``,
+      ``used_blocks``, ``x_host``), lifecycle counters (``admitted``
+      / ``preempted`` / ``finished`` / ``appends``), per-unit
+      ``spills`` / ``fetches`` (the ``traffic.kv_traffic`` closed-form
+      inputs), and ``hit_rate`` — the warm-tier fraction of fetched KV
+      bytes (1 - ssd->cpu / cpu->gpu; 1.0 when nothing was fetched)
+    * serving — ``tokens_decoded``, ``phase_time``, ``waiting`` /
+      ``running`` request counts
+    * storage/time/spans — ``io``, ``io_depth``, ``host_peak_nbytes``,
+      ``host_nbytes``, ``lookahead``, ``trace`` (as in training)
+    """
+    import dataclasses as _dc
+
+    traffic = dict(eng.meter.snapshot())
+    kv_fetch = traffic.get("kv:cpu->gpu", 0)
+    kv_ssd = traffic.get("kv:ssd->cpu", 0)
+    snap = {
+        "version": SNAPSHOT_VERSION,
+        "schedule": "serve",
+        "ranks": 1,
+        "steps": int(eng.step_num),
+        "traffic": [traffic],
+        "predicted": {f"{c}:{r}": v
+                      for (c, r), v in eng.predicted_traffic.items()},
+        "plan_costs": _dc.asdict(eng.plan_costs()),
+        "kv": {
+            "block_bytes": int(eng.scfg.kv_block_bytes),
+            "capacity_blocks": int(eng.capacity_blocks),
+            "used_blocks": int(eng.used_blocks),
+            "x_host": float(eng.scfg.kv_x_host),
+            "blocks_per_request": int(eng.blocks_per_request),
+            "admitted": int(eng.admitted),
+            "preempted": int(eng.preempted),
+            "finished": int(eng.finished),
+            "appends": int(eng.appends),
+            "spills": list(eng.kv_spills),
+            "fetches": list(eng.kv_fetches),
+            "hit_rate": 1.0 - kv_ssd / kv_fetch if kv_fetch else 1.0,
+        },
+        "tokens_decoded": int(eng.tokens_decoded),
+        "phase_time": dict(eng.phase_time),
+        "waiting": sum(1 for r in eng.requests.values()
+                       if r.state == "waiting" or r.state == "evicted"),
+        "running": sum(1 for r in eng.requests.values()
+                       if r.state == "running"),
+        "io": [eng.ioe._collect_stats()],
+        "io_depth": [eng.ioe.depth()],
+        "host_peak_nbytes": [eng.host.peak_nbytes],
+        "host_nbytes": [eng.host.nbytes()],
+        "lookahead": eng._lookahead_stats(),
+        "trace": eng.tracer.summary(),
+    }
     return _jsonable(snap)
 
 

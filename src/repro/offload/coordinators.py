@@ -38,6 +38,16 @@
   at ``get`` and the executor degrades that one micro-batch to the
   recompute path — the checkpoint tier it needs is still intact.
 
+* KVBlockCoordinator — the serving-time KV-cache block stream
+  (``repro.serve``): an evicted request's per-layer cache pytree is
+  flattened to one byte payload, padded to a whole number of
+  fixed-size blocks (``kv_blocks``), the ``x_host`` head blocks kept
+  in CPU and the cold tail streamed to SSD at ``IOPriority.KV``
+  (above ckpt spills — a late ``FETCH_KV`` is user-visible decode
+  latency). Resume restores every block bitwise: the true payload
+  length is kept in coordinator memory, so padding never leaks into
+  the rebuilt pytree.
+
 Every coordinator counts lookahead hits/misses (``la_hits`` /
 ``la_misses``: did the consumer find a completed prefetch?) — the
 hit-rate column of the bench-smoke artifact. When the engine attaches
@@ -581,6 +591,199 @@ class ActivationCoordinator:
         keys = set(self._n) | set(self._pending) | set(self._prefetched)
         for l, m in keys:
             self.drop(l, m)
+
+    def wait_pending(self):
+        """Drain outstanding spills/reads (finish/teardown)."""
+        for d in (self._pending, self._prefetched):
+            for req in list(d.values()):
+                try:
+                    req.result()
+                except (CancelledError, OSError):
+                    pass
+            d.clear()
+
+
+class KVBlockCoordinator:
+    """Tiered KV-cache block stream, keyed (request, layer-unit).
+
+    Layout per key: the flattened cache payload is padded up to
+    ``n_blocks * block_bytes`` (``kv_blocks`` — the SAME ceil the plan
+    interpreter and ``traffic.kv_traffic`` price), the
+    ``round(x_host * n_blocks)`` head blocks live in the host store
+    (``kv:r:l:h``), and the cold tail blocks are written to SSD
+    asynchronously (``kv:r:l:s``, category ``"kv"`` =>
+    ``IOPriority.KV``). Cache treedef and leaf dtypes/shapes stay in
+    coordinator memory — structure, not data. ``get`` rebuilds the
+    pytree bitwise from the true (un-padded) payload length."""
+
+    def __init__(self, block_bytes: int, x_host: float, host: HostStore,
+                 ssd: SSDStore, meter: TrafficMeter, engine: IOEngine):
+        if block_bytes <= 0:
+            raise ValueError(f"block_bytes must be > 0, got {block_bytes}")
+        self.block_bytes = int(block_bytes)
+        self.x = float(x_host)
+        self.host = host
+        self.ssd = ssd
+        self.meter = meter
+        self.engine = engine
+        self._tree: Dict[Tuple[int, int], object] = {}
+        self._meta: Dict[Tuple[int, int], list] = {}
+        self._k: Dict[Tuple[int, int], int] = {}       # host head blocks
+        self._blocks: Dict[Tuple[int, int], int] = {}  # total blocks
+        self._n: Dict[Tuple[int, int], int] = {}       # true payload bytes
+        self._pending: Dict[Tuple[int, int], IORequest] = {}     # spills
+        self._prefetched: Dict[Tuple[int, int], IORequest] = {}  # reads
+        self.la_hits = 0        # get() found a landed tail prefetch
+        self.la_misses = 0      # get() read the cold tail synchronously
+        self.tracer = None      # engine-attached repro.obs.Tracer
+        self._hint_t: Dict[Tuple[int, int], float] = {}
+
+    def _name(self, r: int, l: int) -> str:
+        return f"kv:{r}:{l}"
+
+    def blocks_of(self, nbytes: int) -> int:
+        from repro.core.traffic import kv_blocks
+        return kv_blocks(nbytes, self.block_bytes)
+
+    def put(self, r: int, l: int, caches):
+        """SPILL_KV: evict request r's layer-unit-l cache pytree to the
+        tiers (all blocks off device; cold tail to SSD, async)."""
+        leaves, treedef = jax.tree.flatten(caches)
+        metas, chunks = [], []
+        for leaf in leaves:
+            arr = np.asarray(leaf)
+            metas.append((arr.dtype, arr.shape))
+            chunks.append(np.ascontiguousarray(arr).reshape(-1)
+                          .view(np.uint8))
+        buf = np.concatenate(chunks) if chunks else np.zeros(0, np.uint8)
+        bb = self.block_bytes
+        nbk = self.blocks_of(buf.size)
+        pad = np.zeros(nbk * bb, np.uint8)
+        pad[:buf.size] = buf
+        _xfer(self.meter, self.engine, "kv", "gpu->cpu", pad.nbytes)
+        key = (r, l)
+        kb = int(round(self.x * nbk))
+        self._tree[key] = treedef
+        self._meta[key] = metas
+        self._k[key] = kb
+        self._blocks[key] = nbk
+        self._n[key] = buf.size
+        if kb:
+            self.host.put(self._name(r, l) + ":h", pad[:kb * bb].copy())
+        if kb < nbk:
+            old = self._pending.pop(key, None)
+            if old is not None:
+                old.result()    # never two in-flight spills of one name
+            self._pending[key] = self.ssd.write_async(
+                self._name(r, l) + ":s", pad[kb * bb:], "kv")
+
+    def prefetch(self, r: int, l: int):
+        """``PREFETCH_KV`` hint: start the cold tail's SSD read now (KV
+        priority). No-op if nothing is spilled or the spill itself is
+        still in flight (a request body must never wait on another
+        request)."""
+        key = (r, l)
+        if key in self._prefetched or key not in self._blocks:
+            return
+        kb, nbk = self._k[key], self._blocks[key]
+        if kb >= nbk:
+            return
+        wr = self._pending.get(key)
+        if wr is not None and not wr.done():
+            return
+        name = self._name(r, l) + ":s"
+        self._prefetched[key] = self.engine.submit(
+            lambda: self.ssd.read(name, "kv"),
+            priority=IOPriority.KV, category="kv", route="ssd->cpu",
+            nbytes=(nbk - kb) * self.block_bytes)
+        _hint_issue(self, key)
+
+    def get(self, r: int, l: int):
+        """FETCH_KV: restore the cache pytree bitwise — host head
+        blocks + SSD cold tail, truncated back to the true payload."""
+        key = (r, l)
+        name = self._name(r, l)
+        req = self._prefetched.pop(key, None)
+        wr = self._pending.pop(key, None)
+        try:
+            if wr is not None:
+                wr.result()
+        except BaseException:
+            if req is not None and not req.cancel():
+                try:
+                    req.result()
+                except Exception:
+                    pass        # the spill's error is what propagates
+            raise
+        kb, nbk = self._k[key], self._blocks[key]
+        if req is not None:
+            hit = req.done()         # evaluate once: it can flip mid-read
+            self.la_hits += hit
+            self.la_misses += not hit
+            _hint_settle(self, "kv", key, "hit" if hit else "late")
+            tail = req.result()
+        elif kb < nbk:
+            self.la_misses += 1
+            tail = self.ssd.read(name + ":s", "kv")
+        else:
+            tail = None
+        head = (self.host.pop(name + ":h") if kb
+                else np.zeros(0, np.uint8))
+        if tail is None:
+            pad = head
+        elif head.size:
+            pad = np.concatenate([head, tail])
+        else:
+            pad = tail
+        _xfer(self.meter, self.engine, "kv", "cpu->gpu", pad.nbytes)
+        buf = pad[:self._n[key]]
+        leaves, off = [], 0
+        for dt, shp in self._meta[key]:
+            nb = int(np.prod(shp)) * dt.itemsize
+            leaves.append(jnp.asarray(
+                np.frombuffer(buf[off:off + nb].tobytes(),
+                              dtype=dt).reshape(shp)))
+            off += nb
+        caches = jax.tree.unflatten(self._tree[key], leaves)
+        self._forget(key)
+        return caches
+
+    def _forget(self, key):
+        for d in (self._tree, self._meta, self._k, self._blocks, self._n):
+            d.pop(key, None)
+
+    def drop(self, r: int, l: int):
+        """Abandon one key (finished request whose blocks are freed
+        without a resume): cancel/drain in-flight requests, free the
+        host head, delete the SSD tail."""
+        key = (r, l)
+        _hint_settle(self, "kv", key, "cancelled")
+        pre = self._prefetched.pop(key, None)
+        if pre is not None:
+            _cancel_or_drain(pre)
+        wr = self._pending.pop(key, None)
+        if wr is not None:
+            try:
+                wr.result()   # let the write land, then delete the name
+            except Exception:
+                pass
+        name = self._name(r, l)
+        if name + ":h" in self.host:
+            self.host.pop(name + ":h")
+        kb = self._k.get(key)
+        nbk = self._blocks.get(key)
+        if kb is not None and nbk is not None and kb < nbk:
+            try:
+                self.ssd.delete(name + ":s")
+            except KeyError:
+                pass
+        self._forget(key)
+
+    def clear(self):
+        """Abandon everything (engine teardown / fault cleanup)."""
+        keys = set(self._n) | set(self._pending) | set(self._prefetched)
+        for r, l in keys:
+            self.drop(r, l)
 
     def wait_pending(self):
         """Drain outstanding spills/reads (finish/teardown)."""

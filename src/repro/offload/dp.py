@@ -413,10 +413,17 @@ class DataParallelOffloadEngine:
         return build_snapshot(self)
 
     def stats(self) -> Dict[str, object]:
+        """Deprecated: use :meth:`metrics_snapshot` (versioned, and a
+        strict superset of this shape — see CHANGES.md for the
+        deprecation window)."""
+        import warnings
+        warnings.warn(
+            "DataParallelOffloadEngine.stats() is deprecated; use "
+            "metrics_snapshot()", DeprecationWarning, stacklevel=2)
         return {
             "ranks": self.R,
             "bounds": list(self.bounds),
-            "io": [rk.ioe.stats() for rk in self.ranks],
+            "io": [rk.ioe._collect_stats() for rk in self.ranks],
             "host_peak_nbytes": [rk.host.peak_nbytes for rk in self.ranks],
             "act_policy": self.act_policy,
             "act_fallbacks": self.act_fallbacks,

@@ -57,6 +57,7 @@ from the per-layer pipeline and adds their time separately, §4.5).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from collections import defaultdict
 from typing import Dict, List, Optional, Tuple
 
@@ -141,10 +142,24 @@ class OffloadConfig:
     #: hundreds of fetches ahead would just pin host memory
     MAX_PREFETCH_DEPTH = 16
 
+    #: The schedules / activation policies a config may name. Anything
+    #: else is rejected at CONSTRUCTION — same eager ``ValueError``
+    #: contract as ``IOConfig`` (path_policy) and ``solve_config``.
+    SCHEDULES = ("vertical", "horizontal", "wave")
+    ACTIVATION_POLICIES = ("recompute", "spill", "auto")
+
     def __post_init__(self):
-        """Reject malformed lookahead knobs at CONSTRUCTION (a typo'd
+        """Reject malformed knobs at CONSTRUCTION (a typo'd schedule or
         depth should fail where it was written, not when a plan first
         compiles)."""
+        if self.schedule not in self.SCHEDULES:
+            raise ValueError(
+                f"unknown schedule {self.schedule!r}; "
+                f"choose one of {self.SCHEDULES}")
+        if self.activation_policy not in self.ACTIVATION_POLICIES:
+            raise ValueError(
+                f"unknown activation_policy {self.activation_policy!r}; "
+                f"choose one of {self.ACTIVATION_POLICIES}")
         d = int(self.prefetch_depth)
         if not 0 <= d <= self.MAX_PREFETCH_DEPTH:
             raise ValueError(
@@ -653,8 +668,13 @@ class OffloadEngine:
         return build_snapshot(self)
 
     def stats(self) -> Dict[str, object]:
-        """I/O-engine counters + host residency + phase wall-times."""
-        return {"io": self.ioe.stats(),
+        """Deprecated: use :meth:`metrics_snapshot` (versioned, and a
+        strict superset of this shape — see CHANGES.md for the
+        deprecation window)."""
+        warnings.warn(
+            "OffloadEngine.stats() is deprecated; use metrics_snapshot()",
+            DeprecationWarning, stacklevel=2)
+        return {"io": self.ioe._collect_stats(),
                 "host_peak_nbytes": self.host.peak_nbytes,
                 "host_nbytes": self.host.nbytes(),
                 "act_policy": self.act_policy,

@@ -1,0 +1,45 @@
+"""Serving as a first-class workload on the GreedySnake substrate.
+
+The training stack's core bet — every tensor movement is schedulable
+I/O under a plan an abstract interpreter can price exactly — cashed in
+for inference. Three layers, all reusing proven machinery:
+
+**Block tables.** Each request's KV cache is addressed per CACHE UNIT
+(``models.model.cache_units``: one unit per prefix block / scanned
+period sub-block / suffix block — one per layer for a plain dense
+stack). A unit's payload is padded to fixed-size blocks
+(``core.traffic.kv_blocks`` — the ONE ceil the coordinator, the plan
+interpreter, and the closed form all share). Hot blocks are
+device-resident (the request's live cache pytree); on eviction the
+``round(kv_x_host * blocks)`` head blocks go warm to host DRAM and the
+cold tail to SSD — a TieredVector-style split at block granularity,
+streamed through ``repro.io`` at ``IOPriority.KV`` (above ckpt spills:
+a late fetch is user-visible decode latency; below the training
+critical path) with PR-8 backlog-aware path placement for free.
+
+**Tier lifecycle.** Every step compiles a plan in the schedule IR
+(``schedule="serve"``): ``SPILL_KV`` evictions first (all of a unit's
+blocks off device, cold tail written async), then ``FETCH_KV`` resumes
+(bitwise restore — true payload length is tracked so block padding
+never leaks into the rebuilt pytree), per-unit ``FETCH_PARAM`` ops
+through the SAME tiered-param + lookahead machinery training uses
+(``insert_prefetch`` places one ``PREFETCH_KV``/``PREFETCH`` hint per
+fetch; KV hints never cross a ``SPILL_KV`` — an eviction is the
+barrier that makes the tiers the source of truth), then ``PHASE`` ops
+tagged ``prefill``/``decode`` carrying the request id, with
+``APPEND_KV`` occupancy marks (device-HBM block-table writes — zero
+offload bytes). ``plan_traffic`` prices the plan exactly; the
+three-way invariant (plan == ``traffic.kv_traffic`` == measured
+meters) is pinned the same way training streams are.
+
+**Admission control.** ``ServeEngine.submit`` refuses any request
+whose block footprint alone exceeds the KV byte budget
+(``ValueError``, eager); admitted requests wait FIFO until enough
+blocks are free. ``step()`` runs iteration-level continuous batching:
+evict (finished/preempted -> tiers), admit (new -> prefill, evicted ->
+resume), decode one token per running request. ``preempt``/resume
+round-trips are bitwise — decode logits after a resume equal the
+never-evicted run exactly (f32).
+"""
+from repro.serve.engine import Request, ServeConfig, ServeEngine  # noqa: F401
+from repro.serve.plan import compile_serve_step, lint_kv_plan  # noqa: F401

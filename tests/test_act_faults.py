@@ -101,7 +101,7 @@ def test_act_write_fault_degrades_to_recompute_bitwise():
         assert losses == ref, "fallback changed the arithmetic"
         eng.finish()
         _assert_act_clean(eng)
-        s = eng.ioe.stats()
+        s = eng.ioe.metrics_snapshot()
         assert s["inflight_bytes"] == 0, "fault leaked the byte budget"
         assert s["completed"] + s["cancelled"] == s["submitted"]
         eng.close()
@@ -120,7 +120,7 @@ def test_act_read_fault_degrades_to_recompute_bitwise():
         assert losses == ref
         eng.finish()
         _assert_act_clean(eng)
-        assert eng.ioe.stats()["inflight_bytes"] == 0
+        assert eng.ioe.metrics_snapshot()["inflight_bytes"] == 0
         eng.close()
 
 

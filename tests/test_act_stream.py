@@ -324,12 +324,12 @@ def test_lp_policy_row():
 
 
 def test_unknown_engine_policy_rejected():
-    ocfg = OffloadConfig(schedule="vertical", num_microbatches=2,
-                         micro_batch=MB, seq_len=S,
-                         activation_policy="nope")
-    with tempfile.TemporaryDirectory() as d:
-        with pytest.raises(ValueError, match="activation_policy"):
-            OffloadEngine(CFG, ocfg, jax.random.PRNGKey(0), d)
+    # eager __post_init__ contract: the typo fails at CONSTRUCTION,
+    # before any engine (or even a workdir) exists
+    with pytest.raises(ValueError, match="activation_policy"):
+        OffloadConfig(schedule="vertical", num_microbatches=2,
+                      micro_batch=MB, seq_len=S,
+                      activation_policy="nope")
 
 
 # ---------------------------------------------------------------------------

@@ -86,7 +86,7 @@ def test_cancellation_before_start():
         blocker.result()
         eng.shutdown()
         assert ran == []
-        s = eng.stats()
+        s = eng.metrics_snapshot()
         assert s["cancelled"] == 1
         assert s["inflight_bytes"] == 0      # cancelled bytes released
 
@@ -125,7 +125,7 @@ def test_backpressure_budget():
         assert admitted.wait(5.0), "submit should unblock on release"
         t.join()
         eng.shutdown()
-        assert eng.stats()["max_inflight_bytes"] <= 1000
+        assert eng.metrics_snapshot()["max_inflight_bytes"] <= 1000
 
 
 def test_default_config_not_shared_between_engines():
@@ -374,4 +374,4 @@ def test_parameter_coordinator_reset_cancels_prefetches():
         eng.shutdown()
         assert pc._futures == {}
         assert ("param", "ssd->cpu") not in meter.bytes  # nothing was read
-        assert eng.stats()["cancelled"] == 3
+        assert eng.metrics_snapshot()["cancelled"] == 3

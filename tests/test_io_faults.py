@@ -147,7 +147,7 @@ def test_failed_request_releases_inflight_budget():
         req = ssd.write_async("t", big, "ckpt")
         with pytest.raises(OSError):
             req.result(timeout=T)
-        s = eng.stats()
+        s = eng.metrics_snapshot()
         assert s["inflight_bytes"] == 0, "failed request leaked its bytes"
         assert s["completed"] == s["submitted"]
         # a request that needs the ENTIRE budget must get through
@@ -210,7 +210,7 @@ def test_worker_threads_survive_fault_storm():
         arr = np.arange(2048, dtype=np.float32)
         ssd.write("ok", arr, "opt")
         np.testing.assert_array_equal(ssd.read("ok", "opt"), arr)
-        s = eng.stats()
+        s = eng.metrics_snapshot()
         assert s["completed"] == s["submitted"]
         assert s["inflight_bytes"] == 0
         ssd.close()
@@ -252,7 +252,7 @@ def test_dead_path_drains_placement_to_survivors():
                 pass
         assert survivor is not None, \
             "placement never drained off the dead path"
-        assert eng.stats()["path_failures"][1] >= PATH_FAIL_DRAIN_THRESHOLD
+        assert eng.metrics_snapshot()["path_failures"][1] >= PATH_FAIL_DRAIN_THRESHOLD
 
         # the surviving write landed wholly on path 0 and round-trips;
         # so does everything written afterwards (sync and async)
@@ -265,7 +265,7 @@ def test_dead_path_drains_placement_to_survivors():
 
         # no leaks from the failure storm: budget drained and the full
         # staging pool is still acquirable
-        s = eng.stats()
+        s = eng.metrics_snapshot()
         assert s["inflight_bytes"] == 0
         assert s["completed"] == s["submitted"]
         got = threading.Event()
@@ -309,7 +309,7 @@ def test_cancel_queued_request_contract():
             victim.result(timeout=T)
         gate.set()
         blocker.result(timeout=T)
-        s = eng.stats()
+        s = eng.metrics_snapshot()
         assert s["cancelled"] == 1            # settled exactly once
         assert s["inflight_bytes"] == 0       # victim's 77 bytes released
         eng.shutdown()
@@ -336,7 +336,7 @@ def test_cancel_inflight_request_contract():
         with pytest.raises(OSError, match="late fault"):
             req.result(timeout=T)
         assert req.cancel() is False          # done: still not cancellable
-        s = eng.stats()
+        s = eng.metrics_snapshot()
         assert s["cancelled"] == 0
         assert s["inflight_bytes"] == 0       # failure released the bytes
         ssd.close()

@@ -226,7 +226,7 @@ def _run(sched, M, alpha, R, depth, steps=2, io=None, policy="recompute",
             params = [eng.read_params(l).copy() for l in range(eng.L)]
         else:
             params = [eng.p_vecs[l].read().copy() for l in range(eng.L)]
-        look = eng.stats()["lookahead"]
+        look = eng.metrics_snapshot()["lookahead"]
         skips = (eng.hint_skips, eng.act_skips, eng.act_fallbacks)
         eng.close()
     return losses, routes, params, look, skips
@@ -559,9 +559,9 @@ def test_engine_stats_reset():
             ratios=X0), jax.random.PRNGKey(0), d)
         data = SyntheticLM(CFG.vocab_size, seed=0)
         eng.train_step(data.batch(2 * MB, S))
-        assert eng.stats()["lookahead"]["stall_s"] > 0
+        assert eng.metrics_snapshot()["lookahead"]["stall_s"] > 0
         eng.reset_stats()
-        look = eng.stats()["lookahead"]
+        look = eng.metrics_snapshot()["lookahead"]
         assert look["stall_s"] == 0 and look["hits"] == 0
         assert look["hit_rate"] == 1.0
         eng.finish()

@@ -424,7 +424,7 @@ def test_second_measured_iteration_matches_first_after_reset(R):
         def measured_iteration():
             loss = eng.train_step(data.batch(2 * MB, S))
             eng.finish()
-            look = eng.stats()["lookahead"]
+            look = eng.metrics_snapshot()["lookahead"]
             return (loss, [dict(m.snapshot()) for m in meters],
                     look["hits"] + look["misses"])
 
@@ -437,7 +437,7 @@ def test_second_measured_iteration_matches_first_after_reset(R):
         for m in meters:
             m.reset()
         eng.reset_stats()
-        look = eng.stats()["lookahead"]
+        look = eng.metrics_snapshot()["lookahead"]
         assert look["hits"] == look["misses"] == 0
         assert look["hint_skips"] == 0 and look["act_skips"] == 0
         assert look["stall_s"] == 0 and not look["op_seconds"]
@@ -476,7 +476,7 @@ def test_io_engine_per_path_counters(tmp_path):
         d = eng.depth()
         assert d["channel_backlog_per_path"] == [0, 0]
         assert d["channel_backlog_bytes_per_path"] == [0, 0]
-        s = eng.stats()
+        s = eng.metrics_snapshot()
         # cumulative per-path meters survive completion...
         assert s["chunk_bytes_per_path"] == [150, 30]
         assert s["chunk_ops_per_path"] == [2, 1]
