@@ -28,7 +28,13 @@ and the continuous-batching serve smoke (a ``repro.serve.ServeEngine``
 on the paced 2-path device: >= 2 concurrent requests under a KV budget
 below the total KV footprint, a mid-generation preempt/resume round
 trip, and the three-way KV byte invariant as the ``serve_ok`` boolean
-gate) — and dumps per-cell throughput, stall-seconds, prefetch
+gate) and the degraded-mode A/B (training under seeded transient
+chaos with integrity + retry on, bitwise vs a fault-free twin as the
+``chaos_bitwise_ok`` gate; plus an SSD streaming workload that loses
+one of two equal-cap paths mid-run — write failover to the survivor
+as the ``failover_ok`` gate with the degraded/healthy throughput
+ratio floored at ``DEGRADED_FLOOR_GATE``) — and dumps per-cell
+throughput, stall-seconds, prefetch
 hit-rate, and the top stall stream (from ``metrics_snapshot()``) for
 ``check_smoke.py`` to gate against the checked-in
 ``baseline_smoke.json``.
@@ -57,12 +63,14 @@ import jax
 try:
     from benchmarks.common import Reporter
     from benchmarks.check_smoke import (AUTOTUNE_RECOVERY_GATE,
+                                        DEGRADED_FLOOR_GATE,
                                         LOOKAHEAD_GAIN_GATE,
                                         PATH_PLACEMENT_GAIN_GATE)
 except ImportError:     # run directly as a script: benchmarks/ not a pkg
     sys.path.insert(0, os.path.dirname(__file__))
     from common import Reporter
-    from check_smoke import (AUTOTUNE_RECOVERY_GATE, LOOKAHEAD_GAIN_GATE,
+    from check_smoke import (AUTOTUNE_RECOVERY_GATE, DEGRADED_FLOOR_GATE,
+                             LOOKAHEAD_GAIN_GATE,
                              PATH_PLACEMENT_GAIN_GATE)
 from repro.configs import get_config
 from repro.core.perfmodel import StorageRatios
@@ -452,6 +460,165 @@ def run_serve_smoke(rep: Optional[Reporter] = None,
     return {"serve_paced_2path": cell}
 
 
+#: the degraded-mode regime: equal per-path caps so killing either
+#: path halves the device's aggregate roofline — the measured
+#: degraded/healthy ratio lands near 0.5 and ``check_smoke`` gates it
+#: (``DEGRADED_FLOOR_GATE``) together with the failover booleans. The
+#: caps sit far below the streaming workload's software floor (chunk
+#: bookkeeping + CRC sidecar upkeep run tens of MB/s on this
+#: container), so the token buckets — not Python — set the roofline
+#: and the kill actually halves it.
+DEGRADED_CAPS = (4e6, 4e6)
+
+
+def run_degraded_ab(rep: Optional[Reporter] = None,
+                    trace_dir: str = "") -> dict:
+    """The degraded-mode A/B (the resilience PR-acceptance datapoint),
+    two cells:
+
+    * ``paced_degraded_chaos`` — a training run on the paced 2-path
+      device with TRANSIENT chaos (seeded EAGAIN + latency spikes from
+      :class:`repro.io.chaos.ChaosSpec`) on every chunk op, integrity
+      verification on, bounded retries absorbing the faults.
+      Iterations INTERLEAVE with a fault-free twin so machine drift
+      cancels; the cell's ``chaos_bitwise_ok`` boolean asserts the
+      chaotic losses equal the clean ones bit for bit, and its
+      tokens/s is gated against the baseline like any cell.
+    * ``paced_degraded_pathkill`` — an SSD streaming workload (host
+      buffers stay authoritative, like the optimizer writeback) on a
+      2-path device with EQUAL per-path caps; one path is killed
+      mid-run. ``failover_ok`` asserts every post-kill overwrite
+      re-placed onto the survivor and read back bitwise with
+      ``chunk_failovers > 0`` and no budget leak; the
+      degraded/healthy throughput ratio is gated at
+      ``DEGRADED_FLOOR_GATE`` (the survivor holds half the aggregate
+      caps, so ~0.5 when failover works, ~0 when it wedges).
+    """
+    import numpy as np
+
+    from repro.io import ChaosSpec, IOConfig, IOEngine, install_chaos
+    from repro.offload.stores import SSDStore, TrafficMeter
+
+    rep = rep or Reporter()
+    cells = {}
+
+    # ---- cell 1: transient chaos on a paced training run ----
+    cfg, M, mb, s = get_config("gpt-tiny"), 4, 1, 64
+    rep.section(f"bench-smoke: degraded-mode A/B (transient chaos + "
+                f"mid-run path kill, caps {PACED_BANDWIDTH})")
+
+    def build(root):
+        paths = [os.path.join(root, "p0"), os.path.join(root, "p1")]
+        return OffloadEngine(cfg, OffloadConfig(
+            schedule="vertical", num_microbatches=M, micro_batch=mb,
+            seq_len=s, alpha=PACED_ALPHA,
+            ratios=StorageRatios(0.0, 0.0, 0.0),
+            io=IOConfig(paths=paths, bandwidth=dict(PACED_BANDWIDTH),
+                        retries=5, integrity=True),
+            prefetch_depth=2), jax.random.PRNGKey(0), root)
+
+    with tempfile.TemporaryDirectory() as d1, \
+            tempfile.TemporaryDirectory() as d2:
+        e_cl, e_ch = build(d1), build(d2)
+        chaos = install_chaos(e_ch.ssd, ChaosSpec(
+            error_rate=0.05, latency_rate=0.05, latency_s=0.0005,
+            seed=11))
+        data = SyntheticLM(cfg.vocab_size, seed=0)
+        warm = data.batch(M * mb, s)    # SHARED: the twins must see
+        for e in (e_cl, e_ch):          # identical data to stay bitwise
+            e.train_step(warm)          # compile warm-up
+            e.meter.reset()
+            e.reset_stats()
+            e.tracer.clear()
+            e.tracer.enable()   # like the lookahead A/B: measure traced
+        t = {"cl": 0.0, "ch": 0.0}
+        losses = {"cl": [], "ch": []}
+        for _ in range(PACED_AB_ITERS):
+            batch = data.batch(M * mb, s)
+            for key, e in (("cl", e_cl), ("ch", e_ch)):
+                t0 = time.perf_counter()
+                losses[key].append(e.train_step(batch))
+                t[key] += time.perf_counter() - t0
+        for e in (e_cl, e_ch):
+            e.finish()
+        snap = e_ch.ioe.metrics_snapshot()
+        dt = t["ch"] / PACED_AB_ITERS
+        ok = losses["ch"] == losses["cl"]
+        cells["paced_degraded_chaos"] = {
+            "s_per_iter": dt,
+            "tokens_per_s": M * mb * s / dt,
+            "chaos_bitwise_ok": bool(ok),
+            "chaos_injected": int(chaos.injected["transient"]),
+            "chunk_retries": int(snap["chunk_retries"]),
+            "clean_tokens_per_s": M * mb * s / (t["cl"] / PACED_AB_ITERS),
+        }
+        if trace_dir:
+            e_ch.tracer.export_chrome(os.path.join(
+                trace_dir, "paced_degraded_chaos.trace.json"))
+        e_cl.close()
+        e_ch.close()
+    c = cells["paced_degraded_chaos"]
+    rep.add("smoke/degraded_chaos_tokens_per_s",
+            f"{c['tokens_per_s']:.0f}",
+            f"{c['chaos_injected']} transients injected, "
+            f"{c['chunk_retries']} retries, losses "
+            f"{'bitwise OK' if c['chaos_bitwise_ok'] else 'DIVERGED'} "
+            f"vs clean {c['clean_tokens_per_s']:.0f} tok/s")
+
+    # ---- cell 2: one path killed mid-run, writes fail over ----
+    n_t, t_mb, passes = 2, 2, 2
+    with tempfile.TemporaryDirectory() as root:
+        paths = [os.path.join(root, f"p{i}") for i in range(2)]
+        ioe = IOEngine(IOConfig(paths=paths, chunk_bytes=PATH_AB_CHUNK,
+                                path_bandwidth=DEGRADED_CAPS,
+                                path_policy="backlog",
+                                retries=2, integrity=True))
+        ssd = SSDStore(paths[0], TrafficMeter(), engine=ioe)
+        chaos = install_chaos(ssd)
+        rng = np.random.default_rng(0)
+        bufs = [rng.integers(0, 255, t_mb << 20, dtype=np.uint8)
+                for _ in range(n_t)]
+
+        def one_pass(gen):
+            ok = True
+            for i, base in enumerate(bufs):
+                arr = base + np.uint8(gen)          # wraps; host copy is
+                ssd.write(f"t{i}", arr, "opt")      # the authority
+                ok &= bool(np.array_equal(ssd.read(f"t{i}", "opt"), arr))
+            return ok
+
+        t0 = time.perf_counter()
+        ok_healthy = all(one_pass(g) for g in range(passes))
+        t_healthy = time.perf_counter() - t0
+        chaos.kill_path(1)                          # the device dies NOW
+        t0 = time.perf_counter()
+        ok_degraded = all(one_pass(passes + g) for g in range(passes))
+        t_degraded = time.perf_counter() - t0
+        snap = ioe.metrics_snapshot()
+        window = 2 * n_t * (t_mb << 20) * passes    # write+read bytes
+        failover_ok = (ok_healthy and ok_degraded
+                       and snap["chunk_failovers"] > 0
+                       and snap["inflight_bytes"] == 0)
+        cells["paced_degraded_pathkill"] = {
+            "healthy_mb_per_s": window / t_healthy / 1e6,
+            "degraded_mb_per_s": window / t_degraded / 1e6,
+            "degraded_ratio": t_healthy / t_degraded,
+            "failover_ok": bool(failover_ok),
+            "chunk_failovers": int(snap["chunk_failovers"]),
+            "paths_drained": snap["paths_drained"],
+        }
+        ssd.close()
+    c = cells["paced_degraded_pathkill"]
+    rep.add("smoke/degraded_pathkill",
+            f"{c['degraded_ratio']:.2f}x",
+            f"{c['healthy_mb_per_s']:.0f} -> {c['degraded_mb_per_s']:.0f}"
+            f" MB/s after the kill; {c['chunk_failovers']} chunk "
+            f"failovers, round-trips "
+            f"{'bitwise OK' if c['failover_ok'] else 'BROKEN'} "
+            f"(check_smoke floors the ratio at {DEGRADED_FLOOR_GATE})")
+    return cells
+
+
 #: the deliberately MIS-SPECIFIED machine the autotune A/B hands its
 #: controller: compute and DRAM scaled to the gpt-tiny smoke workload,
 #: but the SSD link rates left at the A100-node datasheet numbers
@@ -613,6 +780,12 @@ def run_smoke(rep: Optional[Reporter] = None, json_path: str = "",
     # 2-path device, with the three-way KV byte invariant as a boolean
     # gate (serve_ok) next to the decode tokens/s ---
     cells.update(run_serve_smoke(rep, trace_dir=trace_dir))
+
+    # --- the degraded-mode A/B: transient chaos absorbed bitwise by
+    # retry (chaos_bitwise_ok), and one path killed mid-run with writes
+    # failing over to the survivor (failover_ok + the throughput-floor
+    # ratio, all gated by check_smoke) ---
+    cells.update(run_degraded_ab(rep, trace_dir=trace_dir))
 
     # --- trace artifacts for the schedule cells, strictly AFTER every
     # measured window (see _export_cell_trace) ---

@@ -19,9 +19,16 @@ Four measurements on the real filesystem of this container:
    ``path_policy="static"`` (the ``i % P`` layout pays 2x the slow
    cap) vs ``"backlog"`` (placement drains toward sum-of-caps). The
    per-path byte split and achieved rates land in the report + JSON.
+5. **Resilience overhead** (``--chaos``, opt-in) — the same streaming
+   write/read workload with ``IOConfig.integrity`` + retries on, swept
+   over :class:`repro.io.chaos.ChaosSpec` transient error rates: what
+   the CRC sidecar costs at rate 0, and how throughput degrades as the
+   engine's bounded retry absorbs injected EAGAIN faults (the data
+   round-trips bitwise at every rate — that's asserted, not assumed).
 
     PYTHONPATH=src python benchmarks/bench_io.py [--size-mb 256]
         [--paths 1 2 4] [--chunk-kb 1024] [--cap-mbs 150] [--csv out.csv]
+        [--chaos]
 """
 from __future__ import annotations
 
@@ -103,6 +110,9 @@ def main() -> None:
     ap.add_argument("--json", default="", help="dump measured link rates "
                     "(bytes/s) for perfmodel.machine_from_bench, so "
                     "Algorithm 1 solves against THIS container's speeds")
+    ap.add_argument("--chaos", action="store_true",
+                    help="also sweep transient-fault rates with "
+                         "integrity + retries on (resilience overhead)")
     args = ap.parse_args()
 
     rep = Reporter()
@@ -193,6 +203,42 @@ def main() -> None:
             f"{hetero['static']['write_s'] / hetero['backlog']['write_s']:.2f}",
             "x; static pays 2x the slow cap, backlog drains to sum-of-caps")
 
+    # ---- 5. resilience overhead: integrity + retry under chaos ----
+    chaos_cells = {}
+    if args.chaos:
+        from repro.io import ChaosSpec, install_chaos
+        rates = (0.0, 0.01, 0.05)
+        rep.section(f"resilience: integrity+retry streaming sweep, "
+                    f"transient rates {rates}")
+        ch_bytes = min(nbytes, 32 << 20)
+        csub = arr[:ch_bytes]
+        for rate in rates:
+            with tempfile.TemporaryDirectory(prefix="bench_io_ch_") as root:
+                paths = [os.path.join(root, f"nvme{i}") for i in range(2)]
+                eng = IOEngine(IOConfig(paths=paths, chunk_bytes=chunk,
+                                        retries=5, integrity=True))
+                ssd = SSDStore(paths[0], TrafficMeter(), engine=eng)
+                files = install_chaos(
+                    ssd, ChaosSpec(error_rate=rate, seed=17))
+                t0 = time.perf_counter()
+                ssd.write("res", csub, "opt")
+                back = ssd.read("res", "opt")
+                dt = time.perf_counter() - t0
+                assert np.array_equal(back, csub), \
+                    f"round trip diverged at rate {rate}"
+                s = eng.metrics_snapshot()
+                chaos_cells[rate] = {
+                    "round_trip_bps": 2 * ch_bytes / dt,
+                    "injected": files.injected["transient"],
+                    "chunk_retries": s["chunk_retries"],
+                }
+                ssd.close()
+            c = chaos_cells[rate]
+            rep.add(f"chaos_rate{rate}_MBps",
+                    f"{c['round_trip_bps'] / 1e6:.1f}",
+                    f"write+read round trip, {c['injected']} injected, "
+                    f"{c['chunk_retries']} retries, bitwise OK")
+
     rep.section("summary")
     rep.add("bytes_benchmarked", gb(nbytes), "GB per striping config")
     if args.csv:
@@ -209,6 +255,8 @@ def main() -> None:
             "hetero": {"path_bandwidth": list(hcaps),
                        "size_bytes": het_bytes, **hetero},
         }
+        if chaos_cells:
+            results["chaos"] = {str(r): c for r, c in chaos_cells.items()}
         with open(args.json, "w") as f:
             json.dump(results, f, indent=2)
         rep.add("json", args.json,

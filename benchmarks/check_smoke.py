@@ -7,8 +7,13 @@ silently unless per-route traffic, throughput, AND stall numbers are
 checked on every push (MLP-Offload's lesson). Cells present in only one
 file are reported but do not fail (a new schedule/policy lands before
 its baseline). Boolean flags a cell carries (``path_sum_ok`` byte
-conservation, the serve cell's ``serve_ok`` three-way KV invariant)
-gate absolutely: False anywhere fails the build. Two informational columns from ``metrics_snapshot()``
+conservation, the serve cell's ``serve_ok`` three-way KV invariant,
+the degraded-mode cells' ``chaos_bitwise_ok`` and ``failover_ok``)
+gate absolutely: False anywhere fails the build, and the pathkill
+cell's degraded/healthy throughput ratio is floored at
+``DEGRADED_FLOOR_GATE``. A cell that carries no ``tokens_per_s`` in
+EITHER file (boolean-only cells) skips the relative throughput gate
+instead of failing as missing. Two informational columns from ``metrics_snapshot()``
 ride along ungated: the prefetch hit rate and the top stall stream
 (which plan stream owns the blocked seconds), so a stall-gate failure
 arrives with its attribution in the same table.
@@ -64,6 +69,20 @@ AUTOTUNE_RECOVERY_GATE = 0.9
 #: leaks bytes between meters is wrong no matter how fast it is.
 PATH_PLACEMENT_GAIN_GATE = 1.3
 
+#: the degraded-mode floor (absolute, on the measured run): after one
+#: of the two EQUAL-cap paths is killed mid-run, the streaming
+#: workload's degraded/healthy throughput ratio must stay above this.
+#: The survivor holds half the aggregate token-bucket caps, so the
+#: ratio lands near 0.5 when write failover re-places the dead path's
+#: chunks promptly; a failover layer that wedges, retries forever, or
+#: serializes behind the dead channel drives it toward 0. The cell
+#: also carries ``failover_ok`` (post-kill round trips bitwise,
+#: ``chunk_failovers > 0``, no leaked in-flight budget) and its
+#: sibling training cell carries ``chaos_bitwise_ok`` (losses under
+#: transient chaos bitwise-equal to the fault-free twin) — both gate
+#: absolutely, like ``path_sum_ok``.
+DEGRADED_FLOOR_GATE = 0.3
+
 REFRESH_CMD = "python benchmarks/check_smoke.py --update"
 
 
@@ -75,17 +94,22 @@ def compare(measured: dict, baseline: dict, tolerance: float,
     m_cells = measured.get("cells", {})
     b_cells = baseline.get("cells", {})
     for cell in sorted(set(m_cells) | set(b_cells)):
-        m = m_cells.get(cell, {}).get("tokens_per_s")
-        b = b_cells.get(cell, {}).get("tokens_per_s")
-        if m is None:
-            rows.append((cell, "tokens_per_s", None, b, "missing"))
+        if cell not in m_cells:
+            rows.append((cell, "tokens_per_s", None,
+                         b_cells[cell].get("tokens_per_s"), "missing"))
             continue
-        elif b is None:
+        m = m_cells[cell].get("tokens_per_s")
+        b = b_cells.get(cell, {}).get("tokens_per_s")
+        if m is None and b is not None:
+            rows.append((cell, "tokens_per_s", None, b, "missing"))
+        elif m is not None and b is None:
             rows.append((cell, "tokens_per_s", m, None, "no-baseline"))
-        elif m < (1.0 - tolerance) * b:
+        elif m is not None and m < (1.0 - tolerance) * b:
             rows.append((cell, "tokens_per_s", m, b, "REGRESSION"))
-        else:
+        elif m is not None:
             rows.append((cell, "tokens_per_s", m, b, "ok"))
+        # (m and b both absent: a boolean-only cell — its gates are the
+        # flag rows below, there is no throughput to compare)
         # the stall gate: wall-clock seconds the executor spent blocked
         # on storage per iteration (the new per-op meters); only gated
         # when both files carry the column
@@ -127,6 +151,15 @@ def compare(measured: dict, baseline: dict, tolerance: float,
         if mk is not None:
             rows.append((cell, "kv_hit_rate", mk,
                          b_cells.get(cell, {}).get("kv_hit_rate"), "ok"))
+        # the degraded-mode booleans: transient chaos must be absorbed
+        # bitwise (retry moves the same bytes to the same place), and a
+        # mid-run path kill must fail writes over to the survivor with
+        # post-kill round trips bitwise and no leaked budget
+        for flag in ("chaos_bitwise_ok", "failover_ok"):
+            mf = m_cells.get(cell, {}).get(flag)
+            if mf is not None:
+                rows.append((cell, flag, str(bool(mf)), "True",
+                             "ok" if mf else "REGRESSION"))
     # the lookahead A/B acceptance gate (absolute, within the measured
     # run): hints on must beat hints off on the paced-SSD cells
     la = m_cells.get("paced_alpha_lookahead", {}).get("tokens_per_s")
@@ -157,6 +190,15 @@ def compare(measured: dict, baseline: dict, tolerance: float,
         rows.append(("path_placement_ab", "speedup_x", gain,
                      PATH_PLACEMENT_GAIN_GATE,
                      "ok" if gain >= PATH_PLACEMENT_GAIN_GATE
+                     else "REGRESSION"))
+    # the degraded-mode floor (absolute, within the measured run): the
+    # pathkill cell's degraded/healthy throughput ratio must stay above
+    # the floor — failover that wedges drives it toward 0
+    dr = m_cells.get("paced_degraded_pathkill", {}).get("degraded_ratio")
+    if dr is not None:
+        rows.append(("degraded_ab", "degraded_x", dr,
+                     DEGRADED_FLOOR_GATE,
+                     "ok" if dr >= DEGRADED_FLOOR_GATE
                      else "REGRESSION"))
     return rows
 
@@ -219,8 +261,10 @@ def main(argv=None) -> int:
     bad = 0
     units = {"tokens_per_s": "tok/s", "stall_s": "s/iter",
              "speedup_x": "x (gate)", "recovery_x": "x (gate)",
+             "degraded_x": "x (gate)",
              "hit_rate": "", "top_stall": "(info)",
              "path_sum_ok": "(gate)", "serve_ok": "(gate)",
+             "chaos_bitwise_ok": "(gate)", "failover_ok": "(gate)",
              "kv_hit_rate": "(info)"}
 
     def fmt(v):

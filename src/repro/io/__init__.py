@@ -201,27 +201,83 @@ Rank-sharding invariants the test battery pins down
 * a rank's chunk ops never leave its own path set (stripe files land
   only under the owning rank's directories).
 
-Fault discipline: a failed chunk op propagates through the request
-future (``IORequest.result``), releases the in-flight byte budget and
-its staging buffer, and never kills a worker thread — the
-fault-injection suite (``tests/test_io_faults.py``) drives these paths
-through an on-demand-failing backend (``StripedFiles._pread/_pwrite``
-are the designated override points). Faults are additionally isolated
-PER PATH under the dynamic placement policies: a path at
-``PATH_FAIL_DRAIN_THRESHOLD`` consecutive chunk failures stops
-receiving NEW chunk placements (a dead device fails fast, so its
-backlog alone would make it look attractively idle) while reads of
-chunks already placed there keep failing loudly — no silent reroute.
+Fault discipline: integrity, retry, failover
+============================================
+
+A chunk op's fault walks a fixed escalation ladder; each rung acts only
+when the rung below could not, and every rung is observable
+(``chunk_retries`` / ``chunk_failovers`` / ``integrity_errors`` +
+per-path splits in ``metrics_snapshot()``, ``io.fault`` tracer
+instants):
+
+1. **Classify** (:func:`~repro.io.engine.is_transient`): EAGAIN /
+   EINTR / ETIMEDOUT-class errnos and first-round CRC mismatches are
+   TRANSIENT — the same op against the same device can legitimately
+   succeed a moment later. EIO, ENOSPC, short reads, and dead devices
+   are PERMANENT. An explicit ``transient`` attribute on the exception
+   overrides the heuristic (the chaos backend stamps it; a real
+   NVMe-oF transport could too).
+2. **Retry** (``IOConfig.retries``, on by default): a transient fault
+   gets bounded re-attempts with exponential backoff from
+   ``retry_backoff_s``, capped by BOTH the attempt budget and the op's
+   priority-class time budget (:data:`~repro.io.engine.
+   RETRY_TIMEOUT_S` — a critical-path param fetch gives up in 250 ms,
+   a deferrable spill may ride out a 1 s brownout). The backoff sleeps
+   on the faulting path's own channel thread, so only that device
+   stalls. A retried op moves the same bytes to the same slot, and
+   meters are recorded once at submit — retries are invisible to the
+   byte accounting and to (f32) bitwise results.
+3. **Fail over** (writes only): a PERMANENT write failure on a
+   COMPLETE chunk — one whose caller-held buffer is authoritative for
+   every byte — re-places the chunk on a surviving path
+   (:meth:`~repro.io.engine.IOEngine.failover_path`) and re-writes it
+   from that buffer, recording the move in the chunk-location table.
+   A path at ``PATH_FAIL_DRAIN_THRESHOLD`` consecutive failures is
+   also avoided PRE-emptively for new complete-chunk writes under
+   every policy, static included, and the dynamic policies stop
+   choosing it (a dead device fails fast, so its backlog alone would
+   make it look attractively idle). Reads are NEVER rerouted: a
+   chunk's only copy lives where the table says, so a dead-path read
+   fails loudly rather than silently substituting garbage.
+4. **Verify** (``IOConfig.integrity``): complete-chunk writes record a
+   CRC32C of the intended bytes in the sidecar; complete-chunk reads
+   verify and raise :class:`~repro.io.integrity.IntegrityError` on
+   mismatch — torn writes and silent corruption surface at the read
+   that would otherwise feed garbage to training, not steps later in
+   a diverged loss.
+5. **Propagate**: whatever survives the ladder fails loudly through
+   the request future (``IORequest.result``), releasing the in-flight
+   byte budget and any staging buffer, never killing a worker thread.
+   Above the engine, the offload coordinators unwind to a clean state
+   (the fault batteries pin budget/staging/tracking leaks at every
+   priority class), and crash-consistent checkpoints
+   (``OffloadEngine.save_checkpoint``: journaled manifest via atomic
+   rename, per-tensor CRCs, torn/stale-manifest rejection) bound the
+   blast radius of the genuinely irrecoverable case.
+
+Fault injection is first-class: :class:`~repro.io.chaos.ChaosFiles`
+(``repro.io.chaos``) subclasses the backend at its designated override
+points (``StripedFiles._pread/_pwrite``) with deterministic countdown
+fuses, name-targeted fuses, scripted path death, and a seeded
+probabilistic :class:`~repro.io.chaos.ChaosSpec` (transient errors,
+latency spikes, torn writes, bit flips) — the same injector drives the
+fault batteries (``tests/test_io_faults.py``, ``tests/test_chaos.py``),
+the degraded-mode benchmark cells, and ad-hoc chaos drills via
+:func:`~repro.io.chaos.install_chaos`.
 
 Follow-ons this unlocks are tracked in ROADMAP.md (NCCL-backed
 collectives, uneven-rank sharding, an io_uring backend, NVMe-oF remote
-path entries riding the per-path pacing/placement machinery).
+path entries riding the per-path pacing/placement machinery — remote
+transport faults now have a classification/retry/failover ladder to
+plug into).
 Serving-time KV-cache reuse landed as ``repro.serve`` (the ``KV``
 priority class above).
 """
 from repro.io.backend import StripedFiles  # noqa: F401
 from repro.io.bandwidth import BandwidthSimulator, TokenBucket  # noqa: F401
+from repro.io.chaos import ChaosFiles, ChaosSpec, install_chaos  # noqa: F401
 from repro.io.config import IOConfig  # noqa: F401
 from repro.io.engine import (CATEGORY_PRIORITY, IOEngine,  # noqa: F401
-                             IOPriority, IORequest)
+                             IOPriority, IORequest, is_transient)
+from repro.io.integrity import IntegrityError, crc32c  # noqa: F401
 from repro.io.staging import StagedBuffer, StagingPool  # noqa: F401

@@ -58,6 +58,24 @@ class IOConfig:
       ROUTE across all paths. Also the rate weights of the
       "weighted"/"backlog" policies. Must match ``len(paths)`` when
       both are given.
+    * ``retries`` — bounded retry budget per chunk op for TRANSIENT
+      faults (EAGAIN/EINTR/ETIMEDOUT-class errors and first-round
+      checksum mismatches): each attempt backs off exponentially from
+      ``retry_backoff_s``, capped by the op's priority-class timeout
+      (:data:`repro.io.engine.RETRY_TIMEOUT_S` — a critical-path param
+      fetch gives up sooner than a deferrable spill). Permanent faults
+      (EIO, short reads, dead devices) never retry — they propagate
+      immediately so the per-path failure drain and the write-failover
+      path can act. ``retries=0`` disables the loop entirely.
+    * ``retry_backoff_s`` — initial backoff before the first retry;
+      doubles per attempt.
+    * ``integrity`` — record a CRC32C per complete chunk in the
+      chunk-location sidecar at write time and verify it on every
+      complete-chunk read (:mod:`repro.io.integrity`): silent
+      corruption and torn writes raise ``IntegrityError`` instead of
+      feeding garbage to training. Off by default (pure-Python CRC
+      costs ~0.1 s/MB, and integrity-off runs must keep producing zero
+      sidecars under the static layout pin).
     """
 
     paths: Optional[Sequence[str]] = None
@@ -68,11 +86,19 @@ class IOConfig:
     staging_buffers: int = 2
     path_policy: str = "static"
     path_bandwidth: Optional[Sequence[float]] = None
+    retries: int = 2
+    retry_backoff_s: float = 0.002
+    integrity: bool = False
 
     def __post_init__(self):
         if self.path_policy not in PATH_POLICIES:
             raise ValueError(
                 f"path_policy {self.path_policy!r} not in {PATH_POLICIES}")
+        if int(self.retries) < 0:
+            raise ValueError(f"retries={self.retries} must be >= 0")
+        if float(self.retry_backoff_s) < 0:
+            raise ValueError(
+                f"retry_backoff_s={self.retry_backoff_s} must be >= 0")
         if self.path_bandwidth is not None:
             caps = tuple(float(c) for c in self.path_bandwidth)
             if any(c <= 0 for c in caps):

@@ -57,6 +57,7 @@ measured by the bench-smoke gate.
 from __future__ import annotations
 
 import enum
+import errno as _errno
 import heapq
 import itertools
 import os
@@ -67,9 +68,10 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 from repro.io.bandwidth import BandwidthSimulator, PathBandwidthSimulator
 from repro.io.config import PATH_POLICIES, IOConfig
+from repro.io.integrity import IntegrityError
 from repro.io.staging import StagingPool
-from repro.obs.tracer import (CAT_IO_CHUNK, CAT_IO_QUEUE, CAT_IO_REQ,
-                              CAT_IO_REQ_QUEUE)
+from repro.obs.tracer import (CAT_FAULT, CAT_IO_CHUNK, CAT_IO_QUEUE,
+                              CAT_IO_REQ, CAT_IO_REQ_QUEUE)
 
 
 class IOPriority(enum.IntEnum):
@@ -94,13 +96,59 @@ class IOPriority(enum.IntEnum):
     ACT = 5
 
 
-#: Consecutive chunk failures on one path before the "backlog"/
-#: "weighted" placement policies stop choosing it for NEW chunks (a
-#: persistently failing device errors out fast, so its byte backlog
-#: alone would make it look attractively idle). Reads/overwrites of
-#: chunks already placed there still run — and still fail loudly.
-#: One later success on the path zeroes the count.
+#: Consecutive chunk failures on one path before it is treated as
+#: DRAINED: the "backlog"/"weighted" placement policies stop choosing
+#: it for NEW chunks, and complete-chunk WRITES (whose authoritative
+#: bytes the caller still holds) are rerouted to a survivor — both
+#: pre-emptively in ``StripedFiles._place_for_write`` and reactively
+#: via the per-chunk write-failover path. Reads of chunks already
+#: placed there still run — and still fail loudly; their only copy is
+#: on the dead device, so a silent reroute would return garbage.
+#: One later success on the path zeroes the count (retry-recovered
+#: transients therefore never accumulate toward the drain).
 PATH_FAIL_DRAIN_THRESHOLD = 3
+
+#: errno values classified as TRANSIENT: worth a bounded retry with
+#: backoff, because the same op against the same device can legitimately
+#: succeed a moment later. Everything else — EIO, ENOSPC, short reads,
+#: injected dead-device faults — is permanent and propagates at once.
+TRANSIENT_ERRNOS = frozenset(
+    e for e in (_errno.EAGAIN, getattr(_errno, "EWOULDBLOCK", _errno.EAGAIN),
+                _errno.EINTR, _errno.ETIMEDOUT, _errno.EBUSY,
+                _errno.ENOBUFS))
+
+#: Per-priority-class retry time budget (seconds of cumulative backoff
+#: a chunk op may spend before its transient fault is escalated).
+#: Critical-path classes give up fast — the executor blocks on them,
+#: and a failed param fetch surfaces a loud, actionable error —
+#: while the deferrable spill classes may ride out longer brownouts.
+RETRY_TIMEOUT_S: Dict[int, float] = {
+    IOPriority.PARAM_FETCH: 0.25,
+    IOPriority.INTER_LAYER_GRAD: 0.25,
+    IOPriority.OPTIMIZER_STATE: 0.5,
+    IOPriority.KV: 0.25,
+    IOPriority.CKPT_SPILL: 1.0,
+    IOPriority.ACT: 1.0,
+}
+
+
+def is_transient(exc: BaseException) -> bool:
+    """Transient-vs-permanent fault classification (see
+    :data:`TRANSIENT_ERRNOS`). An explicit boolean ``transient``
+    attribute on the exception overrides the errno heuristic — the
+    chaos backend stamps it, and a real NVMe-oF transport could too.
+    ``IntegrityError`` is transient for the retry round: a torn
+    in-flight read heals on re-read, while bytes corrupted on the
+    device keep mismatching until the budget is spent and the error
+    propagates loudly."""
+    t = getattr(exc, "transient", None)
+    if t is not None:
+        return bool(t)
+    if isinstance(exc, IntegrityError):
+        return True
+    if isinstance(exc, OSError):
+        return exc.errno in TRANSIENT_ERRNOS
+    return False
 
 #: Default priority for a given traffic-meter category.
 CATEGORY_PRIORITY: Dict[str, IOPriority] = {
@@ -315,11 +363,17 @@ class IOEngine:
         # tie-break), and consecutive failures per path (fault drain)
         self._placed_bytes = [0] * len(self.paths)
         self._path_failures = [0] * len(self.paths)
+        # fault-recovery accounting: transient retries, write failovers
+        # and CRC mismatches, split per path (index = path)
+        self._path_retries = [0] * len(self.paths)
+        self._retries = int(config.retries)
+        self._retry_backoff = float(config.retry_backoff_s)
         self._closed = False
         self._stats_lock = threading.Lock()
         self._stats = {
             "submitted": 0, "completed": 0, "cancelled": 0, "chunk_ops": 0,
             "max_inflight_bytes": 0,
+            "chunk_retries": 0, "chunk_failovers": 0, "integrity_errors": 0,
             "bytes_by_priority": {p.name: 0 for p in IOPriority},
         }
 
@@ -373,15 +427,56 @@ class IOEngine:
             self._stats["cancelled"] += 1
 
     # ---------------- chunk level ----------------
+    def _with_retry(self, fn: Callable, priority: IOPriority,
+                    path_index: int, route: str) -> Callable:
+        """Wrap a chunk op in the bounded transient-retry loop: each
+        attempt after a :func:`is_transient` fault backs off
+        exponentially from ``retry_backoff_s``, bounded by BOTH the
+        ``retries`` attempt budget and the op's priority-class time
+        budget (:data:`RETRY_TIMEOUT_S`). The sleep runs on the owning
+        path's channel thread — only the faulting device's channel
+        stalls, which is the point. Permanent faults raise through
+        unchanged on the first attempt."""
+        budget = RETRY_TIMEOUT_S.get(priority, 0.5)
+
+        def run():
+            delay = self._retry_backoff
+            spent = 0.0
+            for attempt in range(self._retries + 1):
+                try:
+                    return fn()
+                except BaseException as e:
+                    if (attempt >= self._retries or not is_transient(e)
+                            or spent + delay > budget):
+                        raise
+                    with self._stats_lock:
+                        self._stats["chunk_retries"] += 1
+                    with self._backlog_lock:
+                        self._path_retries[path_index] += 1
+                    tr = self.tracer
+                    if tr is not None and tr.enabled:
+                        tr.instant(threading.current_thread().name,
+                                   "retry", CAT_FAULT, path=path_index,
+                                   route=route, attempt=attempt + 1,
+                                   error=repr(e))
+                    if delay > 0:
+                        time.sleep(delay)
+                    spent += delay
+                    delay = delay * 2 if delay > 0 else 0.0
+        return run
+
     def submit_chunk(self, path_index: int, fn: Callable,
                      priority: IOPriority, route: str = "",
                      nbytes: int = 0) -> Future:
         """Enqueue one chunk operation on a path channel. Channels are
-        leaf workers: ``fn`` must not wait on other engine work.
-        ``route``/``nbytes`` are accounting only — they feed the
-        per-route and per-path channel-backlog counters
-        (:meth:`route_backlog`, ``depth()``) the adaptive lookahead
-        throttles on."""
+        leaf workers: ``fn`` must not wait on other engine work (the
+        transient-retry sleeps are the one sanctioned stall — they hold
+        only the faulting path's own channel). ``route``/``nbytes`` are
+        accounting only — they feed the per-route and per-path
+        channel-backlog counters (:meth:`route_backlog`, ``depth()``)
+        the adaptive lookahead throttles on."""
+        if self._retries > 0:
+            fn = self._with_retry(fn, priority, path_index, route)
         req = IORequest(priority, next(self._seq), "", route, nbytes, fn,
                         None)
         tr = self.tracer
@@ -503,6 +598,64 @@ class IOEngine:
             self._placed_bytes[p] += nbytes
             return p
 
+    # ---------------- fault drain / failover ----------------
+    def path_drained(self, path_index: int) -> bool:
+        """True once ``path_index`` has failed
+        :data:`PATH_FAIL_DRAIN_THRESHOLD` consecutive chunk ops —
+        the signal ``StripedFiles`` consults to stop sending NEW
+        complete-chunk writes there (any placement policy, static
+        included: a dead device is a fault condition, not a layout
+        choice)."""
+        with self._backlog_lock:
+            return (self._path_failures[path_index]
+                    >= PATH_FAIL_DRAIN_THRESHOLD)
+
+    def failover_path(self, exclude, nbytes: int = 0) -> Optional[int]:
+        """Pick a surviving path for a chunk whose write just failed
+        permanently on every path in ``exclude`` (or whose target is
+        drained). Prefers live paths by the weighted/backlog score of
+        :meth:`choose_path`; falls back to ANY non-excluded path when
+        every survivor is also drained (the bytes must land somewhere,
+        and a loud failure there beats silent data loss). Returns
+        ``None`` only when ``exclude`` covers every path — the
+        genuinely-irrecoverable case the caller escalates."""
+        exclude = set(exclude)
+        cands = [p for p in range(len(self.paths)) if p not in exclude]
+        if not cands:
+            return None
+        w = self.path_simulator.weights()
+        with self._backlog_lock:
+            live = [p for p in cands
+                    if self._path_failures[p] < PATH_FAIL_DRAIN_THRESHOLD]
+            pool = live or cands
+            p = min(pool, key=lambda q: (
+                (self._path_backlog_bytes[q] + nbytes) / w[q],
+                (self._placed_bytes[q] + nbytes) / w[q], q))
+            self._placed_bytes[p] += nbytes
+            return p
+
+    def note_failover(self, from_path: int, to_path: int, name: str,
+                      chunk: int):
+        """Account one chunk write rerouted off a failing path (counter
+        + tracer instant); called by ``StripedFiles``."""
+        with self._stats_lock:
+            self._stats["chunk_failovers"] += 1
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            tr.instant(threading.current_thread().name, "failover",
+                       CAT_FAULT, from_path=from_path, to_path=to_path,
+                       name=name, chunk=chunk)
+
+    def note_integrity_error(self, path_index: int, name: str, chunk: int):
+        """Account one CRC mismatch (counter + tracer instant); called
+        by ``StripedFiles`` just before raising ``IntegrityError``."""
+        with self._stats_lock:
+            self._stats["integrity_errors"] += 1
+        tr = self.tracer
+        if tr is not None and tr.enabled:
+            tr.instant(threading.current_thread().name, "crc_mismatch",
+                       CAT_FAULT, path=path_index, name=name, chunk=chunk)
+
     @property
     def inflight_bytes(self) -> int:
         with self._bp_cv:
@@ -591,6 +744,9 @@ class IOEngine:
             s["chunk_bytes_by_route_per_path"] = {
                 r: list(v) for r, v in self._route_path_bytes.items()}
             s["path_failures"] = list(self._path_failures)
+            s["chunk_retries_per_path"] = list(self._path_retries)
+            s["paths_drained"] = [f >= PATH_FAIL_DRAIN_THRESHOLD
+                                  for f in self._path_failures]
         s["path_policy"] = self.path_policy
         s["path_bandwidth"] = [self.path_simulator.cap(i)
                                for i in range(len(self.paths))]

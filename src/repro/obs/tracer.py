@@ -42,6 +42,7 @@ CAT_IO_REQ = "io.req"          # request-body execution (front pool)
 CAT_IO_REQ_QUEUE = "io.req.queue"
 CAT_PLAN = "plan"              # one span per executed plan op
 CAT_HINT = "hint"              # hint lifecycle (issued -> outcome)
+CAT_FAULT = "io.fault"         # instants: retries, failovers, CRC errors
 
 
 def _union_seconds(intervals: List[Tuple[float, float]]) -> float:

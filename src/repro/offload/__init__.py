@@ -1,4 +1,7 @@
 from repro.io import IOConfig, IOEngine, IOPriority  # noqa: F401
+from repro.offload.checkpoint import (CheckpointError,  # noqa: F401
+                                      load_manifest, restore_checkpoint,
+                                      save_checkpoint)
 from repro.offload.autotune import (AutotuneConfig,  # noqa: F401
                                     AutotuneController,
                                     route_seconds_error)

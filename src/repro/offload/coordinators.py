@@ -206,14 +206,14 @@ class ParameterCoordinator:
     def reset(self):
         """Drop all outstanding prefetches at a schedule boundary:
         queued requests are cancelled before they touch storage; a
-        running one is drained so its buffers settle."""
+        running one is drained so its buffers settle. A drained
+        request's ERROR is swallowed (``_cancel_or_drain``): nobody
+        will consume these futures, and a failed prefetch left in
+        ``_futures`` would re-raise a dead step's fault into the next
+        step's ``get``."""
         for l, req in self._futures.items():
             _hint_settle(self, "param", l, "cancelled")
-            if not req.cancel():
-                try:
-                    req.result()
-                except CancelledError:
-                    pass
+            _cancel_or_drain(req)
         self._futures.clear()
 
     def clear_gates(self):
@@ -221,9 +221,12 @@ class ParameterCoordinator:
         RESET_PARAMS plan op calls ``reset()`` mid-step between waves,
         where the armed gates must survive to order the next wave's
         fetches after their optimizer tails. Only the between-iteration
-        plan-swap seam (``apply_plan_config``) may clear them — there
-        the α tails have been flushed and waited, so a stale gate would
-        only deadlock the next plan's first fetch."""
+        plan-swap seam (``apply_plan_config``) and the executor's
+        mid-step failure unwind may clear them — at the seam the α
+        tails have been flushed and waited; on a failed step the tails
+        are abandoned with the step. Either way a stale gate would only
+        re-raise a dead step's fault (or deadlock) on the next plan's
+        first fetch."""
         self._gate.clear()
         self._gate_ready.clear()
 
@@ -955,3 +958,23 @@ class OptimizerStepCoordinator:
             for f in list(d.values()):
                 f.result()
             d.clear()
+
+    def clear(self):
+        """Abandon every outstanding flush after a failed step:
+        cancel-or-drain all futures (their errors either already
+        propagated to the caller or belong to a step being thrown
+        away) and drop retained α-tail gradients, so the next step
+        cannot consume a stale ``pending_grad`` or trip over a failed
+        flush via the α gate. Unlike :meth:`wait_all` this never
+        raises. The completed prefix of the in-place Adam update stays
+        applied — a failed step is re-run from a checkpoint, not
+        resumed."""
+        for d in (self._late_pre, self._early_futs, self._late_futs):
+            for f in list(d.values()):
+                _cancel_or_drain(f)
+            d.clear()
+        self._hint_t.clear()
+        for l in range(len(self.masters)):
+            key = f"pending_grad:{l}"
+            if key in self.host:
+                self.host.pop(key)

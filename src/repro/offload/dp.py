@@ -384,6 +384,19 @@ class DataParallelOffloadEngine:
             out[lo:hi] = rk.p_vecs[l].read()
         return out
 
+    def save_checkpoint(self, directory: str) -> str:
+        """Crash-consistent checkpoint, ASSEMBLED format (full vectors,
+        not rank shards) — interchangeable with the single-rank
+        engine's; see :mod:`repro.offload.checkpoint`."""
+        from repro.offload.checkpoint import save_checkpoint
+        return save_checkpoint(self, directory)
+
+    def restore_checkpoint(self, directory: str) -> int:
+        """Restore from :meth:`save_checkpoint` output (any rank
+        count's), re-sharding by ``bounds``. All-or-nothing."""
+        from repro.offload.checkpoint import restore_checkpoint
+        return restore_checkpoint(self, directory)
+
     def traffic(self) -> List[Dict[str, int]]:
         """Per-rank meter snapshots (index = rank)."""
         return [rk.meter.snapshot() for rk in self.ranks]

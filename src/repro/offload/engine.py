@@ -638,6 +638,21 @@ class OffloadEngine:
         self._plan = self._compile_plan()
         return self._plan
 
+    # ------------------------------------------------------------------
+    def save_checkpoint(self, directory: str) -> str:
+        """Crash-consistent checkpoint of the full trainable state
+        (journaled manifest + CRC-verified tensors; see
+        :mod:`repro.offload.checkpoint`). Returns the manifest path."""
+        from repro.offload.checkpoint import save_checkpoint
+        return save_checkpoint(self, directory)
+
+    def restore_checkpoint(self, directory: str) -> int:
+        """Restore from :meth:`save_checkpoint` output (all-or-nothing,
+        verified before any state mutates). Returns the restored
+        ``step_num``; the continued trajectory is bitwise (f32)."""
+        from repro.offload.checkpoint import restore_checkpoint
+        return restore_checkpoint(self, directory)
+
     def traffic(self) -> Dict[str, int]:
         out = self.meter.snapshot()
         out["host:peak_nbytes"] = self.host.peak_nbytes

@@ -424,13 +424,19 @@ def execute_plan(eng, plan: Plan, tokens: np.ndarray) -> float:
     except BaseException:
         # Mid-plan failure: free the device slots and cancel in-flight
         # work so the engine can be reused or torn down cleanly instead
-        # of leaking kept boundary tensors / gated prefetches.
+        # of leaking kept boundary tensors / gated prefetches. The
+        # step is abandoned wholesale, so α gates and retained α-tail
+        # gradients go with it (clear_gates / opt_c.clear) — a stale
+        # gate or pending_grad would re-raise this step's fault (or
+        # apply its gradient) inside the NEXT step. After this unwind
+        # the engine accepts new steps / checkpoint restores cleanly;
+        # tests/test_chaos.py pins that.
         regs.clear()
         per_mb_dp = head_stash = embed_stash = {}
         gacc = p_dev = None
         for rk in ranks:
-            for fn in (rk.params_c.reset, rk.ckpt_c.clear, rk.act_c.clear,
-                       rk.opt_c.wait_all):
+            for fn in (rk.params_c.reset, rk.params_c.clear_gates,
+                       rk.ckpt_c.clear, rk.act_c.clear, rk.opt_c.clear):
                 try:
                     fn()
                 except Exception:

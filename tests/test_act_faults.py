@@ -5,19 +5,21 @@ micro-batch to the recompute path — the step completes, and because
 both policies run backward from the same residuals the results stay
 bitwise-identical to a clean run. A non-act mid-plan fault with live
 activation state must clear the whole coordinator (no leaks into the
-next step). Reuses the ``tests/test_io_faults.py`` failing backend.
+next step). Faults are aimed at the activation stream with
+:class:`repro.io.chaos.ChaosFiles`' name-targeted fuses
+(``fail_name_writes["act:"]`` etc. — chunk-level fuses cannot tell an
+act tail from a ckpt tail).
 """
-import errno
 import tempfile
 
 import jax
 import numpy as np
 import pytest
-from test_io_faults import FaultyFiles
 
 from repro.configs.base import ArchConfig
 from repro.core.perfmodel import StorageRatios
 from repro.data import SyntheticLM
+from repro.io import install_chaos
 from repro.offload import OffloadConfig, OffloadEngine
 
 CFG = ArchConfig(name="act-fault-tiny", family="dense", source="test",
@@ -26,40 +28,12 @@ CFG = ArchConfig(name="act-fault-tiny", family="dense", source="test",
 MB, S, M = 1, 16, 4
 
 
-class ActFaultyFiles(FaultyFiles):
-    """FaultyFiles plus name-targeted fuses, so a fault can be aimed at
-    the activation stream specifically (chunk-level fuses cannot tell
-    an act tail from a ckpt tail)."""
-
-    def __init__(self, engine):
-        super().__init__(engine)
-        self.fail_act_writes = 0
-        self.fail_act_reads = 0
-        self.fail_prefix = ""        # arbitrary-name write fuse
-
-    def write(self, name, data_u8, byte_lo, priority):
-        if name.startswith("act:") and self.fail_act_writes > 0:
-            self.fail_act_writes -= 1
-            raise OSError(errno.EIO, "injected act write fault")
-        if self.fail_prefix and name.startswith(self.fail_prefix):
-            self.fail_prefix = ""
-            raise OSError(errno.EIO, "injected write fault")
-        return super().write(name, data_u8, byte_lo, priority)
-
-    def readinto(self, name, out_u8, byte_lo, priority):
-        if name.startswith("act:") and self.fail_act_reads > 0:
-            self.fail_act_reads -= 1
-            raise OSError(errno.EIO, "injected act read fault")
-        return super().readinto(name, out_u8, byte_lo, priority)
-
-
 def _spill_engine(d):
     eng = OffloadEngine(CFG, OffloadConfig(
         schedule="vertical", num_microbatches=M, micro_batch=MB, seq_len=S,
         ratios=StorageRatios(0.0, 0.0, 0.0), activation_policy="spill"),
         jax.random.PRNGKey(3), d)
-    eng.ssd.files.close()
-    eng.ssd.files = ActFaultyFiles(eng.ioe)   # init writes stay intact
+    install_chaos(eng.ssd)                    # init writes stay intact
     return eng
 
 
@@ -95,7 +69,7 @@ def test_act_write_fault_degrades_to_recompute_bitwise():
     with tempfile.TemporaryDirectory() as d:
         eng = _spill_engine(d)
         data = SyntheticLM(CFG.vocab_size, seed=0)
-        eng.ssd.files.fail_act_writes = 1
+        eng.ssd.files.fail_name_writes["act:"] = 1
         losses = [eng.train_step(data.batch(M * MB, S)) for _ in range(2)]
         assert eng.act_fallbacks == 1
         assert losses == ref, "fallback changed the arithmetic"
@@ -114,7 +88,7 @@ def test_act_read_fault_degrades_to_recompute_bitwise():
         eng = _spill_engine(d)
         data = SyntheticLM(CFG.vocab_size, seed=0)
         eng.train_step(data.batch(M * MB, S))     # step 1 clean
-        eng.ssd.files.fail_act_reads = 1
+        eng.ssd.files.fail_name_reads["act:"] = 1
         losses = [ref[0], eng.train_step(data.batch(M * MB, S))]
         assert eng.act_fallbacks >= 1
         assert losses == ref
@@ -132,7 +106,7 @@ def test_act_fault_releases_staging_buffers():
     with tempfile.TemporaryDirectory() as d:
         eng = _spill_engine(d)
         data = SyntheticLM(CFG.vocab_size, seed=0)
-        eng.ssd.files.fail_act_writes = 2
+        eng.ssd.files.fail_name_writes["act:"] = 2
         eng.train_step(data.batch(M * MB, S))
         eng.finish()
         nbuf = eng.ioe.config.staging_buffers

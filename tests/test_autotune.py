@@ -263,43 +263,20 @@ def test_post_step_loop_swaps_once_then_cools_down():
 # the plan-swap seam: bitwise pin + atomicity
 # ---------------------------------------------------------------------------
 
-def _engine_state(eng):
-    """Checkpoint the full trainable state (quiesced engine)."""
-    return {
-        "p": [eng.p_vecs[l].read().copy() for l in range(eng.L)],
-        "master": [eng.m_master[l].read().copy() for l in range(eng.L)],
-        "m": [eng.m_m[l].read().copy() for l in range(eng.L)],
-        "v": [eng.m_v[l].read().copy() for l in range(eng.L)],
-        "embed": eng.embed, "unembed": eng.unembed,
-        "final_norm": eng.final_norm,
-        "head_state": jax.tree.map(lambda x: x, eng.head_state),
-        "step_num": eng.step_num,
-    }
-
-
-def _restore_state(eng, st):
-    for l in range(eng.L):
-        eng.p_vecs[l].write_full(st["p"][l])
-        eng.m_master[l].write_full(st["master"][l])
-        eng.m_m[l].write_full(st["m"][l])
-        eng.m_v[l].write_full(st["v"][l])
-    eng.embed = st["embed"]
-    eng.unembed = st["unembed"]
-    eng.final_norm = st["final_norm"]
-    eng.head_state = st["head_state"]
-    eng.step_num = st["step_num"]
-
-
 def test_wave_swap_bitwise_equals_recompile_from_checkpoint():
     """2 iters -> apply_plan_config(wave 2 -> 4) -> 2 iters must equal,
     bitwise, an engine COMPILED with the second plan from the same
     checkpointed state: the swap leaks no per-plan state (alpha gates,
-    pinned fetches, spill queues, stale plan closures)."""
+    pinned fetches, spill queues, stale plan closures). The checkpoint
+    goes through the engine's durable ``save_checkpoint`` /
+    ``restore_checkpoint`` (``repro.offload.checkpoint``) — the
+    promotion of the ad-hoc state dict this test originally grew."""
     data = SyntheticLM(CFG.vocab_size, seed=0)
     batches = [data.batch(4 * MB, S) for _ in range(4)]
     with tempfile.TemporaryDirectory() as da, \
             tempfile.TemporaryDirectory() as db, \
-            tempfile.TemporaryDirectory() as dc:
+            tempfile.TemporaryDirectory() as dc, \
+            tempfile.TemporaryDirectory() as ck:
         # the swapped engine
         a = _build("wave", 4, 0.5, 1, da, depth=1, wave=2)
         losses_a = [a.train_step(b) for b in batches[:2]]
@@ -315,13 +292,12 @@ def test_wave_swap_bitwise_equals_recompile_from_checkpoint():
         b_eng = _build("wave", 4, 0.5, 1, db, depth=1, wave=2)
         losses_b = [b_eng.train_step(b) for b in batches[:2]]
         assert losses_b == losses_a[:2]          # determinism baseline
-        b_eng.finish()       # == the seam's quiesce before the swap
-        st = _engine_state(b_eng)
+        b_eng.save_checkpoint(ck)    # finish() == the seam's quiesce
         b_eng.close()
 
         # ...restored into an engine BORN with the second plan
         c = _build("wave", 4, 0.5, 1, dc, depth=1, wave=4)
-        _restore_state(c, st)
+        assert c.restore_checkpoint(ck) == b_eng.step_num
         losses_c = [c.train_step(b) for b in batches[2:]]
         c.finish()
         params_c = [c.p_vecs[l].read().copy() for l in range(c.L)]

@@ -3,6 +3,13 @@ must propagate errors to `IORequest.result()`, release the in-flight
 byte budget (no backpressure leak), leave worker/channel threads alive,
 and honour the `IORequest.cancel` contract for queued vs in-flight
 requests — all without deadlocking (every wait below is bounded).
+
+The injector is the library's own :class:`repro.io.chaos.ChaosFiles`
+(this battery grew it locally as ``FaultyFiles``/``DeadPathFiles``
+before its promotion). Everything here uses the DETERMINISTIC knobs —
+countdown fuses raising permanent EIO (so one fault propagates on the
+first attempt, retries notwithstanding) and scripted path death; the
+probabilistic chaos and integrity pins live in ``tests/test_chaos.py``.
 """
 import errno
 import os
@@ -13,81 +20,18 @@ from concurrent.futures import CancelledError
 import numpy as np
 import pytest
 
-from repro.io import IOConfig, IOEngine, IOPriority, StripedFiles
+from repro.io import IOConfig, IOEngine, IOPriority, install_chaos
 from repro.io.engine import PATH_FAIL_DRAIN_THRESHOLD
 from repro.offload.stores import SSDStore, TrafficMeter
 
 T = 5.0  # every blocking call in this file is bounded by this
 
 
-class FaultyFiles(StripedFiles):
-    """StripedFiles whose raw chunk ops fail on demand.
-
-    ``fail_writes`` / ``fail_reads`` are countdown fuses: each faulting
-    op decrements its fuse and raises until it reaches zero.
-    ``short_reads`` instead makes reads return half the requested bytes
-    (exercises the short-read detection path).
-    """
-
-    def __init__(self, engine):
-        super().__init__(engine)
-        self.fail_writes = 0
-        self.fail_reads = 0
-        self.short_reads = 0
-        self.ops = 0
-
-    def _pwrite(self, fd, mv, off):
-        self.ops += 1
-        if self.fail_writes > 0:
-            self.fail_writes -= 1
-            raise OSError(errno.EIO, "injected write fault")
-        super()._pwrite(fd, mv, off)
-
-    def _pread(self, fd, mv, off):
-        self.ops += 1
-        if self.fail_reads > 0:
-            self.fail_reads -= 1
-            raise OSError(errno.EIO, "injected read fault")
-        if self.short_reads > 0:
-            self.short_reads -= 1
-            return max(0, super()._pread(fd, mv, off) // 2)
-        return super()._pread(fd, mv, off)
-
-
-class DeadPathFiles(FaultyFiles):
-    """FaultyFiles modelling one persistently dead DEVICE: every chunk
-    op landing on ``dead_path`` fails, ops on other paths run clean."""
-
-    def __init__(self, engine):
-        super().__init__(engine)
-        self.dead_path = None
-
-    def _fd_path(self, fd):
-        with self._fd_lock:
-            for (_, p), f in self._fds.items():
-                if f == fd:
-                    return p
-        return None
-
-    def _pwrite(self, fd, mv, off):
-        if self.dead_path is not None \
-                and self._fd_path(fd) == self.dead_path:
-            raise OSError(errno.EIO, "injected dead-path write fault")
-        super()._pwrite(fd, mv, off)
-
-    def _pread(self, fd, mv, off):
-        if self.dead_path is not None \
-                and self._fd_path(fd) == self.dead_path:
-            raise OSError(errno.EIO, "injected dead-path read fault")
-        return super()._pread(fd, mv, off)
-
-
 def _faulty_store(root, **cfg_kw):
     cfg_kw.setdefault("chunk_bytes", 1 << 10)
     eng = IOEngine(IOConfig(paths=[os.path.join(root, "nvme0")], **cfg_kw))
     ssd = SSDStore(eng.paths[0], TrafficMeter(), engine=eng)
-    ssd.files.close()
-    ssd.files = FaultyFiles(eng)          # swap in the faulting backend
+    install_chaos(ssd)                    # swap in the faulting backend
     return eng, ssd
 
 
@@ -97,8 +41,7 @@ def _dead_path_store(root, n_paths=2, **cfg_kw):
     paths = [os.path.join(root, f"nvme{i}") for i in range(n_paths)]
     eng = IOEngine(IOConfig(paths=paths, **cfg_kw))
     ssd = SSDStore(paths[0], TrafficMeter(), engine=eng)
-    ssd.files.close()
-    ssd.files = DeadPathFiles(eng)
+    install_chaos(ssd)
     return eng, ssd
 
 

@@ -193,13 +193,12 @@ def test_wave_interpolates_measured_traffic():
 # ---------------------------------------------------------------------------
 
 def _faulty_engine(d, M=4):
-    from test_io_faults import FaultyFiles
+    from repro.io import install_chaos
 
     eng = OffloadEngine(CFG, OffloadConfig(
         schedule="vertical", num_microbatches=M, micro_batch=MB, seq_len=S,
         ratios=StorageRatios(0.0, 0.0, 0.0)), jax.random.PRNGKey(3), d)
-    eng.ssd.files.close()
-    eng.ssd.files = FaultyFiles(eng.ioe)     # init writes stay intact
+    install_chaos(eng.ssd)                   # init writes stay intact
     return eng
 
 
